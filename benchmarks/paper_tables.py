@@ -1,0 +1,213 @@
+"""Reproductions of the paper's Tables 1-5 and Fig. 2 on offline-feasible
+workloads (synthetic data, CPU) — one function per table.
+
+The paper's datasets (ImageNet/KITTI) are not available offline; per
+DESIGN.md §7 we report the paper's own optimization objective
+(reconstruction error / FP-vs-quant prediction agreement) on (a) the
+paper-faithful ResNet path and (b) a small LM from the assigned-arch
+families.  Relative orderings between methods are the reproduction target.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.resnet_paper import CONFIG as RESNET_CFG, ResNetConfig
+from repro.core import hwcost
+from repro.core.baselines import codebook_quant, scale_quant
+from repro.core.dataflow import count_quant_ops
+from repro.core.qmodel import QuantContext, QuantMode
+from repro.core.qscheme import fake_quant, search_window
+from repro.data import SyntheticLMStream
+from repro.models import model as M
+from repro.models import resnet as R
+
+
+def _resnet_setup(cfg=None, seed=0, n=32):
+    cfg = cfg or ResNetConfig(stages=(8, 16), blocks_per_stage=2, img_size=24)
+    params = R.init_resnet(cfg, jax.random.PRNGKey(seed))
+    x = jnp.asarray(np.random.default_rng(seed).uniform(
+        0, 1, size=(n, cfg.img_size, cfg.img_size, 3)), jnp.float32)
+    return cfg, params, x
+
+
+def _lm_setup(arch="llama3_2_1b", seed=0):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    stream = SyntheticLMStream(cfg.vocab_size, 64, 8, seed=seed)
+    batch = {k: jnp.asarray(v) for k, v in stream.batch(0).items()}
+    return cfg, params, batch
+
+
+def _agreement(a, b):
+    return float(np.mean(np.argmax(np.asarray(a, np.float32), -1) ==
+                         np.argmax(np.asarray(b, np.float32), -1)))
+
+
+def _quantize_weights(params, fn):
+    return jax.tree.map(
+        lambda p: fn(p) if p.ndim >= 2 else p, params)
+
+
+# ---------------------------------------------------------------------------
+
+def table1_accuracy() -> list[str]:
+    """FP vs 8-bit quantized network, ours (bit-shift) vs scaling factor.
+
+    Paper Table 1: ~1.8% top-1 drop for ours, comparable to scaling-factor
+    methods.  Metric here: prediction agreement with the FP model (higher
+    is better) + relative output error.
+    """
+    rows = []
+    cfg, params, x = _resnet_setup()
+    t0 = time.perf_counter()
+    logits_fp = R.resnet_forward(params, x, cfg)
+    q = R.quantize_resnet(params, x, cfg)
+    logits_ours = R.resnet_int_forward(q, x, cfg)
+    agree_ours = _agreement(logits_fp, logits_ours)
+    rel = float(jnp.linalg.norm(logits_ours - logits_fp) /
+                jnp.linalg.norm(logits_fp))
+    rows.append(f"table1.resnet.ours_bitshift,"
+                f"{1e6*(time.perf_counter()-t0):.0f},"
+                f"agree={agree_ours:.3f};rel_err={rel:.4f}")
+
+    # LM: ours (Algorithm-1-calibrated bit-shift W8A8) vs scaling-factor
+    # W8A8 (IOA/TensorRT-style) — paper Table 1's comparison, like for like
+    import dataclasses
+    from repro.core.lm_calibrate import calibrate_lm
+    cfg, params, batch = _lm_setup()
+    lf, _ = M.forward(params, batch, cfg, QuantContext(mode=QuantMode.FP))
+    t0 = time.perf_counter()
+    ctx_cal, _ = calibrate_lm(lambda p, b, c: M.forward(p, b, cfg, c),
+                              params, batch)
+    calib_us = 1e6 * (time.perf_counter() - t0)
+    lq, _ = M.forward(params, batch, cfg, ctx_cal)
+    rows.append(f"table1.lm.ours_bitshift_calibrated,{calib_us:.0f},"
+                f"agree={_agreement(lf, lq):.3f}")
+    li, _ = M.forward(params, batch, cfg,
+                      dataclasses.replace(ctx_cal, mode=QuantMode.INT))
+    rows.append(f"table1.lm.ours_integer_deploy,0,"
+                f"agree={_agreement(lf, li):.3f}")
+    ls, _ = M.forward(params, batch, cfg, QuantContext(mode=QuantMode.FAKE_SF))
+    rows.append(f"table1.lm.scaling_factor_w8a8,0,"
+                f"agree={_agreement(lf, ls):.3f}")
+    return rows
+
+
+def table2_calibration_time() -> list[str]:
+    """Joint-quantization wall time scales ~linearly with depth (minutes,
+    not fine-tuning days — paper Table 2)."""
+    rows = []
+    for depth in (1, 2, 3):
+        cfg, params, x = _resnet_setup(
+            ResNetConfig(stages=(8, 16), blocks_per_stage=depth, img_size=24))
+        t0 = time.perf_counter()
+        q = R.quantize_resnet(params, x, cfg)
+        dt = time.perf_counter() - t0
+        rows.append(f"table2.calib_time.depth{depth},"
+                    f"{1e6*dt:.0f},modules={len(q.report.results)};"
+                    f"seconds={dt:.2f}")
+    return rows
+
+
+def table3_bitwidths() -> list[str]:
+    """Method comparison at matched bit widths (paper Table 3): bit-shift
+    (ours, W8A8) vs scaling factor (W8) vs codebook (W4)."""
+    rows = []
+    cfg, params, batch = _lm_setup()
+    lf, _ = M.forward(params, batch, cfg, QuantContext(mode=QuantMode.FP))
+
+    def w_only(fn, label):
+        p2 = _quantize_weights(params, fn)
+        lq, _ = M.forward(p2, batch, cfg, QuantContext(mode=QuantMode.FP))
+        rows.append(f"table3.{label},0,agree={_agreement(lf, lq):.3f}")
+
+    def best_po2(p, bits=8):
+        lo, hi = search_window(p, 3)
+        cands = [(8 - 1) - i for i in range(lo, hi + 1)]
+        errs = [float(jnp.linalg.norm(fake_quant(p, n, bits) - p))
+                for n in cands]
+        return fake_quant(p, cands[int(np.argmin(errs))], bits)
+
+    w_only(best_po2, "bitshift_w8")
+    w_only(lambda p: scale_quant(p, 8), "scaling_factor_w8")
+    w_only(lambda p: codebook_quant(p, 4), "codebook_w4")
+    from repro.core.lm_calibrate import calibrate_lm
+    ctx_cal, _ = calibrate_lm(lambda p, b, c: M.forward(p, b, cfg, c),
+                              params, batch)
+    lq, _ = M.forward(params, batch, cfg, ctx_cal)
+    rows.append(f"table3.bitshift_w8a8_joint,0,agree={_agreement(lf, lq):.3f}")
+    return rows
+
+
+def table4_bitwidth_quality() -> list[str]:
+    """Quality vs bit width (paper Table 4: 8-bit ~ FP, 7-bit close,
+    6-bit collapses)."""
+    rows = []
+    cfg, params, x = _resnet_setup()
+    logits_fp = R.resnet_forward(params, x, cfg)
+    for bits in (8, 7, 6):
+        q = R.quantize_resnet(params, x, cfg, n_bits=bits)
+        lq = R.resnet_int_forward(q, x, cfg)
+        rows.append(f"table4.resnet.{bits}bit,0,"
+                    f"agree={_agreement(logits_fp, lq):.3f}")
+    return rows
+
+
+def table5_hwcost() -> list[str]:
+    """Hardware cost of the requant op kinds x the quant-op counts of the
+    dataflow plan (paper Table 5 + the ~15x/~9x abstract claims)."""
+    rows = []
+    for kind in ("bit_shifting", "scaling_factor", "codebook"):
+        c = hwcost.TABLE5[kind]
+        rows.append(f"table5.unit.{kind},0,power_mw={c.power_mw};"
+                    f"area_um2={c.area_um2};energy_pj={c.energy_pj:.1f}")
+    ratio_p = hwcost.TABLE5["codebook"].power_mw / \
+        hwcost.TABLE5["bit_shifting"].power_mw
+    ratio_a = hwcost.TABLE5["codebook"].area_um2 / \
+        hwcost.TABLE5["bit_shifting"].area_um2
+    rows.append(f"table5.claims,0,codebook_vs_shift_power={ratio_p:.1f}x;"
+                f"area={ratio_a:.1f}x")
+
+    # quant-op counts: naive vs joint placement on the resnet plan
+    plan = R.build_resnet_plan(RESNET_CFG)
+    counts = count_quant_ops(plan)
+    # per-activation-tensor requant energy at ImageNet-ish activation sizes
+    act_elems = 56 * 56 * 64
+    for kind in ("bit_shifting", "scaling_factor", "codebook"):
+        naive = hwcost.estimate(kind, counts["naive_activation_points"]
+                                * act_elems)
+        joint = hwcost.estimate(kind, counts["joint_activation_points"]
+                                * act_elems)
+        rows.append(f"table5.energy.{kind},0,"
+                    f"naive_uj={naive.energy_uj:.1f};"
+                    f"joint_uj={joint.energy_uj:.1f};"
+                    f"saved={100*(1-joint.energy_uj/naive.energy_uj):.0f}%")
+    return rows
+
+
+def fig2_stats() -> list[str]:
+    """Fig. 2: per-module MSE along depth + the shift-value histogram."""
+    cfg, params, x = _resnet_setup()
+    q = R.quantize_resnet(params, x, cfg)
+    rows = []
+    adds = [(k, r) for k, r in q.report.results.items() if k.endswith("add")]
+    convs = [(k, r) for k, r in q.report.results.items() if "conv" in k]
+    rows.append("fig2a.add_rel_err,0," + ";".join(
+        f"{k}={r.rel_error:.4f}" for k, r in adds))
+    rows.append("fig2a.conv_rel_err,0," + ";".join(
+        f"{k}={r.rel_error:.4f}" for k, r in convs[:6]))
+    hist = q.report.shift_histogram()
+    rows.append("fig2b.shift_histogram,0," + ";".join(
+        f"n{k}={v}" for k, v in hist.items()))
+    # paper: adds have larger MSE than the convs feeding them
+    mean_add = np.mean([r.rel_error for _, r in adds])
+    mean_conv = np.mean([r.rel_error for _, r in convs])
+    rows.append(f"fig2a.claim_add_gt_conv,0,"
+                f"add={mean_add:.4f};conv={mean_conv:.4f};"
+                f"holds={bool(mean_add > mean_conv)}")
+    return rows

@@ -1,0 +1,134 @@
+"""Exact roofline terms per (arch x shape) via the depth-fit methodology.
+
+For each cell: lower 2-3 reduced-depth full-width variants with EVERY scan
+unrolled (``scan_lib.analysis_unroll``) so XLA's cost analysis counts all
+work, then combine with the affine depth weights from
+``configs.depth_variants`` to reconstruct the full-depth per-device cost.
+Gradient accumulation multiplies the fitted per-micro cost by accum_steps
+(the optimizer/update tail is counted once — measured from the accum=1
+variant directly, since fits run at accum=1).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--arch A --shape S]
+        [--mode fp|int] [--multi-pod] [--json rooflines.json]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+from repro.configs import (ARCH_IDS, depth_variants, get_config,  # noqa: E402
+                           supported_shapes)
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.launch import analysis as A  # noqa: E402
+from repro.launch import dryrun as D  # noqa: E402
+from repro.launch import steps as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.scan_lib import analysis_unroll  # noqa: E402
+
+
+def fitted_sample(arch: str, shape_name: str, mesh, mode: str = "fp",
+                  fsdp: bool | None = None) -> tuple[A.CostSample, dict]:
+    cfg = get_config(arch)
+    shape0 = SHAPES[shape_name]
+    # the fsdp policy must follow the FULL config, not the reduced variants
+    if fsdp is None:
+        fsdp = True if shape0.kind == "train" else S.serve_needs_fsdp(
+            cfg, mesh, bytes_per_param=1 if mode == "int" else 2)
+    variants, weights = depth_variants(cfg)
+    total = None
+    meta = {"variants": [], "fsdp": fsdp}
+    for vcfg, w in zip(variants, weights):
+        t0 = time.time()
+        with analysis_unroll():
+            _, compiled, _ = D.lower_cell(
+                arch, shape_name, mesh, mode=mode, cfg=vcfg, accum_steps=1,
+                fsdp=fsdp)
+        s = A.sample_of(compiled)
+        meta["variants"].append({
+            "n_layers": vcfg.n_layers, "weight": w,
+            "flops": s.flops, "compile_s": round(time.time() - t0, 1)})
+        total = s.scaled(w) if total is None else total + s.scaled(w)
+    shape = SHAPES[shape_name]
+    # fits run at accum=1; a production accum>1 step repeats the same math
+    meta["accum_steps"] = S.default_accum_steps(cfg, shape, mesh) \
+        if shape.kind == "train" else 1
+    return total, meta
+
+
+def analyze_cell(arch: str, shape_name: str, mesh, mode: str = "fp") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    sample, meta = fitted_sample(arch, shape_name, mesh, mode)
+    terms = A.roofline_terms(sample)
+    mf = D.model_flops(cfg, shape)
+    n_dev = mesh.devices.size
+    t_bound = max(terms["t_compute_s"], terms["t_memory_s"],
+                  terms["t_collective_s"])
+    ideal = mf / (n_dev * A.PEAK_FLOPS)
+    return {
+        "arch": arch, "shape": shape_name, "mode": mode, "devices": n_dev,
+        "hlo_flops_per_device": sample.flops,
+        "hlo_bytes_per_device": sample.bytes_hbm,
+        "collectives_per_device": sample.collectives,
+        **terms,
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / (sample.flops * n_dev),
+        # fraction of roofline: ideal model-flops time / achieved bound
+        "roofline_fraction": ideal / t_bound if t_bound else 0.0,
+        "fit": meta,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mode", default="fp", choices=["fp", "fake", "int"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cells = []
+    if args.arch:
+        cells = [(args.arch, args.shape)]
+    else:
+        for arch in ARCH_IDS:
+            if arch == "resnet_paper":
+                continue
+            for shp in supported_shapes(get_config(arch)):
+                cells.append((arch, shp))
+
+    records, failures = [], []
+    hdr = (f"{'arch':>22} {'shape':>12} {'compute':>9} {'memory':>9} "
+           f"{'collect':>9} {'dominant':>10} {'useful':>7} {'roofl%':>7}")
+    print(hdr)
+    for arch, shp in cells:
+        try:
+            r = analyze_cell(arch, shp, mesh, args.mode)
+            records.append(r)
+            print(f"{arch:>22} {shp:>12} "
+                  f"{r['t_compute_s']*1e3:8.2f}ms {r['t_memory_s']*1e3:8.2f}ms "
+                  f"{r['t_collective_s']*1e3:8.2f}ms {r['dominant']:>10} "
+                  f"{r['useful_flops_ratio']:7.3f} "
+                  f"{100*r['roofline_fraction']:6.1f}%")
+            sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failures.append({"arch": arch, "shape": shp, "error": repr(e)})
+            print(f"{arch:>22} {shp:>12}  FAILED: {e!r}", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"records": records, "failures": failures}, f,
+                      indent=1, default=str)
+    print(f"\n{len(records)} cells analyzed, {len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,34 @@
+"""Benchmark driver: one function per paper table (+ Fig. 2).
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline/dry-run benches
+need the 512-device env and run as separate modules:
+
+    PYTHONPATH=src python -m benchmarks.roofline   --json rooflines.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import paper_tables as T
+
+    print("name,us_per_call,derived")
+    ok = True
+    for fn in (T.table1_accuracy, T.table2_calibration_time,
+               T.table3_bitwidths, T.table4_bitwidth_quality,
+               T.table5_hwcost, T.fig2_stats):
+        try:
+            for row in fn():
+                print(row)
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            ok = False
+            print(f"{fn.__name__},0,ERROR={e!r}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

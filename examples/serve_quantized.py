@@ -1,0 +1,35 @@
+"""Batched int8 serving across architecture families.
+
+    PYTHONPATH=src python examples/serve_quantized.py [--arch qwen3_1_7b]
+
+Calibrates with Algorithm 1 on one batch, converts to the integer deploy
+path, then serves batched requests (prefill + greedy decode), comparing
+tokens against the FP path.
+"""
+import argparse
+
+import numpy as np
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_1_7b")
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    fp = serve(args.arch, mode="fp", calibrate=False, gen=args.gen)
+    q = serve(args.arch, mode="int", calibrate=True, gen=args.gen)
+    agree = float(np.mean(fp["tokens"] == q["tokens"]))
+    print(f"\n[{args.arch}] int8 vs FP greedy tokens: {agree:.2%} agreement")
+    print(f"fp  sample: {fp['tokens'][0]}")
+    print(f"int sample: {q['tokens'][0]}")
+    print(f"decode: fp {1e3*fp['decode_s_per_tok']:.1f} ms/tok | "
+          f"int {1e3*q['decode_s_per_tok']:.1f} ms/tok "
+          f"(CPU interpret-mode kernels; int8 wins on TPU via 2x MXU "
+          f"throughput + 4x smaller weight reads)")
+
+
+if __name__ == "__main__":
+    main()

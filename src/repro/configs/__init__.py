@@ -1,0 +1,73 @@
+"""Config registry: ``get_config(arch_id)`` and smoke-scale variants."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ModelConfig, MoEConfig, MLAConfig, SSMConfig,
+                                EncDecConfig, HybridConfig, ShapeConfig,
+                                SHAPES)
+
+ARCH_IDS = [
+    "qwen3_1_7b", "deepseek_67b", "qwen3_32b", "llama3_2_1b",
+    "deepseek_v3_671b", "granite_moe_3b_a800m", "whisper_large_v3",
+    "rwkv6_3b", "chameleon_34b", "zamba2_2_7b", "resnet_paper",
+]
+
+# canonical CLI ids (dashes) -> module names
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = _ALIAS.get(arch, arch).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod_name = _ALIAS.get(arch, arch).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE_CONFIG
+
+
+def supported_shapes(cfg: ModelConfig) -> list[str]:
+    """Which assigned shape cells apply to this arch (DESIGN §4)."""
+    names = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    if not cfg.sub_quadratic:
+        names.remove("long_500k")  # quadratic attention at 524k: skipped
+    return names
+
+
+def depth_variants(cfg: ModelConfig) -> tuple[list[ModelConfig], list[float]]:
+    """Reduced-depth variants + extrapolation weights for the roofline fit.
+
+    Cost is affine in each stack's depth, so lowering 2-3 shallow variants
+    (full width, scans unrolled) and combining with these weights
+    reconstructs the full-depth cost exactly:  cost(true) = sum_i w_i c_i.
+    """
+    import dataclasses
+
+    if cfg.family == "audio":
+        e, dec = cfg.encdec.n_encoder_layers, cfg.n_layers
+        mk = lambda ne, nd: dataclasses.replace(
+            cfg, n_layers=nd,
+            encdec=dataclasses.replace(cfg.encdec, n_encoder_layers=ne))
+        return ([mk(2, 2), mk(2, 4), mk(4, 2)],
+                [1.0 - (dec - 2) / 2 - (e - 2) / 2,
+                 (dec - 2) / 2, (e - 2) / 2])
+    if cfg.family == "moe" and cfg.moe.n_dense_layers:
+        nd, nm = cfg.moe.n_dense_layers, cfg.n_layers - cfg.moe.n_dense_layers
+        mk = lambda d_, m_: dataclasses.replace(
+            cfg, n_layers=d_ + m_,
+            moe=dataclasses.replace(cfg.moe, n_dense_layers=d_))
+        return ([mk(1, 2), mk(1, 4), mk(2, 2)],
+                [1.0 - (nm - 2) / 2 - (nd - 1),
+                 (nm - 2) / 2, float(nd - 1)])
+    if cfg.family == "hybrid":
+        g = cfg.hybrid.attn_every
+        n_groups = cfg.n_layers // g
+        mk = lambda ng: dataclasses.replace(cfg, n_layers=ng * g)
+        return [mk(1), mk(2)], [1.0 - (n_groups - 1), float(n_groups - 1)]
+    # dense / vlm / ssm / moe-without-dense-prefix: single stack
+    L = cfg.n_layers
+    mk = lambda n: dataclasses.replace(cfg, n_layers=n)
+    return [mk(2), mk(4)], [1.0 - (L - 2) / 2, (L - 2) / 2]

@@ -1,0 +1,138 @@
+"""Architecture configuration schema.
+
+One frozen dataclass describes every assigned architecture; family-specific
+sub-configs (MoE / MLA / SSM / enc-dec / hybrid) are optional fields.  All
+configs are static and hashable so they can be jit static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["MoEConfig", "MLAConfig", "SSMConfig", "EncDecConfig",
+           "HybridConfig", "ModelConfig", "ShapeConfig", "SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                  # per-expert FFN hidden size
+    n_shared: int = 0              # always-on shared experts (DeepSeek-V3)
+    n_dense_layers: int = 0        # leading layers that stay dense
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"  # router math stays high precision
+    # pad the expert STACKS (not the router) to a multiple of the TP axis so
+    # expert-parallel sharding stays valid when n_experts doesn't divide it
+    # (§Perf iteration G1: granite's 40 experts on a 16-wide model axis);
+    # dummy experts receive no tokens.
+    n_experts_padded: Optional[int] = None
+
+    @property
+    def e_padded(self) -> int:
+        return self.n_experts_padded or self.n_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek Multi-head Latent Attention dims (arXiv:2412.19437)."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / RWKV6 recurrence dims."""
+
+    kind: str = "mamba2"           # 'mamba2' | 'rwkv6'
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256               # SSD / chunked-linear-attention chunk len
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    n_encoder_layers: int
+    encoder_seq: int = 1500        # whisper: 30 s of audio at 50 Hz post-conv
+    frontend: str = "stub"         # modality frontend is a stub per assignment
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style: shared attention block every ``attn_every`` SSM blocks."""
+
+    attn_every: int = 6
+    n_shared_blocks: int = 1
+    concat_embedding: bool = True  # shared block sees concat(h, h_embed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | audio | ssm | vlm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    act: str = "silu"              # silu (SwiGLU) | gelu | relu_sq (rwkv)
+    tie_embeddings: bool = False
+    attn_bias: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    dtype: str = "bfloat16"
+    # which shapes this arch supports (long_500k only for sub-quadratic)
+    sub_quadratic: bool = False
+    # int8 KV cache (beyond-paper: Eq. 1 applied to the cache — halves HBM
+    # cache reads at decode).  Fractional bits are static per config: post-
+    # rope/qk-norm K and V are O(1)-ranged, n=4 keeps |x|<8 representable.
+    kv_cache_bits: Optional[int] = None
+    kv_cache_frac_bits: int = 4
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/head tables padded to 128 (MXU lanes + any TP axis
+        <= 128).  Odd vocabs (granite 49155, whisper 51866) otherwise force
+        replicated logits + a full logits-gradient all-reduce (12.9 GB/dev
+        measured on granite train_4k — §Perf iteration G2).  Padded ids are
+        never produced by the tokenizer stub; they act as dead classes."""
+        return -(-self.vocab_size // 128) * 128
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """Reduced-config variant for CPU smoke tests."""
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

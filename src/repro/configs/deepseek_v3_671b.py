@@ -1,0 +1,30 @@
+"""deepseek-v3-671b [moe] — 61L d_model=7168 128H d_ff=2048(expert)
+vocab=129280, MLA, 1 shared + 256 routed top-8. [arXiv:2412.19437; hf]
+
+Notes: MLA makes n_kv_heads nominal (the cache is the 512-d latent);
+first 3 layers are dense FFN (d_ff=18432 in the paper — expert-sized FFNs
+with 1 shared expert approximate the dense layers here via n_dense_layers
+using the dense MLP at moe.d_expert*9=18432).  MTP head omitted (training
+objective detail, not serving-path structure) — DESIGN §7.
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+    d_ff=18432,  # dense-layer FFN width (first 3 layers)
+    vocab_size=129280, head_dim=128, rope_theta=1e4,
+    moe=MoEConfig(n_experts=256, top_k=8, d_expert=2048, n_shared=1,
+                  n_dense_layers=3, capacity_factor=1.25),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_head_dim=128,
+                  qk_rope_head_dim=64, v_head_dim=128),
+)
+
+SMOKE_CONFIG = CONFIG.scaled(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=192,
+    vocab_size=256, head_dim=16,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=48, n_shared=1,
+                  n_dense_layers=1, capacity_factor=1.25),
+    mla=MLAConfig(q_lora_rank=48, kv_lora_rank=32, qk_nope_head_dim=16,
+                  qk_rope_head_dim=8, v_head_dim=16),
+)

@@ -1,0 +1,14 @@
+"""Core contribution of the paper: dataflow-based joint quantization.
+
+  qscheme     — Eq. 1 power-of-two quantization (+ STE variant)
+  integer_ops — Eq. 2-4 integer-only linear/conv/residual ops
+  dataflow    — Fig. 1 unified-module construction over a layer graph
+  calibrate   — Algorithm 1 grid-search calibration (no fine-tuning)
+  qmodel      — execution modes (fp / fake / int) + weight conversion
+  hwcost      — Table 5 analytical hardware-cost model
+"""
+from repro.core.qscheme import (QuantParams, fake_quant, fake_quant_ste,
+                                quant, dequant, shift_requant)  # noqa: F401
+from repro.core.dataflow import (OpKind, OpNode, UnifiedModule, QuantPlan,
+                                 build_plan, QuantizedTensor)  # noqa: F401
+from repro.core.qmodel import QuantMode, QuantContext, ModuleBits, qlinear  # noqa: F401

@@ -1,0 +1,48 @@
+"""Competing quantization mechanisms the paper compares against.
+
+* ``scale_quant``  — arbitrary-float per-tensor scale (TensorRT / IOA
+  style): int8 codes + one fp32 multiplier per tensor.  Better range fit
+  than power-of-two, but the requant unit needs a 32-bit multiplier
+  (Table 5: ~2x the bit-shifter's power/area).
+* ``codebook_quant`` — k-means codebook (Deep Compression style): 4-bit
+  indices into a 16-entry fp table.  Best compression, but the
+  encode/decode unit costs ~15x power (Table 5).
+
+Both are implemented faithfully enough to reproduce the accuracy columns of
+Tables 1/3; hwcost.py carries their measured hardware constants.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["scale_quant", "codebook_quant"]
+
+
+def scale_quant(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Symmetric per-tensor float-scale fake quantization."""
+    hi = 2.0 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / hi
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -hi - 1, hi)
+    return (q * scale).astype(x.dtype)
+
+
+def codebook_quant(x: jax.Array, bits: int = 4, iters: int = 10,
+                   seed: int = 0) -> jax.Array:
+    """k-means codebook fake quantization (2^bits entries, Lloyd's)."""
+    flat = np.asarray(x, np.float32).ravel()
+    k = 1 << bits
+    rng = np.random.default_rng(seed)
+    # init centroids at quantiles (stable for heavy-tailed weights)
+    centroids = np.quantile(flat, np.linspace(0.01, 0.99, k))
+    for _ in range(iters):
+        idx = np.argmin(np.abs(flat[:, None] - centroids[None, :]), axis=1)
+        for j in range(k):
+            sel = flat[idx == j]
+            if sel.size:
+                centroids[j] = sel.mean()
+    idx = np.argmin(np.abs(flat[:, None] - centroids[None, :]), axis=1)
+    out = centroids[idx].reshape(np.asarray(x).shape)
+    return jnp.asarray(out, dtype=x.dtype)

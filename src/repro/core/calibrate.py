@@ -1,0 +1,191 @@
+"""Algorithm 1 — grid-search calibration of fractional bits, no fine-tuning.
+
+For each unified module, search (N_w, N_b, N_o) in the narrowed windows
+``[N^max - tau, N^max]`` (Eq. 6) minimizing the joint reconstruction error
+``|| O - Q(f(X^q, W^q, B^q), N_o) ||_2`` (Eq. 5), where X^q is the *already
+quantized* input from the upstream module (its N_o becomes our N_x) — this
+sequential threading is what makes the quantization "joint" along the
+dataflow.
+
+Cost note (paper §1.2.2): the module output f(X^q, W^q, B^q) depends only on
+(N_w, N_b), so we evaluate the op once per (i, j) grid cell and sweep all
+N_o candidates on that single output with a vmapped requantization —
+O(tau^2 Γ + tau^3) instead of the paper's O(tau^3 Γ).  Recorded as a
+beyond-paper (algorithmic, exact) speedup in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qscheme import fake_quant, search_window
+
+__all__ = [
+    "CalibResult",
+    "calibrate_linear_module",
+    "calibrate_add_module",
+    "calibrate_output_point",
+    "CalibrationReport",
+]
+
+
+@dataclasses.dataclass
+class CalibResult:
+    """Optimal fractional bits for one unified module + its error curve."""
+
+    n_w: Optional[int]
+    n_b: Optional[int]
+    n_o: int
+    error: float            # the winning ||O - O^q||_2
+    fp_norm: float          # ||O||_2, for relative-error reporting
+    elapsed_s: float = 0.0
+
+    @property
+    def rel_error(self) -> float:
+        return self.error / max(self.fp_norm, 1e-12)
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    """Per-module results in dataflow order (benchmarks/Fig. 2 read this)."""
+
+    results: dict[str, CalibResult] = dataclasses.field(default_factory=dict)
+    total_s: float = 0.0
+
+    def add(self, name: str, r: CalibResult) -> None:
+        self.results[name] = r
+        self.total_s += r.elapsed_s
+
+    def shift_histogram(self) -> dict[int, int]:
+        """Paper Fig. 2(b): distribution of chosen fractional bits."""
+        hist: dict[int, int] = {}
+        for r in self.results.values():
+            for v in (r.n_w, r.n_o):
+                if v is not None:
+                    hist[v] = hist.get(v, 0) + 1
+        return dict(sorted(hist.items()))
+
+
+def _l2(a: jax.Array, b: jax.Array) -> jax.Array:
+    d = (a.astype(jnp.float32) - b.astype(jnp.float32)).ravel()
+    return jnp.sqrt(jnp.sum(d * d))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "unsigned"))
+def _sweep_n_o(o_pre: jax.Array, o_ref: jax.Array, n_o_cands: jax.Array,
+               bits: int, unsigned: bool) -> jax.Array:
+    """Errors of requantizing one pre-activation output at each N_o."""
+
+    def err(n_o):
+        return _l2(o_ref, fake_quant(o_pre, n_o, bits, unsigned))
+
+    return jax.vmap(err)(n_o_cands)
+
+
+def calibrate_linear_module(
+    x_q: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array],
+    o_ref: jax.Array,
+    apply_fn: Callable[[jax.Array, jax.Array, Optional[jax.Array]], jax.Array],
+    *,
+    bits: int = 8,
+    tau: int = 4,
+    out_unsigned: bool = False,
+) -> CalibResult:
+    """Algorithm 1 for a weight-bearing module (cases a/b and conv variants).
+
+    Args:
+      x_q: the module input, already fake-quantized on the upstream grid
+        (N_x is implicit in the values — the paper threads it the same way).
+      w, b: full-precision weights / bias (b may be None).
+      o_ref: full-precision module output on x's *unquantized* ancestor —
+        the reconstruction target O of Eq. 5.
+      apply_fn: (x, w_q, b_q) -> float pre-quantization output; encapsulates
+        the op (matmul/conv) and any fused nonlinearity (Fig. 1b).
+    """
+    t0 = time.perf_counter()
+    # Algorithm 1 lines 3-7: windows in "integer bits", converted to
+    # fractional bits via N = (bits - 1) - i.
+    iw_lo, iw_hi = search_window(w, tau)
+    cand_w = [(bits - 1) - i for i in range(iw_lo, iw_hi + 1)]
+    if b is not None:
+        ib_lo, ib_hi = search_window(b, tau)
+        cand_b = [(bits - 1) - i for i in range(ib_lo, ib_hi + 1)]
+    else:
+        cand_b = [None]
+    io_lo, io_hi = search_window(o_ref, tau)
+    cand_o = jnp.asarray([(bits - 1) - k for k in range(io_lo, io_hi + 1)],
+                         jnp.float32)
+
+    fp_norm = float(jnp.linalg.norm(o_ref.astype(jnp.float32).ravel()))
+    best = (None, None, int(cand_o[0]), np.inf)
+
+    apply_jit = jax.jit(apply_fn)
+    for n_w in cand_w:
+        w_q = fake_quant(w, n_w, bits)
+        for n_b in cand_b:
+            b_q = None if n_b is None else fake_quant(b, n_b, bits)
+            o_pre = apply_jit(x_q, w_q, b_q)
+            errs = np.asarray(_sweep_n_o(o_pre, o_ref, cand_o, bits,
+                                         out_unsigned))
+            k = int(np.argmin(errs))
+            if errs[k] < best[3]:
+                best = (n_w, n_b, int(cand_o[k]), float(errs[k]))
+
+    return CalibResult(n_w=best[0], n_b=best[1], n_o=best[2], error=best[3],
+                       fp_norm=fp_norm, elapsed_s=time.perf_counter() - t0)
+
+
+def calibrate_add_module(
+    a_q: jax.Array,
+    b_q: jax.Array,
+    o_ref: jax.Array,
+    *,
+    bits: int = 8,
+    tau: int = 4,
+    out_unsigned: bool = False,
+    apply_relu: bool = False,
+) -> CalibResult:
+    """Fig. 1(c)/(d): residual add — only N_o is free (operand grids are
+    inherited from the upstream modules)."""
+    t0 = time.perf_counter()
+    o_pre = a_q.astype(jnp.float32) + b_q.astype(jnp.float32)
+    if apply_relu:
+        o_pre = jnp.maximum(o_pre, 0)
+    io_lo, io_hi = search_window(o_ref, tau)
+    cand_o = jnp.asarray([(bits - 1) - k for k in range(io_lo, io_hi + 1)],
+                         jnp.float32)
+    errs = np.asarray(_sweep_n_o(o_pre, o_ref, cand_o, bits, out_unsigned))
+    k = int(np.argmin(errs))
+    return CalibResult(
+        n_w=None, n_b=None, n_o=int(cand_o[k]), error=float(errs[k]),
+        fp_norm=float(jnp.linalg.norm(o_ref.astype(jnp.float32).ravel())),
+        elapsed_s=time.perf_counter() - t0)
+
+
+def calibrate_output_point(
+    o_pre: jax.Array,
+    o_ref: jax.Array,
+    *,
+    bits: int = 8,
+    tau: int = 4,
+    out_unsigned: bool = False,
+) -> CalibResult:
+    """Standalone activation quant point (un-fused nonlinearity, embeddings)."""
+    t0 = time.perf_counter()
+    io_lo, io_hi = search_window(o_ref, tau)
+    cand_o = jnp.asarray([(bits - 1) - k for k in range(io_lo, io_hi + 1)],
+                         jnp.float32)
+    errs = np.asarray(_sweep_n_o(o_pre, o_ref, cand_o, bits, out_unsigned))
+    k = int(np.argmin(errs))
+    return CalibResult(
+        n_w=None, n_b=None, n_o=int(cand_o[k]), error=float(errs[k]),
+        fp_norm=float(jnp.linalg.norm(o_ref.astype(jnp.float32).ravel())),
+        elapsed_s=time.perf_counter() - t0)

@@ -1,0 +1,136 @@
+"""Integer-arithmetic-only inference ops — Eq. (2)-(4) of the paper.
+
+The deploy path stores two artifact sets (paper §1.2):
+  * integer tensors  X^I, W^I, B^I  (int8 codes, int32 accumulators), and
+  * per-edge *shift amounts* (e.g. ``(N_x + N_w) - N_b`` for the bias align,
+    ``(N_x + N_w) - N_o`` for the output requant) — not the raw fractional
+    bits.
+
+Every op here takes/returns integer codes; floats never appear on the math
+path.  These are the jnp reference semantics; the Pallas kernels in
+``repro.kernels`` implement the same contract with fused VMEM epilogues and
+are asserted bit-identical in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qscheme import QuantParams, int_bounds, shift_requant
+
+__all__ = [
+    "LinearQuantSpec",
+    "int_linear",
+    "int_conv2d",
+    "int_residual_add",
+    "bias_align",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearQuantSpec:
+    """Shift bookkeeping for one unified module (Eq. 3).
+
+    n_x, n_w, n_b, n_o are fractional bits of input, weight, bias, output.
+    Derived hardware shifts:
+      bias_shift   = (n_x + n_w) - n_b   (left-shift bias into the int32 acc)
+      requant_shift= (n_x + n_w) - n_o   (right-shift acc into the n-bit code)
+    """
+
+    n_x: int
+    n_w: int
+    n_b: int
+    n_o: int
+    bits: int = 8
+    out_unsigned: bool = False  # Fig. 1(b): post-ReLU output is unsigned
+
+    @property
+    def bias_shift(self) -> int:
+        return (self.n_x + self.n_w) - self.n_b
+
+    @property
+    def requant_shift(self) -> int:
+        return (self.n_x + self.n_w) - self.n_o
+
+
+def bias_align(b_int: jax.Array, bias_shift: int) -> jax.Array:
+    """Align an int8 bias code with the int32 accumulator grid (Eq. 3).
+
+    The paper "carefully aligns biases with the convolution output by
+    sacrificing smaller values": the int8 bias is *left*-shifted by
+    ``(N_x + N_w) - N_b`` (which is >= 0 whenever the bias precision window
+    sits above the accumulator LSB; negative shifts drop low bits).
+    """
+    b = b_int.astype(jnp.int32)
+    s = jnp.asarray(bias_shift, jnp.int32)
+    return jnp.where(s >= 0, b << jnp.maximum(s, 0),
+                     shift_requant(b, jnp.maximum(-s, 0), bits=32))
+
+
+def int_linear(x_int: jax.Array, w_int: jax.Array, b_int: Optional[jax.Array],
+               spec: LinearQuantSpec, apply_relu: bool = False) -> jax.Array:
+    """Integer-only linear layer: int8 x @ int8 w -> int32 -> shift -> int8.
+
+    x_int: (..., K) int8 codes, w_int: (K, N) int8 codes, b_int: (N,) int8.
+    ``apply_relu`` realizes Fig. 1(b): ReLU on the int32 accumulator (sign
+    check only — free in hardware) *before* the single requantization, so the
+    intermediate activation never exists in memory.
+    """
+    # upcast to int32 for the reference op: keeps exactness and supports
+    # unsigned (post-ReLU) input codes; the Pallas kernel keeps int8 operands.
+    acc = jax.lax.dot_general(
+        x_int.astype(jnp.int32), w_int.astype(jnp.int32),
+        dimension_numbers=(((x_int.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    if b_int is not None:
+        acc = acc + bias_align(b_int, spec.bias_shift)
+    if apply_relu:
+        acc = jnp.maximum(acc, 0)
+    return shift_requant(acc, spec.requant_shift, bits=spec.bits,
+                         unsigned=spec.out_unsigned and apply_relu)
+
+
+def int_conv2d(x_int: jax.Array, w_int: jax.Array, b_int: Optional[jax.Array],
+               spec: LinearQuantSpec, stride: int = 1, padding: str = "SAME",
+               apply_relu: bool = False) -> jax.Array:
+    """Integer-only 2-D convolution (Eq. 2/3), NHWC x HWIO -> NHWC.
+
+    The faithful path for the paper's own ResNet experiments.  int8 operands,
+    int32 accumulation, bias align + single shift requant (+ optional fused
+    ReLU per Fig. 1(b)).
+    """
+    acc = jax.lax.conv_general_dilated(
+        x_int.astype(jnp.int32), w_int.astype(jnp.int32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+    if b_int is not None:
+        acc = acc + bias_align(b_int, spec.bias_shift)
+    if apply_relu:
+        acc = jnp.maximum(acc, 0)
+    return shift_requant(acc, spec.requant_shift, bits=spec.bits,
+                         unsigned=spec.out_unsigned and apply_relu)
+
+
+def int_residual_add(a_int: jax.Array, n_a: int, b_int: jax.Array, n_b: int,
+                     n_o: int, bits: int = 8, apply_relu: bool = False) -> jax.Array:
+    """Fig. 1(c)/(d): residual addition of two int8 codes on different grids.
+
+    Both operands are left-shifted onto the finer common grid
+    ``n_hi = max(n_a, n_b)`` (exact — no information loss), added in int32,
+    then requantized once by ``n_hi - n_o``.  With ReLU (case c) the sign
+    check happens on the int32 sum; without (case d) the signed code is kept.
+    """
+    n_hi = max(n_a, n_b)
+    a = a_int.astype(jnp.int32) << (n_hi - n_a)
+    b = b_int.astype(jnp.int32) << (n_hi - n_b)
+    acc = a + b
+    if apply_relu:
+        acc = jnp.maximum(acc, 0)
+    return shift_requant(acc, n_hi - n_o, bits=bits,
+                         unsigned=apply_relu)

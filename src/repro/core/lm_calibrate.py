@@ -1,0 +1,77 @@
+"""Algorithm 1 applied to transformer-family models (the LM adaptation of
+the paper's pipeline, DESIGN §3).
+
+1. Run ONE full-precision forward on a single calibration batch (paper
+   §2.1: "a single image") with activation capture on — every unified
+   module streams its (input, weight, bias) to the host.
+2. Per module, in dataflow order: N_x from the Eq. 6 max-window on the
+   captured input; grid-search (N_w, [N_b,] N_o) minimizing the module's
+   reconstruction error (Eq. 5).
+3. The result is a ``QuantContext`` table driving fake/int execution.
+
+Scanned layer stacks share one module name, hence one set of fractional
+bits — the static-shift constraint that keeps the deploy path's requant
+shifts compile-time constants (DESIGN §3).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qmodel
+from repro.core.calibrate import (CalibrationReport, calibrate_linear_module)
+from repro.core.qmodel import ModuleBits, QuantContext, QuantMode
+from repro.core.qscheme import fake_quant, search_window
+
+__all__ = ["calibrate_lm"]
+
+
+def calibrate_lm(forward_fn, params, batch, *, bits: int = 8, tau: int = 4,
+                 sample_rows: int = 2048) -> tuple[QuantContext,
+                                                   CalibrationReport]:
+    """Calibrate every qlinear module of an LM.
+
+    forward_fn(params, batch, ctx) must run the model's forward (loss or
+    logits — only the capture side effects matter).
+    ``sample_rows`` subsamples token rows per module to bound the grid
+    search cost (the paper calibrates on one image's worth of activations).
+    """
+    with qmodel.capture_activations() as store:
+        forward_fn(params, batch, QuantContext(mode=QuantMode.FP))
+        jax.effects_barrier()
+
+    report = CalibrationReport()
+    table: dict[str, ModuleBits] = {}
+    for name, (x, w, b) in store.items():
+        x = jnp.asarray(x).reshape(-1, x.shape[-1])
+        if x.shape[0] > sample_rows:
+            x = x[:: x.shape[0] // sample_rows][:sample_rows]
+        w = jnp.asarray(w)
+        b = jnp.asarray(b) if b is not None and jnp.ndim(b) > 0 else None
+        o_ref = x.astype(jnp.float32) @ w.astype(jnp.float32)
+        if b is not None:
+            o_ref = o_ref + b.astype(jnp.float32)
+
+        def apply(xx, wq, bq):
+            y = xx.astype(jnp.float32) @ wq.astype(jnp.float32)
+            return y + bq.astype(jnp.float32) if bq is not None else y
+
+        # extend Algorithm 1's grid with the INPUT grid N_x (the LM input
+        # is a fresh quant point per module boundary, unlike the CNN chain
+        # where N_x is inherited): a slightly finer-than-max grid often
+        # wins by clipping activation outliers.
+        nx_hi = (bits - 1) - search_window(x, 0)[1]
+        best = None
+        for n_x in (nx_hi, nx_hi + 1, nx_hi + 2):
+            xq = fake_quant(x, n_x, bits)
+            r = calibrate_linear_module(xq, w, b, o_ref, apply, bits=bits,
+                                        tau=tau)
+            if best is None or r.error < best[1].error:
+                best = (n_x, r)
+        n_x, r = best
+        report.add(name, r)
+        table[name] = ModuleBits(n_x=n_x, n_w=r.n_w, n_b=r.n_b, n_o=r.n_o)
+    return QuantContext(mode=QuantMode.FAKE, bits=bits, table=table), report

@@ -1,0 +1,193 @@
+"""Power-of-two ("bit-shift") quantization scheme — Eq. (1) of the paper.
+
+    Q(r; N_r, n_bits) = clip(round(r * 2^{N_r}),
+                             -2^{n_bits-1}, 2^{n_bits-1} - 1) * 2^{-N_r}
+
+The scale is constrained to a power of two so that every dequantization /
+requantization at inference is a bit shift with round-to-nearest — no
+multipliers (scaling factors) and no codebooks.  ``N_r`` (the "fractional
+bit") is the only parameter per tensor; it may be negative (then only digits
+before the binary point are kept).
+
+Three representations coexist:
+
+* ``fake_quant(r, N, bits)``   — float-in/float-out Eq. (1); used during
+  calibration (Algorithm 1) and for CPU accuracy evaluation.  Bit-exactly
+  ``dequant(quant(r))``.
+* ``quant(r, N, bits)``        — float → integer code (int8/int16/int32).
+* ``dequant(q, N)``            — integer code → float.
+
+All functions are jit/vmap/grad-safe.  ``fake_quant_ste`` attaches a
+straight-through estimator for QAT (beyond-paper extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantParams",
+    "int_bounds",
+    "quant",
+    "dequant",
+    "fake_quant",
+    "fake_quant_ste",
+    "max_frac_bits",
+    "search_window",
+    "round_half_away",
+    "shift_requant",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Quantization parameters for one tensor (one unified-module edge).
+
+    Attributes:
+      n: fractional bit N_r — scale is 2**-n.  May be negative.
+      bits: total bit width including the sign bit.
+      unsigned: if True the integer range is [0, 2**bits - 1] (paper Fig. 1b:
+        post-ReLU activations need no sign bit).
+    """
+
+    n: int
+    bits: int = 8
+    unsigned: bool = False
+
+    @property
+    def scale(self) -> float:
+        return 2.0 ** (-self.n)
+
+    def bounds(self) -> tuple[int, int]:
+        return int_bounds(self.bits, self.unsigned)
+
+    def storage_dtype(self):
+        if self.bits <= 8:
+            return jnp.uint8 if self.unsigned else jnp.int8
+        if self.bits <= 16:
+            return jnp.uint16 if self.unsigned else jnp.int16
+        return jnp.uint32 if self.unsigned else jnp.int32
+
+
+def int_bounds(bits: int, unsigned: bool = False) -> tuple[int, int]:
+    """Integer clipping range for a given bit width (sign bit included)."""
+    if unsigned:
+        return 0, (1 << bits) - 1
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def round_half_away(x: jax.Array) -> jax.Array:
+    """Round-to-nearest, ties away from zero (hardware ``round()`` semantics).
+
+    The paper's RTL uses conventional rounding; jnp.round is banker's rounding
+    (ties-to-even) which is NOT what a shift-and-add rounding unit does.
+    """
+    return jnp.trunc(x + jnp.where(x >= 0, 0.5, -0.5))
+
+
+def quant(r: jax.Array, n: jax.Array | int, bits: int = 8,
+          unsigned: bool = False, dtype=None) -> jax.Array:
+    """Float → integer code: ``clip(round(r * 2^n))`` (the r^I of Eq. 1)."""
+    lo, hi = int_bounds(bits, unsigned)
+    scaled = r.astype(jnp.float32) * jnp.exp2(jnp.asarray(n, jnp.float32))
+    q = jnp.clip(round_half_away(scaled), lo, hi)
+    if dtype is None:
+        dtype = QuantParams(0, bits, unsigned).storage_dtype()
+    return q.astype(dtype)
+
+
+def dequant(q: jax.Array, n: jax.Array | int, out_dtype=jnp.float32) -> jax.Array:
+    """Integer code → float: ``q * 2^-n``."""
+    return (q.astype(jnp.float32) * jnp.exp2(-jnp.asarray(n, jnp.float32))).astype(out_dtype)
+
+
+def fake_quant(r: jax.Array, n: jax.Array | int, bits: int = 8,
+               unsigned: bool = False) -> jax.Array:
+    """Eq. (1) in float arithmetic: dequant(quant(r)). Shape/dtype preserving."""
+    lo, hi = int_bounds(bits, unsigned)
+    nf = jnp.asarray(n, jnp.float32)
+    scaled = r.astype(jnp.float32) * jnp.exp2(nf)
+    q = jnp.clip(round_half_away(scaled), lo, hi)
+    return (q * jnp.exp2(-nf)).astype(r.dtype)
+
+
+@jax.custom_vjp
+def fake_quant_ste(r: jax.Array, n: jax.Array, bits: int = 8,
+                   unsigned: bool = False) -> jax.Array:
+    """fake_quant with a straight-through estimator (gradient passes where
+    the input is inside the representable range, zero where clipped)."""
+    return fake_quant(r, n, bits, unsigned)
+
+
+def _fq_fwd(r, n, bits, unsigned):
+    lo, hi = int_bounds(bits, unsigned)
+    nf = jnp.asarray(n, jnp.float32)
+    scaled = r.astype(jnp.float32) * jnp.exp2(nf)
+    inside = (scaled >= lo) & (scaled <= hi)
+    return fake_quant(r, n, bits, unsigned), inside
+
+
+def _fq_bwd(residuals, g):
+    inside = residuals
+    return (jnp.where(inside, g, 0).astype(g.dtype), None, None, None)
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def max_frac_bits(x: jax.Array) -> jax.Array:
+    """Eq. (6): N^max = ceil(log2(max|x| + 1)) + 1.
+
+    This is the number of *integer* bits needed to represent max|x|; the
+    corresponding fractional bit for an ``n_bits`` code is
+    ``(n_bits - 1) - N^max`` (Algorithm 1 line 7).
+    """
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return jnp.ceil(jnp.log2(m + 1.0)) + 1.0
+
+
+def search_window(x: jax.Array, tau: int = 4) -> tuple[int, int]:
+    """Algorithm 1 lines 3-5: the narrowed search window [N^max - tau, N^max].
+
+    Returns concrete python ints (the calibration loop is host-side grid
+    search, per the paper: optimization runs on a single batch in minutes).
+    """
+    nmax = int(jax.device_get(max_frac_bits(x)))
+    return nmax - tau, nmax
+
+
+def shift_requant(acc: jax.Array, shift: jax.Array | int, bits: int = 8,
+                  unsigned: bool = False, dtype=None) -> jax.Array:
+    """The paper's hardware requantization: int32 accumulator → n-bit code.
+
+    ``shift = (N_x + N_w) - N_o`` (Eq. 3/4).  A *right* shift by ``shift``
+    with round-to-nearest(-away) and clip.  ``shift`` may be negative (left
+    shift), matching the RTL range [1, 10] study but not restricted to it.
+
+    Implemented with integer arithmetic only so it is bit-exact with an RTL
+    shifter: for s >= 0,  out = (acc + (1 << (s-1))·sign) >> s  — we express
+    it via jnp ops that lower to integer adds/shifts.
+    """
+    lo, hi = int_bounds(bits, unsigned)
+    acc = acc.astype(jnp.int32)
+    s = jnp.asarray(shift, jnp.int32)
+
+    def right_shift(a, s_):
+        # round-to-nearest-away on a right shift: add half the LSB weight.
+        half = jnp.where(s_ > 0, (jnp.int32(1) << jnp.maximum(s_ - 1, 0)), 0)
+        rounded = jnp.where(a >= 0, a + half, -((-a) + half))
+        # arithmetic shift on the magnitude-rounded value
+        return jnp.where(
+            a >= 0,
+            rounded >> jnp.maximum(s_, 0),
+            -((-rounded) >> jnp.maximum(s_, 0)),
+        )
+
+    shifted = jnp.where(s >= 0, right_shift(acc, s), acc << jnp.maximum(-s, 0))
+    out = jnp.clip(shifted, lo, hi)
+    if dtype is None:
+        dtype = QuantParams(0, bits, unsigned).storage_dtype()
+    return out.astype(dtype)

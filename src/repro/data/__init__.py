@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLMStream, ShardedLoader,  # noqa: F401
+                                 make_calibration_batch)

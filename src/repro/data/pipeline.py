@@ -1,0 +1,122 @@
+"""Deterministic synthetic data pipeline with sharded placement + prefetch.
+
+Real deployments swap ``SyntheticLMStream`` for a tokenized corpus reader;
+everything downstream (sharded placement, double-buffered prefetch,
+checkpointable position) is production-shaped:
+
+  * determinism: batch(step) is a pure function of (seed, step) — restart at
+    step k reproduces the exact stream, so checkpoint/resume and elastic
+    re-sharding do not perturb training;
+  * sharded placement: batches are device_put with the train-step's input
+    NamedSharding before being handed to jit (no host round-trip after);
+  * prefetch: a background thread keeps ``depth`` batches in flight, hiding
+    host latency behind the step (compute/IO overlap).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SyntheticLMStream", "ShardedLoader", "make_calibration_batch"]
+
+
+class SyntheticLMStream:
+    """Zipf-ish synthetic token stream with enough structure that loss
+    decreases under training (n-gram correlations), deterministic per step."""
+
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 seed: int = 0, encoder_seq: Optional[int] = None,
+                 d_model: Optional[int] = None):
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.encoder_seq = encoder_seq
+        self.d_model = d_model
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        b, s = self.global_batch, self.seq_len
+        # zipf marginals + first-order repetition structure
+        base = rng.zipf(1.3, size=(b, s)).astype(np.int64)
+        base = np.minimum(base - 1, self.vocab_size - 1)
+        rep = rng.random((b, s)) < 0.3
+        shifted = np.roll(base, 1, axis=1)
+        tokens = np.where(rep, shifted, base).astype(np.int32)
+        out = {"tokens": tokens, "labels": tokens,
+               "mask": np.ones((b, s), np.float32)}
+        if self.encoder_seq is not None:
+            out["encoder_features"] = rng.standard_normal(
+                (b, self.encoder_seq, self.d_model), dtype=np.float32)
+        return out
+
+
+class ShardedLoader:
+    """Double-buffered prefetch of sharded batches.
+
+    ``shardings`` maps batch keys to NamedSharding (or None = replicate).
+    ``state()``/``restore()`` expose the stream position for checkpointing.
+    """
+
+    def __init__(self, stream: SyntheticLMStream, shardings: dict,
+                 start_step: int = 0, depth: int = 2):
+        self.stream = stream
+        self.shardings = shardings
+        self.depth = depth
+        self._step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch: dict) -> dict:
+        out = {}
+        for k, v in batch.items():
+            sh = self.shardings.get(k)
+            out[k] = jax.device_put(v, sh) if sh is not None else jnp.asarray(v)
+        return out
+
+    def _fill(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put((step, self._place(self.stream.batch(step))),
+                            timeout=0.1)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __next__(self) -> tuple[int, dict]:
+        step, batch = self._q.get()
+        self._step = step + 1
+        return step, batch
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        while True:
+            yield next(self)
+
+    def state(self) -> dict:
+        return {"step": self._step, "seed": self.stream.seed}
+
+    @classmethod
+    def restore(cls, stream: SyntheticLMStream, shardings: dict,
+                state: dict, depth: int = 2) -> "ShardedLoader":
+        stream.seed = state["seed"]
+        return cls(stream, shardings, start_step=state["step"], depth=depth)
+
+    def close(self):
+        self._stop.set()
+        while not self._q.empty():
+            self._q.get_nowait()
+        self._thread.join(timeout=2)
+
+
+def make_calibration_batch(vocab_size: int, seq_len: int, batch: int,
+                           seed: int = 17) -> dict:
+    """The paper calibrates on a single batch ("a single image", §2.1)."""
+    return SyntheticLMStream(vocab_size, seq_len, batch, seed).batch(0)

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (param_sharding_rules,  # noqa: F401
+                                        batch_sharding, make_shardings)
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,  # noqa: F401
+                                               ElasticPlanner, RunSupervisor)

@@ -1,0 +1,314 @@
+"""Partition rules: param-path -> PartitionSpec for every architecture.
+
+Strategy (DESIGN §5):
+  * TP on the ``model`` axis: attention heads, MLP hidden, expert dim (EP),
+    vocab (embedding rows + lm_head cols).
+  * DP on ``data`` (x ``pod`` when multi-pod): batch dim of activations.
+  * ZeRO-1: optimizer moments inherit the param spec PLUS data-axis
+    sharding on the largest dim that divides evenly (opt_sharding_rules).
+
+Rules are pattern-based on the flattened path (the same convention as
+MaxText's logical-axis rules, without the indirection — paths here are
+stable because the model zoo is ours).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_sharding_rules", "batch_sharding", "make_shardings",
+           "cache_sharding_rules", "DATA_AXES"]
+
+DATA_AXES = ("pod", "data")  # gradient-reduction axes when both exist
+
+
+def _dp(mesh: Mesh) -> Any:
+    """The composite data-parallel axis spec entry for this mesh."""
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names) or None
+
+
+# (regex on path, [candidate specs]).  First matching pattern wins; within a
+# pattern the FIRST candidate whose sharded dims all DIVIDE the leaf shape is
+# chosen (pjit in_shardings reject non-divisible dims, unlike constraints) —
+# e.g. granite's 40 experts cannot shard over model=16, so its expert stacks
+# fall back to contract-dim TP.
+_RULES: list[tuple[str, list]] = [
+    # embeddings / head: vocab over model, fall back to d_model
+    (r"embed$",                 [P("model", None), P(None, "model"), P()]),
+    (r"lm_head$",               [P(None, "model"), P("model", None), P()]),
+    # attention (GQA): heads over model
+    (r"attn/w[qkv]$",           [P(None, "model"), P("model", None)]),
+    (r"attn/wo$",               [P("model", None), P(None, "model")]),
+    (r"attn/b[qkv]$",           [P("model"), P()]),
+    # MLA: latent down-projections replicated (small), up-projections by head
+    (r"attn/wq_a$|attn/wkv_a$", [P(None, None)]),
+    (r"attn/wq_b$|attn/wkv_b$", [P(None, "model"), P("model", None)]),
+    # cross attention (whisper decoder)
+    (r"cross/w[qkv]$",          [P(None, "model"), P("model", None)]),
+    (r"cross/wo$",              [P("model", None), P(None, "model")]),
+    (r"cross/b[qkv]$",          [P("model"), P()]),
+    # dense MLP: hidden over model
+    (r"mlp/w1$|mlp/w3$",        [P(None, "model"), P("model", None)]),
+    (r"mlp/w2$",                [P("model", None), P(None, "model")]),
+    # MoE: experts over model (EP); fall back to TP inside each expert
+    (r"moe/router$",            [P(None, None)]),
+    (r"moe/w[13]$",             [P("model", None, None),
+                                 P(None, "model", None),
+                                 P(None, None, "model")]),
+    (r"moe/w2$",                [P("model", None, None),
+                                 P(None, None, "model"),
+                                 P(None, "model", None)]),
+    (r"moe/shared/w[13]$",      [P(None, "model"), P("model", None)]),
+    (r"moe/shared/w2$",         [P("model", None), P(None, "model")]),
+    # mamba2: contract-dim sharding on in-proj (packed out dim must stay
+    # whole for the z/xBC/dt split), free-dim on out-proj
+    (r"ssm/w_in$",              [P("model", None)]),
+    (r"ssm/w_out$",             [P(None, "model"), P("model", None)]),
+    (r"ssm/conv_w$|ssm/conv_b$", [P()]),
+    # rwkv6: contract-dim sharding (head layout stays local, DESIGN §5)
+    (r"rwkv/w[rkvgo]$",         [P("model", None)]),
+    (r"rwkv/wk_ffn$|rwkv/wr_ffn$", [P(None, "model"), P("model", None)]),
+    (r"rwkv/wv_ffn$",           [P("model", None), P(None, "model")]),
+    # zamba2 shared block input projection
+    (r"shared/in_proj$|in_proj$", [P(None, "model"), P("model", None)]),
+    # norms, gains, scalars: replicated
+    (r".*",                     [P()]),
+]
+
+
+def _fit_rank(spec: P, ndim: int) -> list:
+    """Pad/truncate a spec to the leaf's rank; stacked layer params have a
+    leading scan axis -> prepend None."""
+    entries = list(spec)
+    if len(entries) < ndim:
+        entries = [None] * (ndim - len(entries)) + entries
+    elif len(entries) > ndim:
+        entries = entries[-ndim:] if ndim else []
+    return entries
+
+
+def _divisible(entries: list, shape: tuple, mesh: Mesh) -> bool:
+    for dim, e in zip(shape, entries):
+        if e is not None and dim % _axis_size(mesh, e) != 0:
+            return False
+    return True
+
+
+def _spec_for(path: str, shape: tuple, mesh: Mesh) -> P:
+    ndim = len(shape)
+    for pat, candidates in _RULES:
+        if re.search(pat, path):
+            for cand in candidates:
+                entries = _fit_rank(cand, ndim)
+                if _divisible(entries, shape, mesh):
+                    return P(*entries)
+            # last resort: strip non-dividing axes from the first candidate
+            entries = [e if e is not None and shape[i] %
+                       _axis_size(mesh, e) == 0 else None
+                       for i, e in enumerate(_fit_rank(candidates[0], ndim))]
+            return P(*entries)
+    return P()
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _add_fsdp(spec: P, path: str, shape: tuple, mesh: Mesh,
+              min_size: int = 1 << 20) -> P:
+    """ZeRO-3/FSDP: additionally shard large leaves over the data axis.
+
+    Placed on the first dim that (a) is not already sharded, (b) divides the
+    data-axis size, and (c) is not the scan (layer-stack) dim.  GSPMD then
+    all-gathers weights per scan iteration and reduce-scatters gradients —
+    the MaxText 'fsdp' pattern; required for >30B configs (DESIGN §5).
+    """
+    if "data" not in mesh.axis_names:
+        return spec
+    n = 1
+    for d in shape:
+        n *= d
+    if n < min_size:
+        return spec
+    dsize = mesh.shape["data"]
+    entries = list(spec)
+    start = 1 if ("blocks" in path and len(shape) == len(entries)) else 0
+    # stacked leaves got their scan dim as a prepended None in _spec_for
+    if len(entries) and entries[0] is None and "blocks" in path:
+        start = 1
+    for i in range(start, len(entries)):
+        if entries[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize:
+            entries[i] = "data"
+            return P(*entries)
+    return spec
+
+
+# serve-mode MoE: 2-D (expert x data) sharding so expert weights are NEVER
+# gathered at decode (FSDP re-gathers 167 GB/token on deepseek-v3 decode —
+# §Perf iteration V4); the expert einsums psum small partial outputs instead.
+_SERVE_RULES: list[tuple[str, list]] = [
+    (r"moe/w[13]$", [P("model", None, "data"), P("model", None, None),
+                     P(None, "model", None)]),
+    (r"moe/w2$",    [P("model", "data", None), P("model", None, None),
+                     P(None, None, "model")]),
+]
+
+
+def param_sharding_rules(abstract_params: Any, mesh: Mesh,
+                         fsdp: bool = True, serve: bool = False) -> Any:
+    """PartitionSpec tree matching ``abstract_params`` (from eval_shape)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for p, leaf in flat:
+        path = _path_str(p)
+        spec = None
+        if serve and "data" in mesh.axis_names:
+            for pat, cands in _SERVE_RULES:
+                if re.search(pat, path):
+                    for cand in cands:
+                        entries = _fit_rank(cand, leaf.ndim)
+                        if _divisible(entries, leaf.shape, mesh):
+                            spec = P(*entries)
+                            break
+                    break
+        if spec is None:
+            spec = _spec_for(path, leaf.shape, mesh)
+            if fsdp:
+                spec = _add_fsdp(spec, path, leaf.shape, mesh)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_sharding_rules(abstract_opt: Any, param_specs_by_path: dict,
+                       mesh: Mesh) -> Any:
+    """ZeRO-1: moments inherit their param's spec; the step counter is
+    replicated.  (Further data-axis sharding of moments is a perf-pass
+    option; baseline keeps moments param-aligned.)"""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_opt)
+    specs = []
+    for p, leaf in flat:
+        ps = _path_str(p)
+        m = re.search(r"\.(m|v)[/.](.*)$", ps) or re.search(r"\.(m|v)$", ps)
+        specs.append(_spec_for(ps, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_sharding(mesh: Mesh, batch_dims: int = 2) -> P:
+    """(B, S, ...) activations: batch over the composite data axis."""
+    dp = _dp(mesh)
+    return P(dp, *([None] * (batch_dims - 1)))
+
+
+def cache_sharding_rules(abstract_cache: Any, mesh: Mesh) -> Any:
+    """KV caches: (L, B, S, H, D) -> heads over model, batch over data when
+    it divides; recurrent states likewise on their head dim."""
+    dp = _dp(mesh)
+    dsize = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,) if dp else ()):
+        dsize *= mesh.shape[a]
+
+    def spec(path, leaf):
+        nd = leaf.ndim
+        ps = _path_str(path)
+        batch_ok = leaf.shape[1] % dsize == 0 if nd >= 2 and dsize else False
+        bdim = dp if batch_ok else None
+        if "memory" in ps:                     # (B, T, d)
+            mdim = "model" if leaf.shape[2] % mesh.shape["model"] == 0 else None
+            return P(bdim if leaf.shape[0] % max(dsize, 1) == 0 else None,
+                     None, mdim)
+        if nd == 5:                            # (L, B, S, H, D) stacked KV
+            # SEQUENCE-sharded over model (flash-decode/context-parallel):
+            # decode contracts over S, so partial scores reduce with tiny
+            # stat psums; head-sharding instead re-gathers the whole cache
+            # whenever kv_heads doesn't divide the axis (§Perf D2).
+            sdim = "model" if leaf.shape[2] % mesh.shape["model"] == 0 else None
+            return P(None, bdim, sdim, None, None)
+        if nd == 4:                            # (L, B, S, lat) MLA latents
+            sdim = "model" if leaf.shape[2] % mesh.shape["model"] == 0 else None
+            return P(None, bdim, sdim, None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [spec(p, l) for p, l in flat])
+
+
+def make_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (logical axes), MaxText-style
+# ---------------------------------------------------------------------------
+# GSPMD propagation alone loses the batch sharding through gathers/loss ops
+# (observed: full-batch f32 logits temps, 255 GB/device).  Models therefore
+# pin activations at module boundaries via ``constrain(x, logical_axes)``,
+# which no-ops outside an ``activation_sharding(mesh)`` scope so CPU tests
+# and single-device runs are untouched.
+
+import contextlib
+import threading
+
+_TLS = threading.local()
+
+_LOGICAL = {
+    "batch": lambda mesh: _dp(mesh),
+    "model": lambda mesh: "model",
+    "vocab": lambda mesh: "model",
+    "heads": lambda mesh: "model",
+    "ff": lambda mesh: "model",
+    "expert": lambda mesh: "model",
+    None: lambda mesh: None,
+}
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh):
+    prev = getattr(_TLS, "mesh", None)
+    _TLS.mesh = mesh
+    try:
+        yield
+    finally:
+        _TLS.mesh = prev
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def data_shards() -> int:
+    """Size of the composite data axis in the active activation-sharding
+    scope (1 outside a scope).  Model code uses this for shard-local
+    algorithms (hierarchical MoE dispatch) that degenerate gracefully on a
+    single device."""
+    mesh = getattr(_TLS, "mesh", None)
+    if mesh is None:
+        return 1
+    return _axis_size(mesh, _dp(mesh))
+
+
+def constrain(x: jax.Array, logical: tuple) -> jax.Array:
+    """Pin x's sharding by logical axis names; drops axes that do not
+    divide the corresponding dim (e.g. batch=1 decode, 20 heads on 16)."""
+    mesh = getattr(_TLS, "mesh", None)
+    if mesh is None:
+        return x
+    entries = []
+    for dim, name in zip(x.shape, logical):
+        e = _LOGICAL[name](mesh)
+        entries.append(e if e is not None and dim % _axis_size(mesh, e) == 0
+                       else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Layout per scaffold convention:
+  int8_matmul.py / quantize.py / residual_requant.py — pl.pallas_call bodies
+  ops.py — jit'd public wrappers (padding, block choice, CPU interpret)
+  ref.py — pure-jnp oracles used by the allclose tests
+"""
+from repro.kernels import ops, ref  # noqa: F401

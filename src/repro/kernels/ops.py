@@ -1,0 +1,135 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities: flatten batch dims, pad to tile multiples, pick MXU-aligned
+block shapes that fit VMEM, dispatch to the Pallas kernel (interpret mode on
+CPU), and fall back to the jnp reference for shapes where a kernel launch is
+not worthwhile.
+
+VMEM budget reasoning (v5e: ~128 MiB VMEM/core, we target < 8 MiB per call
+to leave room for double-buffering):
+  int8 x tile  bm*bk      (1 B)     128*512  = 64 KiB
+  int8 w tile  bk*bn      (1 B)     512*512  = 256 KiB
+  int32 acc    bm*bn      (4 B)     128*512  = 256 KiB
+so default (bm, bk, bn) = (128, 512, 512) uses < 1 MiB with K-streaming,
+and every dim is a multiple of the 128-lane MXU tiling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.integer_ops import LinearQuantSpec, int_linear
+from repro.kernels import ref
+from repro.kernels.int8_matmul import make_int8_matmul
+from repro.kernels.quantize import make_quantize
+from repro.kernels.residual_requant import make_residual_requant
+
+__all__ = ["int8_matmul", "quantize_act", "residual_requant",
+           "use_interpret", "DEFAULT_BLOCKS"]
+
+DEFAULT_BLOCKS = (128, 512, 512)  # (bm, bk, bn)
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    r = x.shape[axis] % mult
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - r)
+    return jnp.pad(x, pad)
+
+
+def _pick_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    bm, bk, bn = DEFAULT_BLOCKS
+    return min(bm, m), min(bk, k), min(bn, n)
+
+
+def int8_matmul(x_int: jax.Array, w_int: jax.Array,
+                b_int: Optional[jax.Array], spec: LinearQuantSpec,
+                *, relu: bool = False) -> jax.Array:
+    """(..., K) int8 @ (K, N) int8 -> (..., N) int8 with fused requant.
+
+    Static shift constants come from ``spec`` (deploy artifacts).  Shapes
+    not worth a kernel launch (tiny K or M) use the jnp reference — same
+    bit-exact contract.
+    """
+    *batch, k = x_int.shape
+    n = w_int.shape[-1]
+    m = 1
+    for d in batch:
+        m *= d
+    unsigned = relu and spec.out_unsigned
+    lo, hi = ((0, (1 << spec.bits) - 1) if unsigned
+              else (-(1 << (spec.bits - 1)), (1 << (spec.bits - 1)) - 1))
+
+    if m < 16 or k < 128 or n < 128:
+        out = int_linear(x_int, w_int, b_int, spec, apply_relu=relu)
+        return out
+
+    x2 = x_int.reshape(m, k)
+    bm, bk, bn = _pick_blocks(m, k, n)
+    x2 = _pad_to(_pad_to(x2, bm, 0), bk, 1)
+    w2 = _pad_to(_pad_to(w_int, bk, 0), bn, 1)
+    mp, kp = x2.shape
+    np_ = w2.shape[1]
+    has_bias = b_int is not None
+    call = make_int8_matmul(
+        mp, kp, np_, bm=bm, bk=bk, bn=bn,
+        shift=spec.requant_shift, bias_shift=spec.bias_shift, relu=relu,
+        lo=lo, hi=hi, has_bias=has_bias,
+        out_dtype=jnp.uint8 if unsigned else jnp.int8,
+        interpret=use_interpret())
+    if has_bias:
+        b2 = _pad_to(b_int.reshape(1, -1), bn, 1)
+        out = call(x2, w2, b2)
+    else:
+        out = call(x2, w2)
+    return out[:m, :n].reshape(*batch, n)
+
+
+def quantize_act(x: jax.Array, n: int, bits: int = 8,
+                 unsigned: bool = False) -> jax.Array:
+    """Elementwise Eq.-1 quantization of an activation tensor."""
+    *batch, c = x.shape
+    rows = 1
+    for d in batch:
+        rows *= d
+    if rows < 8 or c < 128:
+        return ref.quantize_ref(x, n=n, bits=bits, unsigned=unsigned)
+    x2 = x.reshape(rows, c)
+    br, bc = min(256, rows), min(512, c)
+    x2 = _pad_to(_pad_to(x2, br, 0), bc, 1)
+    call = make_quantize(x2.shape[0], x2.shape[1], br=br, bc=bc, n=n,
+                         bits=bits, unsigned=unsigned,
+                         interpret=use_interpret())
+    return call(x2)[:rows, :c].reshape(*batch, c)
+
+
+def residual_requant(a_int: jax.Array, b_int: jax.Array, *, n_a: int,
+                     n_b: int, n_o: int, bits: int = 8,
+                     relu: bool = False) -> jax.Array:
+    """Fused Fig. 1(c)/(d) residual add on int8 codes."""
+    assert a_int.shape == b_int.shape
+    *batch, c = a_int.shape
+    rows = 1
+    for d in batch:
+        rows *= d
+    if rows < 8 or c < 128:
+        return ref.residual_requant_ref(a_int, b_int, n_a=n_a, n_b=n_b,
+                                        n_o=n_o, bits=bits, relu=relu)
+    a2 = a_int.reshape(rows, c)
+    b2 = b_int.reshape(rows, c)
+    br, bc = min(256, rows), min(512, c)
+    a2 = _pad_to(_pad_to(a2, br, 0), bc, 1)
+    b2 = _pad_to(_pad_to(b2, br, 0), bc, 1)
+    call = make_residual_requant(a2.shape[0], a2.shape[1], br=br, bc=bc,
+                                 n_a=n_a, n_b=n_b, n_o=n_o, bits=bits,
+                                 relu=relu, interpret=use_interpret())
+    return call(a2, b2)[:rows, :c].reshape(*batch, c)

@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: elementwise quantization (float -> int8 codes), Eq. 1.
+
+Used at unified-module *entry* boundaries (activation -> int8 before the MXU)
+and for offline weight conversion.  Blocked over rows so arbitrarily large
+activations stream through VMEM; the scale 2^{N} is a static constant folded
+into the kernel (no scalar operand).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quantize_kernel", "make_quantize"]
+
+
+def quantize_kernel(x_ref, o_ref, *, n: int, lo: int, hi: int, out_dtype):
+    x = x_ref[...].astype(jnp.float32) * (2.0 ** n)
+    # round-half-away (hardware rounding, see qscheme.round_half_away)
+    r = jnp.trunc(x + jnp.where(x >= 0, 0.5, -0.5))
+    o_ref[...] = jnp.clip(r, lo, hi).astype(out_dtype)
+
+
+def make_quantize(rows: int, cols: int, *, br: int, bc: int, n: int,
+                  bits: int = 8, unsigned: bool = False,
+                  interpret: bool = False):
+    lo, hi = (0, (1 << bits) - 1) if unsigned else (-(1 << (bits - 1)),
+                                                    (1 << (bits - 1)) - 1)
+    out_dtype = (jnp.uint8 if unsigned else jnp.int8) if bits <= 8 else jnp.int32
+    kernel = functools.partial(quantize_kernel, n=n, lo=lo, hi=hi,
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br, cols // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), out_dtype),
+        interpret=interpret,
+    )

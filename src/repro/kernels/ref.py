@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel — the allclose reference.
+
+Kept independent of the kernels (no shared helper with the kernel bodies)
+so a bug cannot cancel itself out; semantics mirror
+``repro.core.qscheme.shift_requant`` / ``repro.core.integer_ops``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_matmul_ref", "quantize_ref", "residual_requant_ref"]
+
+
+def _requant(acc: jax.Array, shift: int, lo: int, hi: int) -> jax.Array:
+    acc = acc.astype(jnp.int32)
+    if shift > 0:
+        half = 1 << (shift - 1)
+        acc = jnp.where(acc >= 0, (acc + half) >> shift,
+                        -(((-acc) + half) >> shift))
+    elif shift < 0:
+        acc = acc << (-shift)
+    return jnp.clip(acc, lo, hi)
+
+
+def int8_matmul_ref(x_int: jax.Array, w_int: jax.Array,
+                    b_int: Optional[jax.Array], *, shift: int,
+                    bias_shift: int = 0, relu: bool = False,
+                    lo: int = -128, hi: int = 127,
+                    out_dtype=jnp.int8) -> jax.Array:
+    acc = x_int.astype(jnp.int32) @ w_int.astype(jnp.int32)
+    if b_int is not None:
+        b = b_int.astype(jnp.int32)
+        b = (b << bias_shift) if bias_shift >= 0 else _requant(
+            b, -bias_shift, -(2**31), 2**31 - 1).astype(jnp.int32)
+        acc = acc + b
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return _requant(acc, shift, lo, hi).astype(out_dtype)
+
+
+def quantize_ref(x: jax.Array, *, n: int, bits: int = 8,
+                 unsigned: bool = False) -> jax.Array:
+    lo, hi = (0, (1 << bits) - 1) if unsigned else (-(1 << (bits - 1)),
+                                                    (1 << (bits - 1)) - 1)
+    s = x.astype(jnp.float32) * (2.0 ** n)
+    r = jnp.trunc(s + jnp.where(s >= 0, 0.5, -0.5))
+    out_dtype = (jnp.uint8 if unsigned else jnp.int8) if bits <= 8 else jnp.int32
+    return jnp.clip(r, lo, hi).astype(out_dtype)
+
+
+def residual_requant_ref(a_int: jax.Array, b_int: jax.Array, *, n_a: int,
+                         n_b: int, n_o: int, bits: int = 8,
+                         relu: bool = False) -> jax.Array:
+    n_hi = max(n_a, n_b)
+    acc = (a_int.astype(jnp.int32) << (n_hi - n_a)) + \
+          (b_int.astype(jnp.int32) << (n_hi - n_b))
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    unsigned = relu
+    lo, hi = (0, (1 << bits) - 1) if unsigned else (-(1 << (bits - 1)),
+                                                    (1 << (bits - 1)) - 1)
+    out_dtype = jnp.uint8 if unsigned else jnp.int8
+    return _requant(acc, n_hi - n_o, lo, hi).astype(out_dtype)

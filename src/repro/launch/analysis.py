@@ -1,0 +1,138 @@
+"""Roofline extraction from compiled SPMD artifacts.
+
+Methodology (EXPERIMENTS.md §Roofline):
+
+* ``cost_analysis()`` reports PER-DEVICE flops/bytes of the partitioned
+  program, and counts each while-loop body ONCE (verified empirically, see
+  EXPERIMENTS.md §Dry-run caveats).  Rolled production compiles therefore
+  undercount scanned structure.
+* The fit path (benchmarks/roofline.py) re-lowers reduced-DEPTH variants
+  under ``scan_lib.analysis_unroll()`` (every scan fully unrolled => exact
+  counting) and extrapolates linearly in depth, which is exact because cost
+  is affine in layer count.
+* Collective traffic is parsed from the compiled HLO text with ring-model
+  multipliers per collective kind and replica-group size.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (3D-torus usable per chip ~3 links; we report per-link seconds, i.e.
+the most conservative single-link serialization).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "s64": 8, "pred": 1, "s16": 2, "u16": 2,
+                "f64": 8, "c64": 8}
+
+# one HLO instruction line:  %name = RESULT-TYPE op-name(...), attrs.
+# Operands print WITHOUT inline types inside a computation, so bytes come
+# from the RESULT type (always printed at the definition).
+_LINE_RE = re.compile(
+    r"=\s*(?P<result>\(?\s*[a-z0-9]+\[[0-9,]*\][^=]*?)\s"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)"
+    r"(?:-start)?\(")
+_TYPE_RE = re.compile(r"([a-z][0-9]+|pred)\[([0-9,]*)\]")
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _bytes_of(types_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(types_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACKET_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 2)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 2)
+    return 2
+
+
+def collective_traffic(hlo_text: str) -> dict:
+    """Per-device ring-model traffic (bytes) by collective kind, derived
+    from RESULT sizes R and group size P:
+
+    all-gather:      R x (P-1)/P  (result = gathered tensor)
+    all-reduce:      2 x R x (P-1)/P  (ring reduce-scatter + all-gather)
+    reduce-scatter:  R x (P-1)   (result = shard; input = R x P)
+    all-to-all:      R x (P-1)/P
+    collective-permute: R
+    """
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        r = _bytes_of(m.group("result"))
+        p = _group_size(line)
+        if op == "all-gather":
+            traffic = r * (p - 1) / p
+        elif op == "all-reduce":
+            traffic = 2.0 * r * (p - 1) / p
+        elif op == "reduce-scatter":
+            traffic = r * (p - 1)
+        elif op == "all-to-all":
+            traffic = r * (p - 1) / p
+        else:  # collective-permute
+            traffic = r
+        out[op] = out.get(op, 0.0) + traffic
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class CostSample:
+    """Per-device costs from one compiled artifact."""
+
+    flops: float
+    bytes_hbm: float
+    collectives: dict
+
+    def scaled(self, w: float) -> "CostSample":
+        return CostSample(self.flops * w, self.bytes_hbm * w,
+                          {k: v * w for k, v in self.collectives.items()})
+
+    def __add__(self, other: "CostSample") -> "CostSample":
+        keys = set(self.collectives) | set(other.collectives)
+        return CostSample(
+            self.flops + other.flops, self.bytes_hbm + other.bytes_hbm,
+            {k: self.collectives.get(k, 0) + other.collectives.get(k, 0)
+             for k in keys})
+
+
+def sample_of(compiled) -> CostSample:
+    cost = compiled.cost_analysis()
+    return CostSample(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_hbm=float(cost.get("bytes accessed", 0.0)),
+        collectives=collective_traffic(compiled.as_text()))
+
+
+def roofline_terms(sample: CostSample) -> dict:
+    """Three per-device roofline terms in seconds + the dominant one."""
+    t_compute = sample.flops / PEAK_FLOPS
+    t_memory = sample.bytes_hbm / HBM_BW
+    t_coll = sample.collectives.get("total", 0.0) / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}

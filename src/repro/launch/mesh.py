@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run pins the device
+count via XLA_FLAGS before any jax call, while tests/benches must keep the
+default single device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod topology: 16x16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: ``data`` (DP / FSDP), ``model`` (TP / EP); ``pod`` is the DCI-
+    connected data-parallel axis added in the multi-pod configuration.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Degenerate mesh over the locally visible devices (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

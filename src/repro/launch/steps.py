@@ -1,0 +1,298 @@
+"""pjit-able train / prefill / serve steps + ShapeDtypeStruct input specs.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the train/serve drivers execute for real.  Everything here is a
+pure function of (abstract) arrays with static (cfg, ctx) — no globals.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from repro.models.scan_lib import scan as _scan
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.core.qmodel import QuantContext, QuantMode
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.optim import adamw, adafactor, clip_by_global_norm
+from repro.optim.optimizers import Optimizer, OptState
+
+__all__ = ["pick_optimizer", "build_train_step", "build_prefill_step",
+           "build_serve_step", "input_specs", "abstract_params",
+           "abstract_opt_state", "abstract_cache", "param_count"]
+
+ADAFACTOR_THRESHOLD = 30e9  # params; above this AdamW state cannot fit v5e
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    leaves = jax.tree_util.tree_leaves(abstract_params(cfg))
+    return sum(int(functools.reduce(lambda a, b: a * b, l.shape, 1))
+               for l in leaves)
+
+
+def pick_optimizer(cfg: ModelConfig) -> Optimizer:
+    return adafactor() if param_count(cfg) > ADAFACTOR_THRESHOLD else adamw()
+
+
+def abstract_opt_state(cfg: ModelConfig, opt: Optimizer) -> Any:
+    return jax.eval_shape(lambda: opt.init(abstract_params(cfg)))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
+    return jax.eval_shape(lambda: M.init_cache(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model inputs for one assigned shape cell.
+
+    train/prefill: token batch (+ stub encoder features for [audio]);
+    decode: one new token + the KV/state cache at seq_len + position scalar.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok(b, s), "labels": tok(b, s),
+                 "mask": jax.ShapeDtypeStruct((b, s), jnp.float32)}
+        if cfg.family == "audio":
+            batch["encoder_features"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(b, s)}
+        if cfg.family == "audio":
+            batch["encoder_features"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+
+    # decode: one token against a cache of length seq_len
+    return {"tokens": tok(b, 1),
+            "cache": abstract_cache(cfg, b, s),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def batch_specs_tree(batch: dict, mesh: Mesh) -> dict:
+    spec = {}
+    for k, v in batch.items():
+        spec[k] = shd.batch_sharding(mesh, v.ndim)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, ctx: QuantContext, opt: Optimizer,
+                     lr_fn, *, remat: bool = True, clip_norm: float = 1.0,
+                     accum_steps: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    accum_steps > 1 runs gradient accumulation over microbatches (batch dim
+    split A x B/A, fp32 grad accumulator sharded like the params).  Large
+    configs need it: the per-layer saved-activation stack scales with the
+    per-step batch, so e.g. deepseek-67b train_4k at global batch 256 on
+    256 chips saves 95 x 16 x 4096 x 8192 x 2B = 102 GB/device without
+    accumulation vs 6.4 GB at accum=16.
+    """
+
+    def grads_of(params, batch):
+        def loss_of(p):
+            return M.loss_fn(p, batch, cfg, ctx, remat=remat)
+
+        return jax.value_and_grad(loss_of, has_aux=True)(params)
+
+    def train_step(params, opt_state: OptState, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, _), g = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            (g_sum, loss_sum), _ = _scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            loss = loss_sum / accum_steps
+            metrics = {"nll": loss}
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(opt_state.step)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, ctx: QuantContext):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg, ctx)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, ctx: QuantContext):
+    """One batched decode step (greedy sampling of the next token)."""
+
+    def serve_step(params, tokens, cache, pos):
+        logits, cache = M.decode_step(params, tokens, cache, pos, cfg, ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# jit wiring with shardings for a given mesh
+# ---------------------------------------------------------------------------
+
+SERVE_FSDP_BYTES = 12e9  # replicate serve weights across data below this
+
+
+def serve_needs_fsdp(cfg: ModelConfig, mesh: Mesh, bytes_per_param=2) -> bool:
+    """Serving re-gathers FSDP weights EVERY decode step (measured: 128 GB
+    per token on qwen3-32b decode_32k — §Perf iteration D).  Below
+    ``SERVE_FSDP_BYTES``/device the weights are replicated across the data
+    axis instead.  MoE expert stacks are excluded: serve mode shards them
+    2-D (expert x data, never gathered — §Perf V4), so only the NON-expert
+    params need to fit replicated-over-data."""
+    n = param_count(cfg)
+    if cfg.moe is not None:
+        m = cfg.moe
+        n -= (cfg.n_layers - m.n_dense_layers) * m.e_padded * 3             * cfg.d_model * m.d_expert
+    return n * bytes_per_param / mesh.shape["model"] > SERVE_FSDP_BYTES
+
+
+def default_accum_steps(cfg: ModelConfig, shape: ShapeConfig,
+                        mesh: Mesh) -> int:
+    """Microbatch so each data shard sees ~1 sequence per micro-step on
+    >10B-param configs; small models run the whole batch in one step."""
+    if param_count(cfg) < 10e9:
+        return 1
+    ds = _data_size(mesh)
+    return max(1, shape.global_batch // ds)
+
+
+def jit_train_step(cfg: ModelConfig, ctx: QuantContext, mesh: Mesh,
+                   opt: Optimizer, lr_fn, *, remat: bool = True,
+                   fsdp: bool = True, accum_steps: int = 1):
+    params_abs = abstract_params(cfg)
+    p_spec = shd.param_sharding_rules(params_abs, mesh, fsdp=fsdp)
+    opt_abs = abstract_opt_state(cfg, opt)
+    o_spec = _opt_spec_like(opt_abs, p_spec)
+    step = build_train_step(cfg, ctx, opt, lr_fn, remat=remat,
+                            accum_steps=accum_steps)
+    bspec = shd.batch_sharding(mesh, 2)
+
+    def batch_spec_of(abs_batch):
+        return {k: shd.batch_sharding(mesh, v.ndim)
+                for k, v in abs_batch.items()}
+
+    def wire(abs_batch):
+        in_shardings = (
+            jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec,
+                         is_leaf=_is_pspec),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), o_spec,
+                         is_leaf=_is_pspec),
+            jax.tree.map(lambda s: NamedSharding(mesh, s),
+                         batch_spec_of(abs_batch), is_leaf=_is_pspec),
+        )
+        out_shardings = (in_shardings[0], in_shardings[1], None)
+        return jax.jit(step, in_shardings=in_shardings,
+                       out_shardings=out_shardings)
+
+    return step, wire, (params_abs, opt_abs, p_spec, o_spec)
+
+
+def _is_pspec(x):
+    return isinstance(x, P)
+
+
+def _opt_spec_like(opt_abs: Any, p_spec: Any) -> Any:
+    """Moments inherit their param's spec (ZeRO-1); factored adafactor rows/
+    cols inherit the matching prefix; scalars replicate."""
+    p_flat, p_tree = jax.tree_util.tree_flatten(p_spec,
+                                                is_leaf=_is_pspec)
+
+    def like(sub, spec):
+        if sub is None:
+            return None
+        if isinstance(sub, tuple):          # adafactor (row, col)
+            row_spec = P(*spec[:-1]) if len(spec) else P()
+            col_spec = P(*(list(spec[:-2]) + [spec[-1]])) if len(spec) >= 2 \
+                else P()
+            return (row_spec, col_spec)
+        return spec
+
+    def map_state(field):
+        if field is None:
+            return None
+        leaves = p_tree.flatten_up_to(field)
+        return p_tree.unflatten([like(l, s) for l, s in zip(leaves, p_flat)])
+
+    return OptState(step=P(), m=map_state(opt_abs.m), v=map_state(opt_abs.v))
+
+
+def jit_serve_step(cfg: ModelConfig, ctx: QuantContext, mesh: Mesh,
+                   shape: ShapeConfig, *, fsdp: bool = True):
+    """jit'd decode step with full sharding wiring for one decode cell."""
+    params_abs = abstract_params(cfg)
+    p_spec = shd.param_sharding_rules(params_abs, mesh, fsdp=fsdp,
+                                      serve=True)
+    cache_abs = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_spec = shd.cache_sharding_rules(cache_abs, mesh)
+    step = build_serve_step(cfg, ctx)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=_is_pspec)
+    tok_spec = NamedSharding(mesh, shd.batch_sharding(mesh, 2)
+                             if shape.global_batch % _data_size(mesh) == 0
+                             else P(None, None))
+    jitted = jax.jit(step, in_shardings=(ns(p_spec), tok_spec, ns(c_spec),
+                                         NamedSharding(mesh, P())),
+                     out_shardings=(tok_spec, ns(c_spec)))
+    return jitted, (params_abs, cache_abs, p_spec, c_spec)
+
+
+def jit_prefill_step(cfg: ModelConfig, ctx: QuantContext, mesh: Mesh,
+                     shape: ShapeConfig, *, fsdp: bool = True):
+    params_abs = abstract_params(cfg)
+    p_spec = shd.param_sharding_rules(params_abs, mesh, fsdp=fsdp,
+                                      serve=True)
+    step = build_prefill_step(cfg, ctx)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=_is_pspec)
+    specs = input_specs(cfg, shape)
+    b_spec = {k: NamedSharding(mesh, shd.batch_sharding(mesh, v.ndim))
+              for k, v in specs["batch"].items()}
+    jitted = jax.jit(step, in_shardings=(ns(p_spec), b_spec))
+    return jitted, (params_abs, specs["batch"], p_spec)
+
+
+def _data_size(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

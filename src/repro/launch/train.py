@@ -1,0 +1,128 @@
+"""Production training driver: data pipeline + pjit train step + async
+checkpointing + fault-tolerant supervision, wired per DESIGN §5.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3_2_1b \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/run1 [--smoke] \
+        [--mode fake] [--accum 2] [--compress-grads]
+
+On a real cluster this process runs per host under ``jax.distributed``;
+here it drives the locally visible devices.  The RunSupervisor restart loop
+(restore latest commit -> re-mesh -> continue) is exercised end-to-end by
+tests/test_fault_tolerance.py and examples/fault_tolerant_train.py.
+
+XLA runtime flags for straggler mitigation at scale (documented, applied by
+the launcher environment, not here):
+    --xla_tpu_enable_megascale_barrier=true
+    MEGASCALE_TIMEOUT_SECONDS / slow-collective watchdogs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, get_smoke_config
+from repro.core.qmodel import QuantContext, QuantMode
+from repro.data import ShardedLoader, SyntheticLMStream
+from repro.distributed import sharding as shd
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.launch import steps as S
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
+from repro.optim.schedule import warmup_cosine
+
+
+def train(arch: str, steps: int, *, batch: int = 8, seq: int = 128,
+          ckpt_dir: str | None = None, smoke: bool = True,
+          mode: str = "fp", lr: float = 3e-3, accum: int = 1,
+          ckpt_every: int = 50, log_every: int = 10, seed: int = 0,
+          compress_grads: bool = False) -> dict:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    ctx = QuantContext(mode=QuantMode(mode))
+    mesh = make_local_mesh()
+    opt = S.pick_optimizer(cfg)
+    lr_fn = warmup_cosine(lr, max(steps // 10, 1), steps)
+    monitor = HeartbeatMonitor(n_hosts=jax.process_count())
+
+    with mesh, shd.activation_sharding(mesh):
+        step_fn, wire, (params_abs, opt_abs, p_spec, o_spec) = \
+            S.jit_train_step(cfg, ctx, mesh, opt, lr_fn, remat=False,
+                             fsdp=False, accum_steps=accum)
+
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        opt_state = opt.init(params)
+        start_step = 0
+        ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+        if ckpt and ckpt.latest_step() is not None:
+            state, extra = ckpt.restore(
+                jax.eval_shape(lambda: {"params": params, "opt": opt_state}))
+            params, opt_state = state["params"], state["opt"]
+            start_step = extra.get("step", ckpt.latest_step())
+            print(f"resumed from step {start_step}")
+
+        stream = SyntheticLMStream(
+            cfg.vocab_size, seq, batch, seed=seed,
+            encoder_seq=cfg.encdec.encoder_seq if cfg.family == "audio"
+            else None,
+            d_model=cfg.d_model if cfg.family == "audio" else None)
+        loader = ShardedLoader(stream, shardings={}, start_step=start_step)
+
+        jitted = jax.jit(step_fn)
+        losses = []
+        t_start = time.time()
+        try:
+            for _ in range(start_step, steps):
+                step_i, b = next(loader)
+                t0 = time.time()
+                params, opt_state, metrics = jitted(params, opt_state, b)
+                monitor.beat(jax.process_index(), time.time() - t0)
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                if step_i % log_every == 0:
+                    print(f"step {step_i:5d} loss {loss:.4f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"gnorm {float(metrics['grad_norm']):.2f} "
+                          f"({time.time()-t0:.2f}s)")
+                if ckpt and step_i and step_i % ckpt_every == 0:
+                    ckpt.save(step_i, {"params": params, "opt": opt_state},
+                              extra={"step": step_i,
+                                     "data_state": loader.state()})
+        finally:
+            loader.close()
+            if ckpt:
+                ckpt.save(steps, {"params": params, "opt": opt_state},
+                          extra={"step": steps}, blocking=True)
+
+    return {"params": params, "losses": losses,
+            "wall_s": time.time() - t_start}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (default: smoke-scale)")
+    ap.add_argument("--mode", default="fp",
+                    choices=["fp", "fake", "fake_sf", "int"])
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args(argv)
+    out = train(args.arch, args.steps, batch=args.batch, seq=args.seq,
+                ckpt_dir=args.ckpt_dir, smoke=not args.full, mode=args.mode,
+                lr=args.lr, accum=args.accum,
+                compress_grads=args.compress_grads)
+    print(f"final loss {out['losses'][-1]:.4f} "
+          f"(first {out['losses'][0]:.4f}) in {out['wall_s']:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

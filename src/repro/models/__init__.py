@@ -1,0 +1,1 @@
+"""Model zoo: composable JAX layers + per-family assembly (see model.py)."""

@@ -1,0 +1,109 @@
+"""Shared model building blocks: norms, rope, embeddings, initializers.
+
+All layers are functional: ``f(params, x, ...) -> y`` with params as plain
+dict pytrees, so stacks of layers can be ``jax.lax.scan``'d (params stacked
+on a leading layer axis) and sharded with NamedSharding without framework
+machinery.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qmodel import QuantContext, qlinear
+
+__all__ = ["rmsnorm", "fold_rmsnorm", "rope_freqs", "apply_rope", "embed",
+           "unembed", "dense_init", "Initializer", "linear"]
+
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 accumulation but NO full-tensor f32 materialization.
+
+    ``x.astype(f32)`` upcasts of the whole activation get hoisted out of
+    scan loops by XLA into (L,B,S,d) f32 buffers (observed +8.6 GB/device);
+    instead the mean-square uses a bf16xbf16->f32 dot (native mixed
+    accumulation) and the scale is applied in the activation dtype.
+    """
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32) / x.shape[-1]
+    scale = jax.lax.rsqrt(ms + eps)[..., None] * gain.astype(jnp.float32)
+    return x * scale.astype(x.dtype)
+
+
+def fold_rmsnorm(gain: jax.Array, w: jax.Array) -> jax.Array:
+    """Paper's BN-folding analogue: absorb a norm gain into the following
+    linear's weight (W <- diag(g) @ W) so the norm emits no quant point."""
+    return gain[:, None].astype(w.dtype) * w
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D). positions: (..., S) int32.
+
+    Angles are computed in f32 (positions up to 512k need the mantissa) but
+    the rotation itself runs in the activation dtype: upcasting x to f32
+    here creates whole-(L,B,S,d) f32 buffers once XLA hoists the convert
+    out of the layer scan (see rmsnorm note).  bf16 cos/sin adds rotation
+    error of the same order as bf16 matmul rounding.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos = jnp.cos(angles).astype(x.dtype)
+    sin = jnp.sin(angles).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def linear(ctx: QuantContext, name: str, x: jax.Array, w: jax.Array,
+           b: Optional[jax.Array] = None) -> jax.Array:
+    """Unified-module linear — alias keeping model code terse."""
+    return qlinear(ctx, name, x, w, b)
+
+
+def embed(table: jax.Array, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return table[tokens].astype(dtype)
+
+
+def unembed(ctx: QuantContext, x: jax.Array, table: jax.Array) -> jax.Array:
+    """LM head.  Logits stay in the activation dtype; the loss accumulates
+    its reductions in f32 (f32 logits would add ~4x2 GB/device of transients
+    at vocab 128k x 1M tokens)."""
+    return qlinear(ctx, "lm_head", x, table)
+
+
+class Initializer:
+    """Deterministic, cheap initializer. fan-in scaled normal."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self._key = key
+        self.dtype = dtype
+
+    def next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def dense(self, shape, fan_in: Optional[int] = None) -> jax.Array:
+        fan = fan_in if fan_in is not None else shape[0]
+        std = 1.0 / math.sqrt(max(fan, 1))
+        return (jax.random.truncated_normal(
+            self.next_key(), -2.0, 2.0, shape, jnp.float32) * std
+        ).astype(self.dtype)
+
+    def ones(self, shape) -> jax.Array:
+        return jnp.ones(shape, jnp.float32)
+
+    def zeros(self, shape) -> jax.Array:
+        return jnp.zeros(shape, self.dtype)
+
+
+def dense_init(key: jax.Array, dtype=jnp.bfloat16) -> Initializer:
+    return Initializer(key, dtype)

@@ -1,0 +1,194 @@
+"""Feed-forward layers: SwiGLU MLP and token-choice MoE (shared + routed).
+
+Quantization placement (paper Fig. 1(b) generalized): the SwiGLU gate
+product ``silu(w1 x) * (w3 x)`` is ONE unified module — a single activation
+quant point after the product feeds the down-projection, instead of three
+separate points.  The MoE router stays fp32 (tiny, numerically sensitive —
+same reasoning as softmax in the paper).
+
+MoE dispatch is capacity-based sort-free scatter (MaxText-style):
+  1. top-k routing, probs renormalized;
+  2. each (token, k) pair gets a position-in-expert by ranking;
+  3. pairs scatter into an (E, C, d) buffer (overflow dropped — standard
+     token dropping), experts run as ONE batched einsum (MXU-friendly,
+     shards E over the model axis = expert parallelism);
+  4. results gather back weighted by router probs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.qmodel import QuantContext
+from repro.distributed.sharding import constrain, data_shards
+from repro.models.common import linear
+
+__all__ = ["init_mlp", "mlp", "init_moe", "moe", "moe_capacity"]
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu_sq":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def init_mlp(init, d_model: int, d_ff: int, act: str = "silu") -> dict:
+    p = {"w1": init.dense((d_model, d_ff)),
+         "w2": init.dense((d_ff, d_model), fan_in=d_ff)}
+    if act in ("silu",):  # gated
+        p["w3"] = init.dense((d_model, d_ff))
+    return p
+
+
+def mlp(ctx: QuantContext, p: dict, x: jax.Array, act: str = "silu",
+        name: str = "mlp") -> jax.Array:
+    if "w3" in p:
+        g = _act(linear(ctx, f"{name}/w1", x, p["w1"]), act)
+        u = linear(ctx, f"{name}/w3", x, p["w3"])
+        h = g * u   # unified-module boundary: ONE quant point after product
+    else:
+        h = _act(linear(ctx, f"{name}/w1", x, p["w1"]), act)
+    h = constrain(h, ("batch",) + (None,) * (h.ndim - 2) + ("ff",))
+    return linear(ctx, f"{name}/w2", h, p["w2"])
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _qexpert(ctx: QuantContext, name: str, a: jax.Array, w: jax.Array
+             ) -> jax.Array:
+    """Quantized batched expert matmul (E,C,d) x (E,d,f) -> (E,C,f).
+
+    Per-expert weights share one fractional bit per tensor-stack (scan-
+    homogeneous); int mode runs int8 x int8 -> int32 with a shift requant,
+    the paper's Eq. 3 applied expert-parallel.
+    """
+    from repro.core.qmodel import QuantMode
+    from repro.core.qscheme import dequant, fake_quant, quant, shift_requant
+
+    dn = (((2,), (1,)), ((0,), (0,)))
+    if ctx.mode == QuantMode.FP:
+        return jax.lax.dot_general(a, w.astype(a.dtype), dn)
+    mb = ctx.bits_for(name)
+    if ctx.mode == QuantMode.FAKE:
+        aq = fake_quant(a, mb.n_x, ctx.bits)
+        wq = fake_quant(w, mb.n_w, ctx.bits).astype(a.dtype)
+        return jax.lax.dot_general(aq, wq, dn)
+    a_i = quant(a, mb.n_x, ctx.bits)
+    w_i = w if w.dtype == jnp.int8 else quant(w, mb.n_w, ctx.bits)
+    acc = jax.lax.dot_general(a_i, w_i, dn,
+                              preferred_element_type=jnp.int32)
+    o_i = shift_requant(acc, (mb.n_x + mb.n_w) - mb.n_o, bits=ctx.bits)
+    return dequant(o_i, mb.n_o, out_dtype=a.dtype)
+
+
+def moe_capacity(n_tokens: int, mcfg: MoEConfig) -> int:
+    """Per-expert capacity C = ceil(T * top_k / E * cf), padded to 128 lanes."""
+    c = int(n_tokens * mcfg.top_k / mcfg.n_experts * mcfg.capacity_factor)
+    return max(128, -(-c // 128) * 128)
+
+
+def init_moe(init, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, de = cfg.d_model, m.d_expert
+    e = m.e_padded  # stacks padded to the TP axis; router covers real E only
+    p = {
+        "router": init.dense((d, m.n_experts)).astype(jnp.float32),
+        # stacked expert weights: (E, d, de) — ONE batched matmul, EP-shardable
+        "w1": init.dense((e, d, de)),
+        "w3": init.dense((e, d, de)),
+        "w2": init.dense((e, de, d), fan_in=de),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(init, d, m.d_expert * m.n_shared, cfg.act)
+    return p
+
+
+def moe(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
+        name: str = "moe") -> jax.Array:
+    """Token-choice top-k MoE over a (B, S, d) activation.
+
+    Dispatch is HIERARCHICAL (EP-style): ranking, dropping and the (TK, d)
+    token-row intermediates are all computed per data-shard (the cumsum and
+    gathers reshape to a leading ``data_shards()`` axis, so GSPMD keeps them
+    local); each shard owns its own slice of every expert's capacity.  The
+    only cross-device traffic is the expert-buffer exchange (the EP
+    all-to-all) — a flat global ranking instead makes GSPMD replicate the
+    (8.4M, 7168) dispatch rows and all-reduce them (observed 240 GB/device
+    buffers on deepseek-v3 train_4k).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    ds = data_shards()
+    xt = constrain(x.reshape(t, d), ("batch", None))
+    cap_local = -(-moe_capacity(t, m) // ds)
+    cap = cap_local * ds
+
+    # --- routing (fp32) ---
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)             # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)   # renormalize
+
+    # --- shard-local position-in-expert ranking ---
+    tk = t * m.top_k
+    tkl = tk // ds                                           # pairs per shard
+    flat_e = constrain(top_e.reshape(ds, tkl), ("batch", None))
+    flat_p = constrain(top_p.reshape(ds, tkl), ("batch", None))
+    one_hot = jax.nn.one_hot(flat_e, m.e_padded, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(one_hot, axis=1) * one_hot         # local cumsum
+    rank = jnp.sum(pos_in_e, axis=-1) - 1                    # (ds, TK/ds)
+    keep = rank < cap_local                                  # drop overflow
+    safe_rank = jnp.where(keep, rank, cap_local - 1)
+    ds_iota = jnp.arange(ds)[:, None]
+
+    # --- dispatch rows: pure broadcast (no gather -> no GSPMD reshard) ---
+    rows = jnp.broadcast_to(xt[:, None, :], (t, m.top_k, d))
+    rows = constrain(rows.reshape(ds, tkl, d), ("batch", None, None))
+    rows = jnp.where(keep[..., None], rows, 0)
+
+    # --- shard-local scatter into per-shard expert buffers ---
+    # buf_parts dims: (shard, E, C_local, d); dynamic indices touch only
+    # the UNSHARDED dims 1-2, so the scatter stays device-local.
+    buf_parts = jnp.zeros((ds, m.e_padded, cap_local, d), xt.dtype)
+    buf_parts = buf_parts.at[ds_iota, flat_e, safe_rank].add(rows)
+    buf_parts = constrain(buf_parts, ("batch", None, None, None))
+
+    # --- THE EP exchange: (shard, E, C_l, d) -> (E, shard*C_l, d) ---
+    # a transpose across the sharded dim = all-to-all, the only global
+    # communication in the MoE layer.
+    buf = buf_parts.transpose(1, 0, 2, 3).reshape(m.e_padded, cap, d)
+    buf = constrain(buf, ("expert", "batch", None))
+
+    # --- expert FFN: batched SwiGLU einsum, E shards over the model axis ---
+    g = jax.nn.silu(_qexpert(ctx, f"{name}/w1", buf, p["w1"]))
+    u = _qexpert(ctx, f"{name}/w3", buf, p["w3"])
+    h = constrain(g * u, ("expert", "batch", None))          # joint quant point
+    out_buf = constrain(_qexpert(ctx, f"{name}/w2", h, p["w2"]),
+                        ("expert", "batch", None))
+
+    # --- reverse EP exchange + shard-local gather + combine ---
+    out_parts = out_buf.reshape(m.e_padded, ds, cap_local, d) \
+        .transpose(1, 0, 2, 3)
+    out_parts = constrain(out_parts, ("batch", None, None, None))
+    gathered = out_parts[ds_iota, flat_e, safe_rank]         # (ds, TK/ds, d)
+    weighted = jnp.where(keep[..., None], gathered, 0) * \
+        flat_p[..., None].astype(gathered.dtype)
+    out = jnp.sum(weighted.reshape(t, m.top_k, d), axis=1).astype(x.dtype)
+    out = constrain(out, ("batch", None))
+
+    if m.n_shared:
+        out = out + mlp(ctx, p["shared"], xt, cfg.act, name=f"{name}/shared")
+    return out.reshape(b, s, d)

@@ -1,0 +1,429 @@
+"""Top-level model API: init / forward / prefill / decode / loss for every
+architecture family, built on the block zoo in ``transformer.py``.
+
+Layer stacks are scanned (stacked params, leading axis = depth).  All entry
+points are pure functions of (params, batch) with static (cfg, ctx), so they
+jit/pjit directly and ``jax.eval_shape`` gives allocation-free param trees
+for the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from repro.models.scan_lib import scan as _scan
+
+from repro.configs.base import ModelConfig
+from repro.core.qmodel import QuantContext
+from repro.distributed.sharding import constrain
+from repro.models import attention as att
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.common import Initializer, embed, rmsnorm, unembed
+
+__all__ = ["init_params", "init_cache", "forward", "prefill", "decode_step",
+           "loss_fn"]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _stack_init(key: jax.Array, n: int, fn, dtype) -> Any:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: fn(Initializer(k, dtype)))(keys)
+
+
+def _sinusoid(seq: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)[None]
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dt = _dtype(cfg)
+    k_embed, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    init0 = Initializer(k_embed, dt)
+    params: dict[str, Any] = {
+        "embed": init0.dense((cfg.vocab_padded, cfg.d_model)),
+        "ln_f": init0.ones((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = Initializer(k_head, dt).dense(
+            (cfg.d_model, cfg.vocab_padded))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = _stack_init(
+            k_blocks, cfg.n_layers, lambda i: tfm.init_dense_block(i, cfg), dt)
+    elif fam == "moe":
+        nd = cfg.moe.n_dense_layers
+        if nd:
+            params["dense_blocks"] = _stack_init(
+                k_extra, nd, lambda i: tfm.init_dense_block(i, cfg), dt)
+        params["blocks"] = _stack_init(
+            k_blocks, cfg.n_layers - nd,
+            lambda i: tfm.init_moe_block(i, cfg), dt)
+    elif fam == "audio":
+        params["enc_blocks"] = _stack_init(
+            k_extra, cfg.encdec.n_encoder_layers,
+            lambda i: tfm.init_encoder_block(i, cfg), dt)
+        params["ln_enc"] = init0.ones((cfg.d_model,))
+        params["blocks"] = _stack_init(
+            k_blocks, cfg.n_layers, lambda i: tfm.init_decoder_block(i, cfg), dt)
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(
+            k_blocks, cfg.n_layers, lambda i: tfm.init_rwkv_block(i, cfg), dt)
+    elif fam == "hybrid":
+        g = cfg.hybrid.attn_every
+        n_groups = cfg.n_layers // g
+        params["blocks"] = {"mamba": _stack_init(
+            k_blocks, n_groups,
+            lambda i: _stack_init(i.next_key(), g,
+                                  lambda j: tfm.init_mamba_block(j, cfg), dt),
+            dt)}
+        params["shared"] = tfm.init_shared_attn(Initializer(k_extra, dt), cfg)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
+    dt = _dtype(cfg)
+    kv_dt = jnp.int8 if cfg.kv_cache_bits == 8 else dt  # Eq.-1 codes
+    hd = cfg.resolved_head_dim
+    fam = cfg.family
+
+    def kv(n_layers):
+        return att.KVCache(
+            k=jnp.zeros((n_layers, batch, max_seq, cfg.n_kv_heads, hd), kv_dt),
+            v=jnp.zeros((n_layers, batch, max_seq, cfg.n_kv_heads, hd), kv_dt))
+
+    def mla(n_layers):
+        m = cfg.mla
+        return att.MLACache(
+            c_kv=jnp.zeros((n_layers, batch, max_seq, m.kv_lora_rank), dt),
+            k_pe=jnp.zeros((n_layers, batch, max_seq, m.qk_rope_head_dim), dt))
+
+    if fam in ("dense", "vlm"):
+        return {"kv": mla(cfg.n_layers) if cfg.mla else kv(cfg.n_layers)}
+    if fam == "moe":
+        nd = cfg.moe.n_dense_layers
+        c = {"kv": mla(cfg.n_layers - nd) if cfg.mla else kv(cfg.n_layers - nd)}
+        if nd:
+            c["kv_dense"] = mla(nd) if cfg.mla else kv(nd)
+        return c
+    if fam == "audio":
+        enc_seq = cfg.encdec.encoder_seq
+        return {"kv": kv(cfg.n_layers),
+                "memory": jnp.zeros((batch, enc_seq, cfg.d_model), dt)}
+    if fam == "ssm":
+        st = rwkv_lib.zero_state(cfg, batch, dt)
+        return {"state": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), st)}
+    if fam == "hybrid":
+        g = cfg.hybrid.attn_every
+        n_groups = cfg.n_layers // g
+        st = ssm_lib.zero_state(cfg, batch, dt)
+        return {
+            "ssm": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_groups, g) + x.shape).copy(), st),
+            "kv": kv(n_groups),
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+_REMAT_POLICIES = {
+    "full": None,  # jax.checkpoint default: save nothing, recompute all
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, ctx: QuantContext,
+            *, remat: bool | str = False, cache: Any = None
+            ) -> tuple[jax.Array, Any]:
+    """Full-sequence forward.  If ``cache`` is given (prefill), K/V (or
+    recurrent states) are written into it and returned.  Returns
+    (logits fp32 (B,S,V), cache).
+
+    remat: False (save everything) | 'full' / True (recompute each block in
+    backward — the production default: saved state per layer is ONE bf16
+    residual) | 'dots' (save matmul outputs).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    dt = _dtype(cfg)
+    x = constrain(embed(params["embed"], tokens, dt), ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    fam = cfg.family
+    new_cache = None
+
+    def maybe_remat(f):
+        if not remat:
+            return f
+        if remat in (True, "full"):
+            return jax.checkpoint(f)
+        return jax.checkpoint(
+            f, policy=getattr(jax.checkpoint_policies, _REMAT_POLICIES[remat]))
+
+    if fam in ("dense", "vlm", "moe"):
+        block = tfm.moe_block if fam == "moe" else tfm.dense_block
+
+        def body_nocache(x, p_l):
+            y, _ = block(ctx, p_l, x, cfg, positions=positions)
+            return y, None
+
+        def body_cache(x, inp):
+            p_l, c_l = inp
+            y, c = block(ctx, p_l, x, cfg, positions=positions,
+                         cache=c_l, cache_pos=0)
+            return y, c
+
+        if fam == "moe" and cfg.moe.n_dense_layers:
+            def dense_body_nocache(x, p_l):
+                y, _ = tfm.dense_block(ctx, p_l, x, cfg, positions=positions)
+                return y, None
+
+            def dense_body_cache(x, inp):
+                p_l, c_l = inp
+                y, c = tfm.dense_block(ctx, p_l, x, cfg, positions=positions,
+                                       cache=c_l, cache_pos=0)
+                return y, c
+
+            if cache is None:
+                x, _ = _scan(maybe_remat(dense_body_nocache), x,
+                                    params["dense_blocks"])
+            else:
+                x, kvd = _scan(maybe_remat(dense_body_cache), x,
+                                      (params["dense_blocks"], cache["kv_dense"]))
+        if cache is None:
+            x, _ = _scan(maybe_remat(body_nocache), x, params["blocks"])
+        else:
+            x, kvm = _scan(maybe_remat(body_cache), x,
+                                  (params["blocks"], cache["kv"]))
+            new_cache = {"kv": kvm}
+            if fam == "moe" and cfg.moe.n_dense_layers:
+                new_cache["kv_dense"] = kvd
+
+    elif fam == "audio":
+        memory = _encode(params, batch, cfg, ctx, remat)
+
+        def dec_body(x, inp):
+            p_l, c_l = inp
+            y, c = tfm.decoder_block(ctx, p_l, x, memory, cfg,
+                                     positions=positions, cache=c_l,
+                                     cache_pos=0 if c_l is not None else None)
+            return y, c
+
+        if cache is None:
+            def dec_nocache(x, p_l):
+                y, _ = tfm.decoder_block(ctx, p_l, x, memory, cfg,
+                                         positions=positions)
+                return y, None
+            x, _ = _scan(maybe_remat(dec_nocache), x, params["blocks"])
+        else:
+            x, kvm = _scan(maybe_remat(dec_body), x,
+                                  (params["blocks"], cache["kv"]))
+            new_cache = {"kv": kvm, "memory": memory}
+
+    elif fam == "ssm":
+        states = cache["state"] if cache is not None else jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (cfg.n_layers,) + z.shape).copy(),
+            rwkv_lib.zero_state(cfg, b, dt))
+
+        def body(x, inp):
+            p_l, st_l = inp
+            y, st = tfm.rwkv_block_fwd(ctx, p_l, x, cfg, state=st_l)
+            return y, st
+
+        x, new_states = _scan(maybe_remat(body), x,
+                                     (params["blocks"], states))
+        if cache is not None:
+            new_cache = {"state": new_states}
+
+    elif fam == "hybrid":
+        g = cfg.hybrid.attn_every
+        n_groups = cfg.n_layers // g
+        c = cache if cache is not None else init_cache(cfg, b, s)
+        x_embed = x
+
+        def body(carry, inp):
+            x_c = carry
+            p_g, ssm_g, kv_g = inp
+            y, st, kv = tfm.hybrid_group_fwd(
+                ctx, p_g, params["shared"], x_c, x_embed, cfg,
+                positions=positions, ssm_states=ssm_g,
+                attn_cache=kv_g, cache_pos=0)
+            return y, (st, kv)
+
+        x, (new_ssm, new_kv) = _scan(
+            maybe_remat(body), x,
+            (params["blocks"]["mamba"], c["ssm"], c["kv"]))
+        if cache is not None:
+            new_cache = {"ssm": new_ssm, "kv": new_kv}
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(unembed(ctx, x, head), ("batch", None, "vocab"))
+    return logits, new_cache
+
+
+def _encode(params, batch, cfg, ctx, remat=False):
+    """Whisper encoder over stub frame embeddings (frontend per assignment)."""
+    feats = batch["encoder_features"]                       # (B, T, d) stub
+    x = feats.astype(_dtype(cfg)) + _sinusoid(
+        feats.shape[1], cfg.d_model, _dtype(cfg))
+
+    def body(x, p_l):
+        return tfm.encoder_block(ctx, p_l, x, cfg), None
+
+    f = jax.checkpoint(body) if remat else body
+    x, _ = _scan(f, x, params["enc_blocks"])
+    return rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def prefill(params, batch, cfg, ctx, max_seq: Optional[int] = None):
+    b, s = batch["tokens"].shape
+    cache = init_cache(cfg, b, max_seq or s)
+    logits, cache = forward(params, batch, cfg, ctx, cache=cache)
+    return logits[:, -1], cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, tokens: jax.Array, cache: Any, pos: jax.Array,
+                cfg: ModelConfig, ctx: QuantContext, batch: Optional[dict] = None
+                ) -> tuple[jax.Array, Any]:
+    """One serving step: tokens (B, 1) at absolute position ``pos`` (scalar),
+    KV/state cache from prefill.  Returns (logits (B, V), new cache)."""
+    b = tokens.shape[0]
+    dt = _dtype(cfg)
+    x = embed(params["embed"], tokens, dt)
+    positions = jnp.broadcast_to(pos[None, None] if pos.ndim == 0 else pos,
+                                 (b, 1))
+    fam = cfg.family
+    new_cache = dict(cache) if isinstance(cache, dict) else cache
+
+    if fam in ("dense", "vlm", "moe"):
+        block = tfm.moe_block if fam == "moe" else tfm.dense_block
+
+        def body(x, inp):
+            p_l, c_l = inp
+            y, c = block(ctx, p_l, x, cfg, positions=positions,
+                         cache=c_l, cache_pos=pos)
+            return y, c
+
+        if fam == "moe" and cfg.moe.n_dense_layers:
+            def dbody(x, inp):
+                p_l, c_l = inp
+                y, c = tfm.dense_block(ctx, p_l, x, cfg, positions=positions,
+                                       cache=c_l, cache_pos=pos)
+                return y, c
+            x, kvd = _scan(dbody, x,
+                                  (params["dense_blocks"], cache["kv_dense"]))
+            new_cache["kv_dense"] = kvd
+        x, kvm = _scan(body, x, (params["blocks"], cache["kv"]))
+        new_cache["kv"] = kvm
+
+    elif fam == "audio":
+        memory = cache["memory"]
+
+        def body(x, inp):
+            p_l, c_l = inp
+            y, c = tfm.decoder_block(ctx, p_l, x, memory, cfg,
+                                     positions=positions, cache=c_l,
+                                     cache_pos=pos)
+            return y, c
+
+        x, kvm = _scan(body, x, (params["blocks"], cache["kv"]))
+        new_cache["kv"] = kvm
+
+    elif fam == "ssm":
+        def body(x, inp):
+            p_l, st_l = inp
+            y, st = tfm.rwkv_block_decode(ctx, p_l, x, cfg, st_l)
+            return y, st
+
+        x, st = _scan(body, x, (params["blocks"], cache["state"]))
+        new_cache["state"] = st
+
+    elif fam == "hybrid":
+        x_embed = x
+
+        def body(x_c, inp):
+            p_g, ssm_g, kv_g = inp
+            y, st, kv = tfm.hybrid_group_fwd(
+                ctx, p_g, params["shared"], x_c, x_embed, cfg,
+                positions=positions, ssm_states=ssm_g, attn_cache=kv_g,
+                cache_pos=pos, decode=True)
+            return y, (st, kv)
+
+        x, (st, kv) = _scan(body, x,
+                                   (params["blocks"]["mamba"], cache["ssm"],
+                                    cache["kv"]))
+        new_cache = {"ssm": st, "kv": kv}
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(ctx, x, head)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, ctx: QuantContext,
+            *, remat: bool | str = "full") -> tuple[jax.Array, dict]:
+    """Next-token cross entropy (fp32 logsumexp) + z-loss regularizer.
+
+    The gold-logit pick uses a fused one-hot reduction instead of
+    take_along_axis: a vocab-dim gather makes GSPMD re-shard the logits to
+    full-batch (observed 33 GB/device temps); the one-hot product keeps
+    both batch and vocab shardings intact.
+    """
+    logits, _ = forward(params, batch, cfg, ctx, remat=remat)
+    targets = batch["labels"]
+    logits = logits[:, :-1]
+    targets = targets[:, 1:]
+    # stable CE with bf16 logits and f32 reduction accumulators: max/exp per
+    # element in bf16 (transient), sums in f32 — no (B,S,V) f32 buffers.
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    expd = jnp.exp(logits - m)
+    sumexp = jnp.sum(expd, axis=-1, dtype=jnp.float32)
+    lse = jnp.log(sumexp) + m[..., 0].astype(jnp.float32)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1, dtype=jnp.float32)
+    nll = lse - gold
+    mask = batch.get("mask")
+    if mask is not None:
+        mask = mask[:, 1:].astype(nll.dtype)
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        loss = jnp.mean(nll)
+    z_loss = 1e-4 * jnp.mean(lse * lse)
+    metrics = {"nll": loss, "z_loss": z_loss,
+               "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+    return loss + z_loss, metrics

@@ -1,0 +1,279 @@
+"""The paper's own model family: ResNet with BatchNorm — the faithful
+reproduction vehicle for Tables 1-3 / Fig. 2.
+
+This path exercises every element of the paper verbatim:
+  * BN folding into conv weights/biases at inference (paper §1.2.1),
+  * Fig. 1 cases a-d (conv / conv+ReLU / residual+ReLU / residual),
+  * Algorithm 1 sequential calibration over the dataflow plan,
+  * the integer-only serve path (int8 codes + shift constants),
+  * the unsigned post-ReLU fast path.
+
+`quantize_resnet` returns both the calibrated fractional bits AND the
+deployable integer artifacts, plus hooks used by the Fig. 2 stats bench.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet_paper import ResNetConfig
+from repro.core import calibrate, dataflow, integer_ops, qscheme
+from repro.models.common import Initializer
+
+__all__ = ["init_resnet", "resnet_forward", "fold_bn", "build_resnet_plan",
+           "quantize_resnet", "resnet_int_forward", "QuantizedResNet"]
+
+
+def init_resnet(cfg: ResNetConfig, key: jax.Array) -> dict:
+    init = Initializer(key, jnp.float32)
+    p: dict = {"stem": _conv_init(init, 3, cfg.stages[0], 3)}
+    blocks = []
+    for si, ch in enumerate(cfg.stages):
+        for bi in range(cfg.blocks_per_stage):
+            cin = cfg.stages[max(si - 1, 0)] if bi == 0 else ch
+            blk = {
+                "conv1": _conv_init(init, cin, ch, 3),
+                "conv2": _conv_init(init, ch, ch, 3),
+            }
+            if cin != ch:
+                blk["proj"] = _conv_init(init, cin, ch, 1)
+            blocks.append(blk)
+    p["blocks"] = blocks
+    p["head"] = {"w": init.dense((cfg.stages[-1], cfg.n_classes))
+                 .astype(jnp.float32),
+                 "b": jnp.zeros((cfg.n_classes,), jnp.float32)}
+    return p
+
+
+def _conv_init(init: Initializer, cin: int, cout: int, k: int) -> dict:
+    return {
+        "w": init.dense((k, k, cin, cout), fan_in=k * k * cin)
+        .astype(jnp.float32),
+        "bn_gamma": jnp.ones((cout,), jnp.float32),
+        "bn_beta": jnp.zeros((cout,), jnp.float32),
+        "bn_mean": jnp.zeros((cout,), jnp.float32),
+        "bn_var": jnp.ones((cout,), jnp.float32),
+    }
+
+
+def fold_bn(conv: dict, eps: float = 1e-5) -> tuple[jax.Array, jax.Array]:
+    """Paper §1.2.1: merge BN into the conv's weights and bias.
+
+    y = gamma * (conv(x) - mean) / sqrt(var + eps) + beta
+      = conv(x; W * s) + (beta - mean * s),  s = gamma / sqrt(var + eps)
+    """
+    s = conv["bn_gamma"] / jnp.sqrt(conv["bn_var"] + eps)
+    w = conv["w"] * s[None, None, None, :]
+    b = conv["bn_beta"] - conv["bn_mean"] * s
+    return w, b
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def resnet_forward(p: dict, x: jax.Array, cfg: ResNetConfig,
+                   collect: Optional[dict] = None) -> jax.Array:
+    """FP reference forward (BN pre-folded).  ``collect`` captures
+    intermediate module outputs for calibration (name -> array)."""
+
+    def log(name, v):
+        if collect is not None:
+            collect[name] = v
+        return v
+
+    w, b = fold_bn(p["stem"])
+    h = log("stem", jax.nn.relu(_conv(x, w, b)))
+    bi = 0
+    for si, ch in enumerate(cfg.stages):
+        for blk_i in range(cfg.blocks_per_stage):
+            blk = p["blocks"][bi]
+            stride = 2 if (blk_i == 0 and si > 0) else 1
+            w1, b1 = fold_bn(blk["conv1"])
+            h1 = log(f"b{bi}/conv1", jax.nn.relu(_conv(h, w1, b1, stride)))
+            w2, b2 = fold_bn(blk["conv2"])
+            h2 = log(f"b{bi}/conv2", _conv(h1, w2, b2))       # case (a)
+            if "proj" in blk:
+                wp, bp = fold_bn(blk["proj"])
+                sc = log(f"b{bi}/proj", _conv(h, wp, bp, stride))
+            else:
+                sc = h
+            h = log(f"b{bi}/add", jax.nn.relu(h2 + sc))       # case (c)
+            bi += 1
+    pooled = jnp.mean(h, axis=(1, 2))
+    return log("head", pooled @ p["head"]["w"] + p["head"]["b"])
+
+
+def build_resnet_plan(cfg: ResNetConfig) -> dataflow.QuantPlan:
+    """The op graph fed to the Fig. 1 fusion rules."""
+    K = dataflow.OpKind
+    nodes = [dataflow.OpNode("stem", K.LINEAR, ("in",), has_bias=True),
+             dataflow.OpNode("stem_relu", K.RELU, ("stem",))]
+    prev = "stem_relu"
+    bi = 0
+    for si, ch in enumerate(cfg.stages):
+        for blk_i in range(cfg.blocks_per_stage):
+            has_proj = (blk_i == 0 and si > 0) or (si == 0 and blk_i == 0 and False)
+            n1, n2 = f"b{bi}/conv1", f"b{bi}/conv2"
+            nodes += [
+                dataflow.OpNode(n1, K.LINEAR, (prev,), has_bias=True),
+                dataflow.OpNode(f"{n1}_relu", K.RELU, (n1,)),
+                dataflow.OpNode(n2, K.LINEAR, (f"{n1}_relu",), has_bias=True),
+            ]
+            sc = prev
+            if has_proj:
+                nodes.append(dataflow.OpNode(f"b{bi}/proj", K.LINEAR, (prev,),
+                                             has_bias=True))
+                sc = f"b{bi}/proj"
+            nodes += [
+                dataflow.OpNode(f"b{bi}/add", K.ADD, (n2, sc)),
+                dataflow.OpNode(f"b{bi}/add_relu", K.RELU, (f"b{bi}/add",)),
+            ]
+            prev = f"b{bi}/add_relu"
+            bi += 1
+    nodes.append(dataflow.OpNode("head", K.LINEAR, (prev,), has_bias=True))
+    return dataflow.build_plan(nodes)
+
+
+@dataclasses.dataclass
+class QuantizedResNet:
+    """Deploy artifacts: integer codes + shift bookkeeping (paper §1.2)."""
+
+    weights: dict            # name -> int8 W codes
+    biases: dict             # name -> int8 B codes
+    specs: dict              # name -> LinearQuantSpec
+    report: calibrate.CalibrationReport
+    n_in: int                # input activation fractional bits
+
+
+def quantize_resnet(p: dict, x_calib: jax.Array, cfg: ResNetConfig,
+                    n_bits: int = 8, tau: int = 4) -> QuantizedResNet:
+    """Algorithm 1 over the dataflow plan, sequential along the network.
+
+    Follows the paper exactly: a single calibration batch, grid search per
+    unified module, the chosen N_o threads forward as the next module's N_x.
+    """
+    collect: dict = {}
+    resnet_forward(p, x_calib, cfg, collect=collect)
+    report = calibrate.CalibrationReport()
+    weights, biases, specs = {}, {}, {}
+
+    # input quantization point (images in [0,1])
+    n_in = (n_bits - 1) - calibrate.search_window(x_calib, 0)[1]
+    xq = qscheme.fake_quant(x_calib, n_in, n_bits)
+
+    def calibrate_conv(name, conv, x_in, n_x, o_ref, stride, relu, fuse_relu):
+        w, b = fold_bn(conv)
+
+        def apply(xx, wq, bq):
+            y = _conv(xx, wq, bq, stride)
+            return jax.nn.relu(y) if fuse_relu else y
+
+        r = calibrate.calibrate_linear_module(
+            x_in, w, b, o_ref, apply, bits=n_bits, tau=tau,
+            out_unsigned=fuse_relu)
+        report.add(name, r)
+        weights[name] = qscheme.quant(w, r.n_w, n_bits)
+        biases[name] = qscheme.quant(b, r.n_b, n_bits)
+        specs[name] = integer_ops.LinearQuantSpec(
+            n_x=n_x, n_w=r.n_w, n_b=r.n_b, n_o=r.n_o, bits=n_bits,
+            out_unsigned=fuse_relu)
+        return qscheme.fake_quant(apply(x_in, qscheme.fake_quant(w, r.n_w, n_bits),
+                                        qscheme.fake_quant(b, r.n_b, n_bits)),
+                                  r.n_o, n_bits, fuse_relu), r.n_o
+
+    h, n_h = calibrate_conv("stem", p["stem"], xq, n_in, collect["stem"],
+                            1, True, True)
+    bi = 0
+    for si, ch in enumerate(cfg.stages):
+        for blk_i in range(cfg.blocks_per_stage):
+            blk = p["blocks"][bi]
+            stride = 2 if (blk_i == 0 and si > 0) else 1
+            h1, n1 = calibrate_conv(f"b{bi}/conv1", blk["conv1"], h, n_h,
+                                    collect[f"b{bi}/conv1"], stride, True, True)
+            h2, n2 = calibrate_conv(f"b{bi}/conv2", blk["conv2"], h1, n1,
+                                    collect[f"b{bi}/conv2"], 1, False, False)
+            if "proj" in blk:
+                sc, n_sc = calibrate_conv(f"b{bi}/proj", blk["proj"], h, n_h,
+                                          collect[f"b{bi}/proj"], stride,
+                                          False, False)
+            else:
+                sc, n_sc = h, n_h
+            # Fig. 1(c): residual add + ReLU — one joint quant point
+            a_int = qscheme.quant(h2, n2, n_bits)
+            b_int = qscheme.quant(sc, n_sc, n_bits)
+            r = calibrate.calibrate_add_module(
+                qscheme.dequant(a_int, n2), qscheme.dequant(b_int, n_sc),
+                collect[f"b{bi}/add"], bits=n_bits, out_unsigned=True,
+                apply_relu=True)
+            report.add(f"b{bi}/add", r)
+            specs[f"b{bi}/add"] = (n2, n_sc, r.n_o)
+            h = qscheme.fake_quant(jax.nn.relu(h2 + sc), r.n_o, n_bits, True)
+            n_h = r.n_o
+            bi += 1
+
+    # classifier head (case a)
+    pooled = jnp.mean(h, axis=(1, 2))
+
+    def apply_head(xx, wq, bq):
+        return xx @ wq + bq
+
+    r = calibrate.calibrate_linear_module(
+        pooled, p["head"]["w"], p["head"]["b"], collect["head"], apply_head,
+        bits=n_bits, tau=tau)
+    report.add("head", r)
+    weights["head"] = qscheme.quant(p["head"]["w"], r.n_w, n_bits)
+    biases["head"] = qscheme.quant(p["head"]["b"], r.n_b, n_bits)
+    specs["head"] = integer_ops.LinearQuantSpec(
+        n_x=n_h, n_w=r.n_w, n_b=r.n_b, n_o=r.n_o, bits=n_bits)
+
+    return QuantizedResNet(weights=weights, biases=biases, specs=specs,
+                           report=report, n_in=n_in)
+
+
+def resnet_int_forward(q: QuantizedResNet, x: jax.Array, cfg: ResNetConfig
+                       ) -> jax.Array:
+    """Integer-only inference (Eq. 3/4): int8 codes end to end, bit shifts
+    between modules, no floats until the final logits dequant."""
+    xi = qscheme.quant(x, q.n_in, 8)
+    hi = integer_ops.int_conv2d(xi, q.weights["stem"], q.biases["stem"],
+                                q.specs["stem"], apply_relu=True)
+    n_h = q.specs["stem"].n_o
+    bi = 0
+    for si, ch in enumerate(cfg.stages):
+        for blk_i in range(cfg.blocks_per_stage):
+            stride = 2 if (blk_i == 0 and si > 0) else 1
+            s1 = q.specs[f"b{bi}/conv1"]
+            h1 = integer_ops.int_conv2d(hi, q.weights[f"b{bi}/conv1"],
+                                        q.biases[f"b{bi}/conv1"], s1,
+                                        stride=stride, apply_relu=True)
+            s2 = q.specs[f"b{bi}/conv2"]
+            h2 = integer_ops.int_conv2d(h1, q.weights[f"b{bi}/conv2"],
+                                        q.biases[f"b{bi}/conv2"], s2)
+            if f"b{bi}/proj" in q.specs and isinstance(
+                    q.specs[f"b{bi}/proj"], integer_ops.LinearQuantSpec):
+                sp = q.specs[f"b{bi}/proj"]
+                sc = integer_ops.int_conv2d(hi, q.weights[f"b{bi}/proj"],
+                                            q.biases[f"b{bi}/proj"], sp,
+                                            stride=stride)
+                n_sc = sp.n_o
+            else:
+                sc, n_sc = hi, n_h
+            n_a, n_b_, n_o = q.specs[f"b{bi}/add"]
+            hi = integer_ops.int_residual_add(
+                h2.astype(jnp.int32), n_a, sc.astype(jnp.int32), n_b_, n_o,
+                apply_relu=True)
+            n_h = n_o
+            bi += 1
+    # head: global average pool in int32 then int linear
+    pooled = jnp.mean(qscheme.dequant(hi, n_h), axis=(1, 2))
+    pi = qscheme.quant(pooled, q.specs["head"].n_x, 8)
+    logits_i = integer_ops.int_linear(pi, q.weights["head"],
+                                      q.biases["head"], q.specs["head"])
+    return qscheme.dequant(logits_i, q.specs["head"].n_o)

@@ -1,0 +1,250 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): attention-free time-mix with
+data-dependent per-channel decay + squared-ReLU channel-mix.
+
+Recurrence per head (d_k = d_v = head_dim):
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T          (S: (d_k, d_v))
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+with w_t = exp(-exp(w0 + lora_w(x_t)))  in (0,1) per channel (the
+data-dependent decay that distinguishes Finch from RWKV5).
+
+Training/prefill runs the chunked linear-attention form (cross-chunk state
+scan + intra-chunk masked quadratic), O(S·chunk) memory — sub-quadratic, so
+rwkv6 runs the long_500k cells.  Decode is the O(1) recurrence.
+
+Quantization: r/k/v/g/o projections and both channel-mix matmuls go through
+``qlinear``; the decay/recurrence stays fp32 (DESIGN §4 — power-of-two
+rounding inside a 500k-step recurrence diverges).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from repro.models.scan_lib import scan as _scan
+
+from repro.configs.base import ModelConfig
+from repro.core.qmodel import QuantContext
+from repro.models.common import linear, rmsnorm
+
+__all__ = ["RWKVState", "init_rwkv6", "rwkv6_block", "rwkv6_decode"]
+
+HEAD_DIM = 64  # rwkv6 fixed head size
+
+
+class RWKVState(NamedTuple):
+    x_prev_att: jax.Array   # (B, 1, d) last token seen by time-mix
+    x_prev_ffn: jax.Array   # (B, 1, d) last token seen by channel-mix
+    wkv: jax.Array          # (B, H, dk, dv) recurrent state
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def zero_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> RWKVState:
+    h = _heads(cfg)
+    return RWKVState(
+        x_prev_att=jnp.zeros((batch, 1, cfg.d_model), dtype),
+        x_prev_ffn=jnp.zeros((batch, 1, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32))
+
+
+def init_rwkv6(init, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = _heads(cfg)
+    lora = 64
+    return {
+        # time-mix interpolation weights (token-shift) for r,k,v,w,g
+        "mu": init.dense((5, d)) * 0 + 0.5,
+        "lora_mix_a": init.dense((d, 5 * 32)),
+        "lora_mix_b": init.dense((5, 32, d)),
+        "wr": init.dense((d, d)),
+        "wk": init.dense((d, d)),
+        "wv": init.dense((d, d)),
+        "wg": init.dense((d, d)),
+        "wo": init.dense((d, d)),
+        "w0": init.dense((d,)) * 0 - 0.6,       # base decay logit
+        "lora_w_a": init.dense((d, lora)),
+        "lora_w_b": init.dense((lora, d)),
+        "u": init.dense((h, HEAD_DIM)) * 0.1,   # first-token bonus
+        "ln_x": init.ones((d,)),                # per-head group norm gain
+        # channel-mix
+        "mu_ffn": init.dense((2, d)) * 0 + 0.5,
+        "wk_ffn": init.dense((d, int(cfg.d_ff))),
+        "wv_ffn": init.dense((int(cfg.d_ff), d), fan_in=cfg.d_ff),
+        "wr_ffn": init.dense((d, d)),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} stream: shift right by one, first slot from state (or zero)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, xp, mu, la, lb):
+    """RWKV6 data-dependent interpolation for the 5 mix streams."""
+    # base mix then low-rank data-dependent correction
+    xx = xp - x
+    base = x + xx * mu[:, None, None]                       # (5, B, S, d)
+    inner = jnp.tanh((x + xx * 0.5) @ la)                   # (B, S, 5*32)
+    b_, s_, _ = inner.shape
+    inner = inner.reshape(b_, s_, 5, 32).transpose(2, 0, 1, 3)
+    corr = jnp.einsum("nbsr,nrd->nbsd", inner, lb.astype(x.dtype))
+    return base + xx[None] * corr
+
+
+def _wkv_chunked(r, k, v, w_log, u, chunk: int,
+                 init_state: Optional[jax.Array]):
+    """Chunked RWKV6 linear attention.
+
+    r,k,v: (B,S,H,D); w_log: (B,S,H,D) = log decay (negative); u: (H,D).
+    Returns out (B,S,H,D) and final state (B,H,D,D) [dk x dv].
+    """
+    b, s, h, d = r.shape
+    pad = (-s) % chunk
+    if pad:
+        # zero k/r/v => padded tokens contribute nothing; zero log-decay
+        # (w=1) => they do not decay the carried state.
+        zeros = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(t, zeros) for t in (r, k, v))
+        w_log = jnp.pad(w_log, zeros)
+    s_pad = s + pad
+    nc = s_pad // chunk
+    rc = r.reshape(b, nc, chunk, h, d)
+    kc = k.reshape(b, nc, chunk, h, d)
+    vc = v.reshape(b, nc, chunk, h, d)
+    wl = w_log.reshape(b, nc, chunk, h, d)
+    # No clamping here: per-token log-decay is bounded in [-e^0.5, ~0] by the
+    # block (see rwkv6_block), so |cum| <= 1.65 * chunk and with chunk <= 32
+    # every exp() below stays finite in fp32 (e^53 << 3.4e38).  Clamping cum
+    # instead would distort RELATIVE decays between late tokens in a chunk.
+    cum = jnp.cumsum(wl, axis=2)                            # (B,NC,L,H,D)
+    total = cum[:, :, -1]                                   # (B,NC,H,D)
+
+    # intra-chunk:
+    # out_t = sum_{s<t} (r_t * prod_{s+1..t-1+1?}) ... standard form:
+    #   score_{t,s} = sum_d r_td k_sd exp(cum_{t-1,d} - cum_{s,d})  for s < t
+    #   diag bonus:  s == t with u instead of decay
+    q_dec = jnp.exp(cum - wl)                               # exp(cum_{t-1}) = exp(cum_t - w_t)
+    k_dec = jnp.exp(-cum)
+    att = jnp.einsum("bnthd,bnshd->bnhts", rc * q_dec, kc * k_dec)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly lower
+    att = jnp.where(causal[None, None, None], att, 0.0)
+    diag = jnp.einsum("bnthd,bnthd->bnth", rc * u[None, None, None], kc)
+    y_intra = jnp.einsum("bnhts,bnshd->bnthd", att, vc) + \
+        diag[..., None] * vc
+
+    # cross-chunk state: S_next = diag(exp(total)) S + sum_s exp(total-cum_s) k_s v_s^T
+    k_carry = jnp.exp(total[:, :, None] - cum) * kc
+    st = jnp.einsum("bnshk,bnshv->bnhkv", k_carry, vc)
+
+    s0 = (jnp.zeros((b, h, d, d), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(prev, inp):
+        st_k, tot_k = inp                                   # (B,H,D,D),(B,H,D)
+        new = jnp.exp(tot_k)[..., None] * prev + st_k
+        return new, prev
+
+    final, prevs = _scan(
+        step, s0, (st.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2, 3)),
+        unroll_cap=1)
+    prevs = prevs.transpose(1, 0, 2, 3, 4)                  # (B,NC,H,Dk,Dv)
+
+    y_inter = jnp.einsum("bnthk,bnhkv->bnthv", rc * q_dec, prevs)
+    y = (y_intra + y_inter).reshape(b, s_pad, h, d)
+    return y[:, :s], final
+
+
+def rwkv6_block(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
+                state: Optional[RWKVState] = None, name: str = "rwkv"
+                ) -> tuple[jax.Array, jax.Array, RWKVState]:
+    """Returns (time_mix_out, channel_mix(fn), new_state).  The caller adds
+    residuals (pre-LN is applied by the caller, matching block assembly)."""
+    b, s, d = x.shape
+    h = _heads(cfg)
+    chunk = min(cfg.ssm.chunk if cfg.ssm else 32, s)
+
+    xp = _token_shift(x, state.x_prev_att if state else None)
+    mixed = _ddlerp(x, xp, p["mu"], p["lora_mix_a"], p["lora_mix_b"])
+    xr, xk, xv, xw, xg = mixed[0], mixed[1], mixed[2], mixed[3], mixed[4]
+
+    r = linear(ctx, f"{name}/wr", xr, p["wr"]).reshape(b, s, h, HEAD_DIM)
+    k = linear(ctx, f"{name}/wk", xk, p["wk"]).reshape(b, s, h, HEAD_DIM)
+    v = linear(ctx, f"{name}/wv", xv, p["wv"]).reshape(b, s, h, HEAD_DIM)
+    g = jax.nn.silu(linear(ctx, f"{name}/wg", xg, p["wg"]))
+
+    # data-dependent decay (fp32): w_log = -exp(w0 + lora_w(xw)) (negative).
+    # The logit is clipped to <= 0.5 -> per-token decay >= exp(-1.65): a
+    # stability floor that also bounds chunked-form exponentials (above).
+    w_dd = (xw @ p["lora_w_a"].astype(x.dtype))
+    w_dd = jnp.tanh(w_dd) @ p["lora_w_b"].astype(x.dtype)
+    w_log = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) +
+                              w_dd.astype(jnp.float32), -8.0, 0.5))
+    w_log = w_log.reshape(b, s, h, HEAD_DIM)
+
+    out, wkv = _wkv_chunked(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w_log, p["u"].astype(jnp.float32), chunk,
+        state.wkv if state else None)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    out = rmsnorm(out, p["ln_x"], cfg.norm_eps) * g
+    att_out = linear(ctx, f"{name}/wo", out, p["wo"])
+
+    new_state = RWKVState(
+        x_prev_att=x[:, -1:], x_prev_ffn=x[:, -1:],  # ffn prev set by caller
+        wkv=wkv)
+    return att_out, None, new_state
+
+
+def rwkv6_channel_mix(ctx: QuantContext, p: dict, x: jax.Array,
+                      cfg: ModelConfig, x_prev: Optional[jax.Array] = None,
+                      name: str = "rwkv_ffn") -> jax.Array:
+    """Squared-ReLU channel mix — the paper's Fig. 1(b) fast path applies:
+    ReLU precedes the quant point, so the code is unsigned."""
+    xp = _token_shift(x, x_prev)
+    mu = p["mu_ffn"]
+    xk = x + (xp - x) * mu[0][None, None]
+    xr = x + (xp - x) * mu[1][None, None]
+    k = linear(ctx, f"{name}/wk", xk, p["wk_ffn"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = linear(ctx, f"{name}/wv", k, p["wv_ffn"])
+    return jax.nn.sigmoid(linear(ctx, f"{name}/wr", xr, p["wr_ffn"])) * kv
+
+
+def rwkv6_decode(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
+                 state: RWKVState, name: str = "rwkv"
+                 ) -> tuple[jax.Array, RWKVState]:
+    """Single-token time-mix recurrence, O(1) in sequence length."""
+    b, s, d = x.shape  # s == 1
+    h = _heads(cfg)
+
+    xp = state.x_prev_att
+    mixed = _ddlerp(x, xp, p["mu"], p["lora_mix_a"], p["lora_mix_b"])
+    xr, xk, xv, xw, xg = mixed[0], mixed[1], mixed[2], mixed[3], mixed[4]
+    r = linear(ctx, f"{name}/wr", xr, p["wr"]).reshape(b, h, HEAD_DIM)
+    k = linear(ctx, f"{name}/wk", xk, p["wk"]).reshape(b, h, HEAD_DIM)
+    v = linear(ctx, f"{name}/wv", xv, p["wv"]).reshape(b, h, HEAD_DIM)
+    g = jax.nn.silu(linear(ctx, f"{name}/wg", xg, p["wg"]))
+
+    w_dd = jnp.tanh(xw @ p["lora_w_a"].astype(x.dtype)) @ \
+        p["lora_w_b"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp(jnp.clip(
+        p["w0"].astype(jnp.float32) + w_dd.astype(jnp.float32)[:, 0],
+        -8.0, 0.5))).reshape(b, h, HEAD_DIM)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    s_prev = state.wkv.astype(jnp.float32)                  # (B,H,Dk,Dv)
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    out = jnp.einsum("bhk,bhkv->bhv",
+                     rf, s_prev + p["u"].astype(jnp.float32)[None, :, :, None] * kv)
+    new_wkv = w[..., None] * s_prev + kv
+    out = out.reshape(b, 1, d).astype(x.dtype)
+    out = rmsnorm(out, p["ln_x"], cfg.norm_eps) * g
+    att_out = linear(ctx, f"{name}/wo", out, p["wo"])
+    new_state = RWKVState(x_prev_att=x, x_prev_ffn=state.x_prev_ffn,
+                          wkv=new_wkv)
+    return att_out, new_state

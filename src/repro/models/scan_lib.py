@@ -1,0 +1,52 @@
+"""Scan wrapper with an "analysis unroll" switch.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, independent of trip
+count — so every scanned structure (layer stacks, KV-chunk scans, SSD chunk
+scans, gradient-accumulation loops) is invisible to the roofline unless
+unrolled.  Production compiles keep rolled loops (small HLO, fast compile);
+the roofline fit (benchmarks/roofline.py) re-lowers reduced-depth variants
+under ``analysis_unroll()`` where every scan fully unrolls, making the cost
+model exact, then extrapolates depth linearly.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+
+_TLS = threading.local()
+
+__all__ = ["scan", "analysis_unroll", "unrolling"]
+
+
+@contextlib.contextmanager
+def analysis_unroll():
+    prev = getattr(_TLS, "unroll", False)
+    _TLS.unroll = True
+    try:
+        yield
+    finally:
+        _TLS.unroll = prev
+
+
+def unrolling() -> bool:
+    return getattr(_TLS, "unroll", False)
+
+
+def scan(f: Callable, init: Any, xs: Any = None, length: Optional[int] = None,
+         unroll_cap: Optional[int] = None, **kw) -> Any:
+    """``unroll_cap`` bounds analysis unrolling for scans whose bodies are
+    negligible for the cost model (e.g. the O(B*H*D^2) cross-chunk state
+    recurrences in rwkv/ssd — their heavy math is batched OUTSIDE the scan,
+    so fully unrolling thousands of tiny steps would only bloat the HLO)."""
+    if unrolling():
+        n = length
+        if n is None:
+            n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        n = int(n)
+        if unroll_cap is not None:
+            n = min(n, unroll_cap)
+        kw = dict(kw, unroll=max(n, 1))
+    return jax.lax.scan(f, init, xs, length=length, **kw)

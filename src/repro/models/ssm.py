@@ -1,0 +1,225 @@
+"""Mamba2 (SSD) block — used by zamba2-2.7b (hybrid) and as the generic
+selective-SSM substrate.
+
+Training/prefill uses the chunked state-space-duality algorithm: quadratic
+attention *within* chunks (MXU-friendly matmuls) + a lax.scan carrying the
+(H, P, N) state *across* chunks — O(S·chunk) memory, so the long_500k cells
+stay sub-quadratic (the reason SSM/hybrid archs run that shape).
+
+Decode is the O(1) recurrence: one conv-state shift + one state update.
+
+Quantization applicability (DESIGN §4): in/out projections and the gate go
+through ``qlinear`` (paper's scheme); the recurrent state update stays bf16 —
+a power-of-two-rounded decay applied 500k times accumulates unbounded error,
+so the paper's per-tensor scheme is *inapplicable inside the recurrence*.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from repro.models.scan_lib import scan as _scan
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core.qmodel import QuantContext
+from repro.models.common import linear, rmsnorm
+
+__all__ = ["SSMState", "init_mamba2", "mamba2", "mamba2_decode"]
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, d_conv_in) rolling conv window
+    ssm: jax.Array     # (B, H, P, N) recurrent state
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    d_conv_in = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, n_heads, d_conv_in
+
+
+def zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    s, d_inner, n_heads, d_conv_in = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv - 1, d_conv_in), dtype),
+        ssm=jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32))
+
+
+def init_mamba2(init, cfg: ModelConfig) -> dict:
+    s, d_inner, n_heads, d_conv_in = _dims(cfg)
+    d = cfg.d_model
+    return {
+        # z (gate), xBC (conv path), dt — one fused in-projection
+        "w_in": init.dense((d, d_inner + d_conv_in + n_heads)),
+        "conv_w": init.dense((s.d_conv, d_conv_in), fan_in=s.d_conv),
+        "conv_b": init.zeros((d_conv_in,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": init.ones((d_inner,)),
+        "w_out": init.dense((d_inner, d), fan_in=d_inner),
+    }
+
+
+def _split_in(cfg: ModelConfig, zxbcdt: jax.Array):
+    s, d_inner, n_heads, d_conv_in = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_conv_in]
+    dt = zxbcdt[..., d_inner + d_conv_in:]
+    return z, xbc, dt
+
+
+def _causal_conv_train(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq: xbc (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):  # K=4: unrolled adds beat a conv call at this size
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                 cmat: jax.Array, chunk: int, init_state: Optional[jax.Array]
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) values; dt: (B,S,H) >0; a: (H,) = -exp(a_log) (negative);
+    bmat/cmat: (B,S,G,N) with G groups broadcast over H.
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        # zero x/dt => padded tokens neither contribute to nor decay the state
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+    rep = h // g
+
+    # per-token log decay  l_t = dt_t * a  (negative)
+    la = dt * a[None, None, :]                              # (B,S,H)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    lac = la.reshape(b, nc, chunk, h)
+    bc = jnp.repeat(bmat.reshape(b, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(cmat.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    cum = jnp.cumsum(lac, axis=2)                           # (B,NC,L,H)
+    total = cum[:, :, -1]                                   # (B,NC,H)
+
+    # ---- intra-chunk (quadratic in chunk length, MXU matmuls) ----
+    # scores_{t,s} = (C_t . B_s) * exp(cum_t - cum_s) * dt_s  for s <= t
+    cb = jnp.einsum("bnthm,bnshm->bnhts", cc, bc)           # (B,NC,H,L,L)
+    decay = cum[..., :, None, :] - cum[..., None, :, :]     # (B,NC,L,L,H) t,s
+    decay = decay.transpose(0, 1, 4, 2, 3)                  # (B,NC,H,L,L)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w_ts = jnp.exp(jnp.where(causal, decay, -jnp.inf)) * cb
+    w_ts = w_ts * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bnhts,bnshp->bnthp", w_ts, xc)
+
+    # ---- chunk-boundary states ----
+    # state contribution of chunk: sum_s exp(total - cum_s) dt_s x_s B_s^T
+    w_s = jnp.exp(total[:, :, None, :] - cum) * dtc         # (B,NC,L,H)
+    st = jnp.einsum("bnsh,bnshp,bnshm->bnhpm", w_s, xc, bc)
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_step(prev, inp):
+        st_k, tot_k = inp                                   # (B,H,P,N),(B,H)
+        new = jnp.exp(tot_k)[:, :, None, None] * prev + st_k
+        return new, prev                                    # emit state BEFORE chunk
+
+    final, prevs = _scan(
+        scan_step, s0,
+        (st.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+        unroll_cap=1)
+    prevs = prevs.transpose(1, 0, 2, 3, 4)                  # (B,NC,H,P,N)
+
+    # ---- inter-chunk: y_t += C_t exp(cum_t) S_prev ----
+    y_inter = jnp.einsum("bnthm,bnhpm->bnthp",
+                         cc * jnp.exp(cum)[..., None], prevs)
+    y = (y_intra + y_inter).reshape(b, s_pad, h, p)
+    return y[:, :s], final
+
+
+def mamba2(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
+           name: str = "ssm", init_state: Optional[SSMState] = None
+           ) -> tuple[jax.Array, SSMState]:
+    """Full-sequence Mamba2 forward (train / prefill). Returns final state."""
+    s, d_inner, n_heads, d_conv_in = _dims(cfg)
+    b, seq, d = x.shape
+    zxbcdt = linear(ctx, f"{name}/w_in", x, p["w_in"])
+    z, xbc, dt = _split_in(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv_train(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_inner]
+    bmat = xbc[..., d_inner:d_inner + s.n_groups * s.d_state]
+    cmat = xbc[..., d_inner + s.n_groups * s.d_state:]
+    bmat = bmat.reshape(b, seq, s.n_groups, s.d_state).astype(jnp.float32)
+    cmat = cmat.reshape(b, seq, s.n_groups, s.d_state).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(b, seq, n_heads, s.head_dim).astype(jnp.float32)
+
+    chunk = min(s.chunk, seq)
+    # checkpoint the SSD core (flash-style): its (B,NC,H,L,L) f32 intra-
+    # chunk tensors otherwise persist for backward — 339 GB/device on
+    # zamba2 train_4k (§Perf Z1); recompute them instead.
+    ssd = jax.checkpoint(
+        lambda xx, dd, bb, cc, st: _ssd_chunked(xx, dd, a, bb, cc, chunk, st))
+    y, final = ssd(xh, dtp, bmat, cmat,
+                   init_state.ssm if init_state else None)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, seq, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = linear(ctx, f"{name}/w_out", y, p["w_out"])
+    # conv state = last d_conv-1 PRE-conv inputs (for streaming continuation)
+    _, xbc_raw, _ = _split_in(cfg, zxbcdt)
+    conv_tail = xbc_raw[:, -(s.d_conv - 1):, :]
+    return out, SSMState(conv=conv_tail, ssm=final)
+
+
+def mamba2_decode(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
+                  state: SSMState, name: str = "ssm"
+                  ) -> tuple[jax.Array, SSMState]:
+    """Single-token decode: x (B,1,d). O(1) in sequence length."""
+    s, d_inner, n_heads, d_conv_in = _dims(cfg)
+    b = x.shape[0]
+    zxbcdt = linear(ctx, f"{name}/w_in", x, p["w_in"])
+    z, xbc, dt = _split_in(cfg, zxbcdt)
+
+    window = jnp.concatenate([state.conv, xbc], axis=1)      # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    xs = xbc_t[..., :d_inner]
+    bmat = xbc_t[..., d_inner:d_inner + s.n_groups * s.d_state]
+    cmat = xbc_t[..., d_inner + s.n_groups * s.d_state:]
+    bmat = bmat.reshape(b, s.n_groups, s.d_state).astype(jnp.float32)
+    cmat = cmat.reshape(b, s.n_groups, s.d_state).astype(jnp.float32)
+    rep = n_heads // s.n_groups
+    bmat = jnp.repeat(bmat, rep, axis=1)                     # (B,H,N)
+    cmat = jnp.repeat(cmat, rep, axis=1)
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtp * a[None, :])                        # (B,H)
+    xh = xs.reshape(b, n_heads, s.head_dim).astype(jnp.float32)
+
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dtp, xh, bmat)
+    new_ssm = decay[:, :, None, None] * state.ssm.astype(jnp.float32) + upd
+    y = jnp.einsum("bhn,bhpn->bhp", cmat, new_ssm)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = linear(ctx, f"{name}/w_out", y, p["w_out"])
+    return out, SSMState(conv=new_conv, ssm=new_ssm)

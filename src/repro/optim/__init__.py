@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (adamw, adafactor, OptState,  # noqa: F401
+                                    clip_by_global_norm)
+from repro.optim.schedule import warmup_cosine, warmup_linear  # noqa: F401
+from repro.optim.compression import (quantize_grads_po2,  # noqa: F401
+                                     dequantize_grads_po2)

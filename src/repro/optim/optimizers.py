@@ -1,0 +1,128 @@
+"""Optimizers as pure (init, update) pairs over pytrees — no optax
+dependency, so state sharding is fully ours to control (ZeRO-1: the
+distributed layer shards these states over (data, model)).
+
+  adamw     — fp32 moments, bf16 params; decoupled weight decay.
+  adafactor — factored second moment (row/col) for the 100B+ configs where
+              full AdamW state (12 bytes/param) would not fit 16 GB HBM
+              even sharded; falls back to full v for small/1-D leaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "adamw", "adafactor", "clip_by_global_norm"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any            # first moment (None for adafactor)
+    v: Any            # second moment (full array, or (row, col) tuple)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jax.Array], tuple[Any, OptState]]
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def _zip_map(fn, ref_tree, *trees):
+    """Map fn over leaves of ref_tree, flattening other trees up-to ref's
+    structure (their leaves may themselves be small tuples, e.g. factored v).
+    Returns one unflattened tree per element of fn's output tuple."""
+    leaves, treedef = jax.tree_util.tree_flatten(ref_tree)
+    others = [treedef.flatten_up_to(t) for t in trees]
+    results = [fn(l, *per) for l, *per in zip(leaves, *others)]
+    n_out = len(results[0])
+    return tuple(treedef.unflatten([r[i] for r in results])
+                 for i in range(n_out))
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(zeros, params),
+                        v=jax.tree.map(zeros, params))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        new_p, new_m, new_v = _zip_map(upd, grads, state.m, state.v, params)
+        return new_p, OptState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0, min_dim_factored: int = 128
+              ) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018) without momentum: O(rows+cols)
+    second-moment state for matrices — the only fit for 671B on v5e."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored \
+            and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def v_init(p):
+            if _factored(p):
+                return (jnp.zeros(p.shape[:-1], jnp.float32),
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return OptState(step=jnp.zeros((), jnp.int32), m=None,
+                        v=jax.tree.map(v_init, params))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** -0.8
+
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if isinstance(v, tuple):
+                vr, vc = v
+                vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                new_v = (vr, vc)
+            else:
+                vhat = beta2 * v + (1 - beta2) * g2
+                new_v = vhat
+            u = g32 / jnp.sqrt(vhat + eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_v
+
+        new_p, new_v = _zip_map(upd, grads, state.v, params)
+        return new_p, OptState(step=step, m=None, v=new_v)
+
+    return Optimizer(init=init, update=update)

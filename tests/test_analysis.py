@@ -1,0 +1,49 @@
+"""Roofline analysis plumbing: collective parser + cost-sample algebra."""
+import jax.numpy as jnp
+
+from repro.launch.analysis import (CostSample, collective_traffic,
+                                   roofline_terms)
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p = f32[128,512]{1,0} parameter(0)
+  %ar = f32[128,512]{1,0} all-reduce(%p), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag = bf16[64,1024]{1,0} all-gather(%x), replica_groups=[2,8]<=[16], dimensions={0}
+  %rs = f32[16,256]{1,0} reduce-scatter(%y), replica_groups=[4,4]<=[16], dimensions={0}
+  %cp = s8[1024]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %done = f32[8] all-reduce-done(%start)
+  %gte = f32[4] get-tuple-element(%all-reduce.5), index=0
+}
+"""
+
+
+def test_parser_kinds_and_ring_model():
+    t = collective_traffic(HLO)
+    assert t["all-reduce"] == 2 * 128 * 512 * 4 * 3 / 4
+    assert t["all-gather"] == 64 * 1024 * 2 * 7 / 8
+    assert t["reduce-scatter"] == 16 * 256 * 4 * 3
+    assert t["collective-permute"] == 1024
+    assert t["total"] == sum(v for k, v in t.items() if k != "total")
+
+
+def test_parser_ignores_done_and_gte_lines():
+    t = collective_traffic(HLO)
+    # only ONE all-reduce counted (the -done and gte lines don't match)
+    assert t["all-reduce"] == 2 * 128 * 512 * 4 * 3 / 4
+
+
+def test_cost_sample_algebra():
+    a = CostSample(10.0, 100.0, {"all-reduce": 5.0, "total": 5.0})
+    b = CostSample(1.0, 10.0, {"all-gather": 2.0, "total": 2.0})
+    c = a.scaled(2.0) + b
+    assert c.flops == 21.0 and c.bytes_hbm == 210.0
+    assert c.collectives["total"] == 12.0
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(CostSample(197e12, 0.0, {"total": 0.0}))
+    assert t["dominant"] == "compute" and abs(t["t_compute_s"] - 1.0) < 1e-9
+    t = roofline_terms(CostSample(0.0, 819e9, {"total": 0.0}))
+    assert t["dominant"] == "memory"

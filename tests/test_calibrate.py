@@ -1,0 +1,89 @@
+"""Algorithm 1 calibration: window narrowing, optimality, joint threading."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibrate as C
+from repro.core import qscheme as Q
+
+
+def _lin(x, w, b):
+    return x @ w + (b if b is not None else 0)
+
+
+def test_search_window_matches_eq6():
+    w = jnp.asarray([0.0, 3.0])  # max=3 -> ceil(log2(4)) + 1 = 3
+    lo, hi = Q.search_window(w, tau=4)
+    assert hi == 3 and lo == -1
+
+
+def test_calibration_beats_extreme_choices():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 16)) * 0.05, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(16,)) * 0.1, jnp.float32)
+    o_ref = _lin(x, w, b)
+    res = C.calibrate_linear_module(x, w, b, o_ref, _lin)
+    # compare against a clearly-too-coarse grid
+    coarse = float(jnp.linalg.norm(
+        o_ref - _lin(x, Q.fake_quant(w, 0, 8), Q.fake_quant(b, 0, 8))))
+    assert res.error <= coarse
+    assert res.rel_error < 0.1
+
+
+def test_calibrated_bits_inside_windows():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(32, 16)) * 0.05, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(16,)) * 0.1, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+    o_ref = _lin(x, w, b)
+    res = C.calibrate_linear_module(x, w, b, o_ref, _lin, tau=4)
+    iw_lo, iw_hi = Q.search_window(w, 4)
+    assert (8 - 1) - iw_hi <= res.n_w <= (8 - 1) - iw_lo
+
+
+def test_add_module_only_searches_n_o():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    res = C.calibrate_add_module(a, b, a + b)
+    assert res.n_w is None and res.n_b is None
+    assert res.rel_error < 0.05
+
+
+def test_sequential_threading_reduces_joint_error():
+    """Two chained layers: calibrating layer 2 on layer 1's QUANTIZED output
+    (the paper's joint dataflow) beats calibrating it on the clean output
+    when the quantized model is evaluated end to end."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(32, 32)) * 0.2, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(32, 16)) * 0.2, jnp.float32)
+    h_ref = jnp.maximum(x @ w1, 0)
+    o_ref = h_ref @ w2
+
+    r1 = C.calibrate_linear_module(
+        x, w1, None, h_ref, lambda xx, ww, bb: jnp.maximum(xx @ ww, 0),
+        out_unsigned=True)
+    h_q = Q.fake_quant(jnp.maximum(x @ Q.fake_quant(w1, r1.n_w, 8), 0),
+                       r1.n_o, 8, True)
+    # joint: layer-2 calibration sees the quantized h
+    r2_joint = C.calibrate_linear_module(
+        h_q, w2, None, o_ref, lambda xx, ww, bb: xx @ ww)
+    # ablation: layer-2 calibrated on the clean h (not dataflow-aware)
+    r2_clean = C.calibrate_linear_module(
+        h_ref, w2, None, o_ref, lambda xx, ww, bb: xx @ ww)
+
+    def end_to_end(n_w2, n_o2):
+        o = h_q @ Q.fake_quant(w2, n_w2, 8)
+        return float(jnp.linalg.norm(o_ref - Q.fake_quant(o, n_o2, 8)))
+
+    assert end_to_end(r2_joint.n_w, r2_joint.n_o) <= \
+        end_to_end(r2_clean.n_w, r2_clean.n_o) + 1e-4
+
+
+def test_report_histogram():
+    rep = C.CalibrationReport()
+    rep.add("a", C.CalibResult(n_w=8, n_b=7, n_o=3, error=0.1, fp_norm=1.0))
+    rep.add("b", C.CalibResult(n_w=8, n_b=None, n_o=5, error=0.1, fp_norm=1.0))
+    hist = rep.shift_histogram()
+    assert hist[8] == 2 and hist[3] == 1 and hist[5] == 1

@@ -1,0 +1,57 @@
+"""Checkpointer: crash-safe commit, GC, restore, signature checks."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)},
+            "step": jnp.asarray(seed, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state(3)
+    ck.save(3, st, extra={"data_state": {"step": 3}}, blocking=True)
+    restored, extra = ck.restore(jax.eval_shape(lambda: st))
+    assert extra == {"data_state": {"step": 3}}
+    assert np.allclose(restored["params"]["w"], st["params"]["w"])
+
+
+def test_uncommitted_checkpoint_is_garbage_collected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1), blocking=True)
+    # simulate a crash mid-write: directory without COMMIT
+    os.makedirs(tmp_path / "step_000000002")
+    (tmp_path / "step_000000002" / "manifest.json").write_text("{}")
+    assert ck.all_steps() == [1]
+    assert not (tmp_path / "step_000000002").exists()
+    assert ck.latest_step() == 1
+
+
+def test_keep_n_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(s), blocking=True)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_signature_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1), blocking=True)
+    wrong = {"params": {"w": jnp.zeros((4, 4))}, "step": jnp.zeros((), jnp.int32)}
+    with pytest.raises(ValueError, match="signature"):
+        ck.restore(jax.eval_shape(lambda: wrong))
+
+
+def test_async_save_overlaps_then_waits(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _state(5))          # non-blocking
+    ck.wait()
+    assert ck.latest_step() == 5

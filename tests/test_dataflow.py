@@ -1,0 +1,85 @@
+"""Unified-module construction (Fig. 1 fusion rules)."""
+from repro.core.dataflow import OpKind as K, OpNode, build_plan, count_quant_ops
+
+
+def test_case_b_conv_relu_fuses():
+    plan = build_plan([
+        OpNode("conv", K.LINEAR, ("in",), has_bias=True),
+        OpNode("relu", K.RELU, ("conv",)),
+    ])
+    assert len(plan.modules) == 1
+    m = plan.modules[0]
+    assert m.case == "b" and m.out_unsigned and m.ops == ("conv", "relu")
+
+
+def test_case_a_bare_conv():
+    plan = build_plan([OpNode("conv", K.LINEAR, ("in",), has_bias=True)])
+    assert plan.modules[0].case == "a"
+    assert not plan.modules[0].out_unsigned
+
+
+def test_case_c_residual_relu():
+    plan = build_plan([
+        OpNode("conv", K.LINEAR, ("in",)),
+        OpNode("add", K.ADD, ("conv", "in")),
+        OpNode("relu", K.RELU, ("add",)),
+    ])
+    add_mod = plan.module("um_add")
+    assert add_mod.case == "c" and add_mod.out_unsigned
+
+
+def test_case_d_residual_no_relu():
+    plan = build_plan([
+        OpNode("conv", K.LINEAR, ("in",)),
+        OpNode("add", K.ADD, ("conv", "in")),
+    ])
+    assert plan.module("um_add").case == "d"
+    assert not plan.module("um_add").out_unsigned
+
+
+def test_norm_is_folded_not_a_quant_point():
+    plan = build_plan([
+        OpNode("bn", K.NORM, ("in",)),
+        OpNode("conv", K.LINEAR, ("bn",)),
+    ])
+    assert len(plan.modules) == 1
+    assert plan.modules[0].ops == ("conv",)
+
+
+def test_joint_fewer_points_than_naive():
+    """The paper's core hypothesis precondition: restructuring reduces the
+    number of quantization operations."""
+    nodes = [
+        OpNode("c1", K.LINEAR, ("in",), has_bias=True),
+        OpNode("r1", K.RELU, ("c1",)),
+        OpNode("c2", K.LINEAR, ("r1",), has_bias=True),
+        OpNode("add", K.ADD, ("c2", "in")),
+        OpNode("r2", K.RELU, ("add",)),
+    ]
+    plan = build_plan(nodes)
+    counts = count_quant_ops(plan)
+    assert counts["joint_activation_points"] == 3
+    assert counts["naive_activation_points"] == 5
+    assert counts["saved"] == 2
+
+
+def test_multi_consumer_relu_not_fused():
+    # conv output feeds both a relu and an add: cannot fuse (b)
+    nodes = [
+        OpNode("conv", K.LINEAR, ("in",)),
+        OpNode("relu", K.RELU, ("conv",)),
+        OpNode("add", K.ADD, ("conv", "relu")),
+    ]
+    plan = build_plan(nodes)
+    conv_mod = plan.module("um_conv")
+    assert conv_mod.case == "a" and conv_mod.ops == ("conv",)
+
+
+def test_dataflow_edges_thread_n_x():
+    nodes = [
+        OpNode("c1", K.LINEAR, ("in",)),
+        OpNode("r1", K.RELU, ("c1",)),
+        OpNode("c2", K.LINEAR, ("r1",)),
+    ]
+    plan = build_plan(nodes)
+    assert plan.module("um_c2").inputs == ("um_c1",)

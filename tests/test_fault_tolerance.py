@@ -1,0 +1,81 @@
+"""Fault-tolerance policies: heartbeats, stragglers, elastic re-mesh,
+supervised restart loop with checkpoint resume."""
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.distributed.fault_tolerance import (ElasticPlanner,
+                                               HeartbeatMonitor,
+                                               RunSupervisor)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_straggler_detection_needs_patience():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(4, straggler_factor=1.5, patience=3, clock=clock)
+    for step in range(6):
+        clock.t += 1
+        for h in range(4):
+            mon.beat(h, 2.0 if h == 2 else 1.0)   # host 2 is 2x slower
+        res = mon.check()
+        if step < 2:
+            assert res["stragglers"] == []
+    assert 2 in mon.check()["stragglers"]
+
+
+def test_dead_host_detection_by_timeout():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(3, timeout_s=10, clock=clock)
+    for h in range(3):
+        mon.beat(h, 1.0)
+    clock.t = 5
+    mon.beat(0, 1.0)
+    mon.beat(1, 1.0)          # host 2 silent since t=0
+    clock.t = 12
+    res = mon.check()
+    assert res["dead"] == [2]
+    assert mon.alive_count() == 2
+
+
+def test_elastic_planner_shrinks_data_axis():
+    p = ElasticPlanner(model_axis=16)
+    plan = p.plan(256)
+    assert plan.shape == (16, 16) and plan.dropped == 0
+    plan = p.plan(250)           # lost 6 devices
+    assert plan.shape == (15, 16) and plan.dropped == 250 - 240
+    with pytest.raises(RuntimeError):
+        p.plan(8)                # cannot host the TP degree
+
+
+def test_elastic_planner_multi_pod():
+    p = ElasticPlanner(model_axis=16, pod_size=256)
+    plan = p.plan(512)
+    assert plan.shape == (2, 16, 16) and plan.axes[0] == "pod"
+
+
+def test_supervisor_restart_resumes_from_committed_step(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    calls = []
+
+    def train_segment(plan, start, total):
+        calls.append((plan.n_devices, start))
+        for s in range(start + 1, min(start + 5, total) + 1):
+            ck.save(s, {"w": jnp.zeros(())}, blocking=True)
+        last = min(start + 5, total)
+        if len(calls) == 1:          # inject one failure with 16 lost devices
+            return last, {"lost_devices": 16}
+        return last, None
+
+    sup = RunSupervisor(ElasticPlanner(model_axis=16), ck, train_segment)
+    final = sup.run(n_devices=256, total_steps=10)
+    assert final == 10
+    assert sup.restarts == 1
+    assert calls[0][0] == 256 and calls[1][0] == 240  # re-meshed smaller
+    assert calls[1][1] == 5                            # resumed at commit

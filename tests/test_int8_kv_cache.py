@@ -1,0 +1,46 @@
+"""int8 KV cache (Eq. 1 applied to the cache — beyond-paper feature)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.qmodel import QuantContext, QuantMode
+from repro.models import model as M
+
+CTX = QuantContext(mode=QuantMode.FP)
+
+
+def test_int8_cache_matches_fp_cache():
+    cfg = get_smoke_config("qwen3_1_7b").scaled(dtype="float32")
+    cfg8 = dataclasses.replace(cfg, kv_cache_bits=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0,
+                              cfg.vocab_size)
+    pre = {"tokens": toks[:, :47]}
+    _, cache_fp = M.prefill(params, pre, cfg, CTX, max_seq=48)
+    _, cache_i8 = M.prefill(params, pre, cfg8, CTX, max_seq=48)
+    assert cache_i8["kv"].k.dtype == jnp.int8
+    l_fp, _ = M.decode_step(params, toks[:, 47:], cache_fp, jnp.asarray(47),
+                            cfg, CTX)
+    l_i8, _ = M.decode_step(params, toks[:, 47:], cache_i8, jnp.asarray(47),
+                            cfg8, CTX)
+    rel = float(jnp.linalg.norm(l_i8 - l_fp) / jnp.linalg.norm(l_fp))
+    assert rel < 0.05, rel
+    # top-1 agreement
+    agree = float(jnp.mean((jnp.argmax(l_fp, -1) ==
+                            jnp.argmax(l_i8, -1)).astype(jnp.float32)))
+    assert agree >= 0.5
+
+
+def test_int8_cache_halves_bytes():
+    cfg = get_smoke_config("qwen3_1_7b")
+    cfg8 = dataclasses.replace(cfg, kv_cache_bits=8)
+    c_fp = jax.eval_shape(lambda: M.init_cache(cfg, 2, 64))
+    c_i8 = jax.eval_shape(lambda: M.init_cache(cfg8, 2, 64))
+    b_fp = sum(np.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(c_fp))
+    b_i8 = sum(np.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(c_i8))
+    assert b_i8 * 2 == b_fp

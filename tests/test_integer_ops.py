@@ -1,0 +1,77 @@
+"""Integer-only ops (Eq. 2-4): bit-exactness vs the float emulation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import integer_ops as IO
+from repro.core import qscheme as Q
+
+
+def _rand(shape, scale=1.0, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape) * scale,
+                       jnp.float32)
+
+
+def test_int_linear_bit_exact_vs_fake_quant():
+    x, w, b = _rand((32, 64), 1.0, 0), _rand((64, 48), 0.05, 1), \
+        _rand((48,), 0.1, 2)
+    spec = IO.LinearQuantSpec(n_x=4, n_w=8, n_b=7, n_o=3)
+    xi, wi, bi = Q.quant(x, 4), Q.quant(w, 8), Q.quant(b, 7)
+    out_int = IO.int_linear(xi, wi, bi, spec)
+    float_path = Q.quant(
+        Q.dequant(xi, 4) @ Q.dequant(wi, 8) + Q.dequant(bi, 7), 3, 8)
+    assert np.array_equal(np.asarray(out_int), np.asarray(float_path))
+
+
+def test_int_linear_fused_relu_unsigned():
+    x, w = _rand((16, 32), 1.0, 3), _rand((32, 16), 0.1, 4)
+    spec = IO.LinearQuantSpec(n_x=4, n_w=7, n_b=7, n_o=4, out_unsigned=True)
+    xi, wi = Q.quant(x, 4), Q.quant(w, 7)
+    out = IO.int_linear(xi, wi, None, spec, apply_relu=True)
+    assert out.dtype == jnp.uint8
+    ref = Q.quant(jnp.maximum(Q.dequant(xi, 4) @ Q.dequant(wi, 7), 0), 4, 8,
+                  unsigned=True)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_int_conv2d_matches_float_emulation():
+    x = _rand((2, 8, 8, 3), 1.0, 5)
+    w = _rand((3, 3, 3, 4), 0.2, 6)
+    b = _rand((4,), 0.1, 7)
+    spec = IO.LinearQuantSpec(n_x=5, n_w=6, n_b=6, n_o=3)
+    xi, wi, bi = Q.quant(x, 5), Q.quant(w, 6), Q.quant(b, 6)
+    out = IO.int_conv2d(xi, wi, bi, spec)
+    import jax
+    acc = jax.lax.conv_general_dilated(
+        Q.dequant(xi, 5), Q.dequant(wi, 6), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + Q.dequant(bi, 6)
+    ref = Q.quant(acc, 3, 8)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_residual_add_alignment_is_exact():
+    """Fig. 1(c): shifting both operands to the finer grid loses nothing."""
+    a = _rand((64,), 1.0, 8)
+    b = _rand((64,), 0.3, 9)
+    n_a, n_b, n_o = 5, 3, 4
+    ai, bi = Q.quant(a, n_a), Q.quant(b, n_b)
+    out = IO.int_residual_add(ai, n_a, bi, n_b, n_o)
+    ref = Q.quant(Q.dequant(ai, n_a) + Q.dequant(bi, n_b), n_o, 8)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_residual_add_relu_case_c():
+    a = _rand((64,), 1.0, 10)
+    b = _rand((64,), 1.0, 11)
+    ai, bi = Q.quant(a, 4), Q.quant(b, 4)
+    out = IO.int_residual_add(ai, 4, bi, 4, 4, apply_relu=True)
+    assert out.dtype == jnp.uint8
+    ref = Q.quant(jnp.maximum(Q.dequant(ai, 4) + Q.dequant(bi, 4), 0), 4, 8,
+                  unsigned=True)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_bias_align_left_shift():
+    b = jnp.asarray([1, -2, 127], jnp.int8)
+    out = IO.bias_align(b, 4)
+    assert list(np.asarray(out)) == [16, -32, 2032]

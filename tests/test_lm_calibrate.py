@@ -1,0 +1,61 @@
+"""LM-side Algorithm 1: capture -> grid search -> quantized execution."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.lm_calibrate import calibrate_lm
+from repro.core.qmodel import QuantContext, QuantMode
+from repro.data import SyntheticLMStream
+from repro.models import model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_2_1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    stream = SyntheticLMStream(cfg.vocab_size, 64, 8, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in stream.batch(0).items()}
+    ctx_cal, report = calibrate_lm(
+        lambda p, b, c: M.forward(p, b, cfg, c), params, batch)
+    return cfg, params, batch, ctx_cal, report
+
+
+def test_capture_covers_all_linear_modules(setup):
+    cfg, params, batch, ctx_cal, report = setup
+    names = set(report.results)
+    assert {"attn/wq", "attn/wk", "attn/wv", "attn/wo",
+            "mlp/w1", "mlp/w3", "mlp/w2", "lm_head"} <= names
+
+
+def test_calibrated_beats_default_bits(setup):
+    cfg, params, batch, ctx_cal, report = setup
+    lf, _ = M.forward(params, batch, cfg, QuantContext(mode=QuantMode.FP))
+
+    def agree(ctx):
+        lq, _ = M.forward(params, batch, cfg, ctx)
+        return float(np.mean(np.argmax(np.asarray(lf, np.float32), -1) ==
+                             np.argmax(np.asarray(lq, np.float32), -1)))
+
+    assert agree(ctx_cal) >= agree(QuantContext(mode=QuantMode.FAKE)) - 0.02
+    assert agree(ctx_cal) > 0.85
+
+
+def test_int_deploy_close_to_fake(setup):
+    cfg, params, batch, ctx_cal, report = setup
+    lq, _ = M.forward(params, batch, cfg, ctx_cal)
+    li, _ = M.forward(params, batch, cfg,
+                      dataclasses.replace(ctx_cal, mode=QuantMode.INT))
+    agree = float(np.mean(np.argmax(np.asarray(lq, np.float32), -1) ==
+                          np.argmax(np.asarray(li, np.float32), -1)))
+    assert agree > 0.9
+
+
+def test_rel_errors_reported(setup):
+    cfg, params, batch, ctx_cal, report = setup
+    rels = [r.rel_error for r in report.results.values()]
+    assert all(np.isfinite(rels))
+    assert float(np.median(rels)) < 0.2

@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests (deliverable f): reduced configs, one
+forward + one train step on CPU, shape and finiteness asserts, plus
+prefill->decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.qmodel import QuantContext, QuantMode
+from repro.models import model as M
+from repro.optim import adamw
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "resnet_paper"]
+CTX = QuantContext(mode=QuantMode.FP)
+
+
+def _batch(cfg, b=2, s=64, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, s)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks,
+             "mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.family == "audio":
+        batch["encoder_features"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encdec.encoder_seq, cfg.d_model)),
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, _ = M.forward(params, batch, cfg, CTX)
+    assert logits.shape == (2, 64, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw()
+    state = opt.init(params)
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, s):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: M.loss_fn(pp, batch, cfg, CTX, remat=False),
+            has_aux=True)(p)
+        p2, s2 = opt.update(g, s, p, 1e-3)
+        return p2, s2, loss
+
+    p2, s2, loss = step(params, state)
+    assert bool(jnp.isfinite(loss))
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, p2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "deepseek_v3_671b",
+                                  "whisper_large_v3", "rwkv6_3b",
+                                  "zamba2_2_7b", "granite_moe_3b_a800m"])
+def test_prefill_decode_consistency(arch):
+    """decode(t | prefill(0..t-1)) == forward(0..t)[-1] (fp32 exact)."""
+    cfg = get_smoke_config(arch).scaled(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size)
+    batch = _batch(cfg)
+    batch["tokens"] = toks
+    logits_full, _ = M.forward(params, batch, cfg, CTX)
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :s - 1]
+    _, cache = M.prefill(params, pre, cfg, CTX, max_seq=s)
+    logits_dec, _ = M.decode_step(params, toks[:, s - 1:], cache,
+                                  jnp.asarray(s - 1), cfg, CTX)
+    ref = logits_full[:, -1]
+    rel = float(jnp.max(jnp.abs(logits_dec - ref)) /
+                (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 1e-3
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "granite_moe_3b_a800m"])
+def test_quant_modes_run_and_track_fp(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    out_fp, _ = M.forward(params, batch, cfg, CTX)
+    # MoE top-k routing is discontinuous: 8-bit perturbations flip expert
+    # choices on RANDOM weights, so correlation is intrinsically lower there
+    # (trained models are far more stable — see test_system).
+    floor = 0.6 if cfg.moe is not None else 0.8
+    for mode in (QuantMode.FAKE, QuantMode.INT):
+        ctx = QuantContext(mode=mode)
+        out_q, _ = M.forward(params, batch, cfg, ctx)
+        assert bool(jnp.all(jnp.isfinite(out_q.astype(jnp.float32))))
+        # quantized logits correlate with fp logits
+        a = np.asarray(out_fp.astype(jnp.float32)).ravel()
+        bq = np.asarray(out_q.astype(jnp.float32)).ravel()
+        corr = np.corrcoef(a, bq)[0, 1]
+        assert corr > floor, f"{mode}: corr {corr}"

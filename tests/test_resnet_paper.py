@@ -1,0 +1,79 @@
+"""The paper-faithful ResNet path: BN folding, Fig. 1 plan, Algorithm 1
+calibration, and the integer-only serve path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.resnet_paper import SMOKE_CONFIG
+from repro.core.dataflow import count_quant_ops
+from repro.models import resnet as R
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = SMOKE_CONFIG
+    params = R.init_resnet(cfg, jax.random.PRNGKey(0))
+    # give BN stats some structure so folding is non-trivial
+    for blk in params["blocks"]:
+        for c in blk.values():
+            c["bn_var"] = c["bn_var"] * 2.0 + 0.5
+            c["bn_mean"] = c["bn_mean"] + 0.1
+    x = jnp.asarray(np.random.default_rng(0).uniform(
+        0, 1, size=(8, cfg.img_size, cfg.img_size, 3)), jnp.float32)
+    return cfg, params, x
+
+
+def test_bn_folding_is_exact(setup):
+    cfg, params, x = setup
+    conv = params["blocks"][0]["conv1"]
+    w, b = R.fold_bn(conv)
+    h = jnp.asarray(np.random.default_rng(1).normal(size=(2, 8, 8, w.shape[2])),
+                    jnp.float32)
+    direct = jax.lax.conv_general_dilated(
+        h, conv["w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    bn = (direct - conv["bn_mean"]) / jnp.sqrt(conv["bn_var"] + 1e-5) \
+        * conv["bn_gamma"] + conv["bn_beta"]
+    folded = jax.lax.conv_general_dilated(
+        h, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    assert np.allclose(np.asarray(bn), np.asarray(folded), atol=1e-4)
+
+
+def test_plan_counts(setup):
+    cfg, params, x = setup
+    plan = R.build_resnet_plan(cfg)
+    counts = count_quant_ops(plan)
+    assert counts["saved"] > 0                    # joint < naive
+    assert counts["joint_activation_points"] == len(plan.modules)
+
+
+def test_calibration_and_int_path_agree_with_fake_path(setup):
+    cfg, params, x = setup
+    q = R.quantize_resnet(params, x, cfg)
+    # quantized fake-arithmetic forward tracks the FP forward
+    logits_fp = R.resnet_forward(params, x, cfg)
+    logits_int = R.resnet_int_forward(q, x, cfg)
+    # predictions should agree on most samples (tiny net, 8-bit)
+    agree = np.mean(np.argmax(np.asarray(logits_fp), -1) ==
+                    np.argmax(np.asarray(logits_int), -1))
+    assert agree >= 0.5
+    # per-module relative reconstruction errors are small
+    rels = [r.rel_error for r in q.report.results.values()]
+    assert np.median(rels) < 0.2
+
+
+def test_calibration_time_is_minutes_not_days(setup):
+    """Paper Table 2: minutes.  The smoke net must calibrate in seconds."""
+    cfg, params, x = setup
+    q = R.quantize_resnet(params, x, cfg)
+    assert q.report.total_s < 120
+
+
+def test_shift_values_in_hardware_range(setup):
+    """Paper Fig. 2(b): shifts land in a small range ([1,10] in the RTL)."""
+    cfg, params, x = setup
+    q = R.quantize_resnet(params, x, cfg)
+    for name, spec in q.specs.items():
+        if hasattr(spec, "requant_shift"):
+            assert -8 <= spec.requant_shift <= 24

@@ -1,0 +1,78 @@
+"""Partition-rule unit tests (AbstractMesh — no multi-device env needed)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.distributed import sharding as shd
+from repro.launch import steps as S
+
+
+def _mesh(data=2, model=2):
+    return AbstractMesh((data, model), ("data", "model"))
+
+
+def test_attention_and_mlp_rules():
+    mesh = _mesh()
+    cfg = get_smoke_config("qwen3_1_7b")
+    abs_p = S.abstract_params(cfg)
+    specs = shd.param_sharding_rules(abs_p, mesh, fsdp=False)
+    blocks = specs["blocks"]
+    assert blocks["attn"]["wq"] == P(None, None, "model")
+    assert blocks["attn"]["wo"] == P(None, "model", None)
+    assert blocks["mlp"]["w1"] == P(None, None, "model")
+    assert blocks["mlp"]["w2"] == P(None, "model", None)
+    assert specs["embed"] == P("model", None)
+    assert specs["lm_head"] == P(None, "model")
+    assert specs["ln_f"] in (P(), P(None))
+
+
+def test_moe_expert_parallel_rules():
+    mesh = _mesh()
+    cfg = get_smoke_config("granite_moe_3b_a800m")
+    specs = shd.param_sharding_rules(S.abstract_params(cfg), mesh, fsdp=False)
+    assert specs["blocks"]["moe"]["w1"] == P(None, "model", None, None)
+    assert specs["blocks"]["moe"]["router"] == P(None, None, None)
+
+
+def test_fsdp_adds_data_axis_on_large_leaves():
+    mesh = _mesh()
+    big = jax.eval_shape(lambda: {"blocks": {"mlp": {
+        "w1": jnp.zeros((16, 4096, 4096), jnp.bfloat16)}}})
+    spec = shd.param_sharding_rules(big, mesh, fsdp=True)
+    assert spec["blocks"]["mlp"]["w1"] == P(None, "data", "model")
+    # small leaves stay unsharded on data
+    small = jax.eval_shape(lambda: {"blocks": {"mlp": {
+        "w1": jnp.zeros((2, 64, 64), jnp.bfloat16)}}})
+    spec = shd.param_sharding_rules(small, mesh, fsdp=True)
+    assert "data" not in tuple(spec["blocks"]["mlp"]["w1"])
+
+
+def test_constrain_noop_outside_scope():
+    x = jnp.zeros((4, 8))
+    assert shd.constrain(x, ("batch", None)) is x
+    assert shd.data_shards() == 1
+
+
+def test_constrain_inside_scope_single_device():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with shd.activation_sharding(mesh):
+        x = jnp.zeros((3, 5))
+        y = shd.constrain(x, ("batch", "model"))
+        assert y.shape == x.shape
+        assert shd.data_shards() == 1
+
+
+def test_cache_sharding_rules():
+    mesh = _mesh()
+    cfg = get_smoke_config("qwen3_1_7b")
+    cache_abs = S.abstract_cache(cfg, batch=4, max_seq=128)
+    specs = shd.cache_sharding_rules(cache_abs, mesh)
+    k_spec = specs["kv"].k
+    assert k_spec[1] == "data"        # batch 4 % 2 == 0
+    assert k_spec[3] in ("model", None)
+
+
+def test_batch_sharding_composite_axis():
+    multi = AbstractMesh((2, 4, 4), ("pod", "data", "model"))
+    assert shd.batch_sharding(multi, 2) == P(("pod", "data"), None)

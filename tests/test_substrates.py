@@ -1,0 +1,99 @@
+"""Data pipeline, optimizers, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import ShardedLoader, SyntheticLMStream
+from repro.optim import (adamw, adafactor, clip_by_global_norm,
+                         warmup_cosine, quantize_grads_po2,
+                         dequantize_grads_po2)
+
+
+def test_stream_deterministic():
+    s = SyntheticLMStream(1000, 32, 4, seed=7)
+    b1, b2 = s.batch(5), s.batch(5)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s.batch(6)["tokens"], b1["tokens"])
+
+
+def test_loader_prefetch_and_state_restore():
+    s = SyntheticLMStream(1000, 16, 2, seed=3)
+    loader = ShardedLoader(s, shardings={})
+    step0, b0 = next(loader)
+    step1, b1 = next(loader)
+    state = loader.state()
+    loader.close()
+    loader2 = ShardedLoader.restore(SyntheticLMStream(1000, 16, 2), {}, state)
+    step2, b2 = next(loader2)
+    loader2.close()
+    assert step2 == step1 + 1
+    assert np.array_equal(np.asarray(b2["tokens"]),
+                          s.batch(step2)["tokens"])
+
+
+def _quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor])
+def test_optimizers_descend(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.zeros((256, 256)), "b": jnp.zeros((4,))}
+    state = opt.init(params)
+    loss0 = float(_quad_loss(params))
+    for _ in range(50):
+        g = jax.grad(_quad_loss)(params)
+        params, state = opt.update(g, state, params, 0.1)
+    assert float(_quad_loss(params)) < 0.2 * loss0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    n2 = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree_util.tree_leaves(
+        clipped)))
+    assert abs(float(n2) - 1.0) < 1e-3
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1e-3, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < float(lr(50)) < float(lr(10))
+
+
+def test_grad_compression_roundtrip():
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(64, 64)) * 0.01, jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(8,)) * 2.0, jnp.float32)}
+    codes, ns = quantize_grads_po2(grads)
+    back = dequantize_grads_po2(codes, ns)
+    for k in grads:
+        rel = float(jnp.linalg.norm(back[k] - grads[k]) /
+                    jnp.linalg.norm(grads[k]))
+        # po2 8-bit grid: step = 2^-n <= range/128 -> rel error ~3% on
+        # gaussian grads (step/(sqrt(12) sigma))
+        assert rel < 0.05, f"{k}: {rel}"
+    # wire format is 8-bit even though codes ride in int32
+    assert int(jnp.max(jnp.abs(codes["w"]))) <= 127
+
+
+def test_compressed_psum_single_device():
+    from repro.optim.compression import compressed_psum
+    from jax.sharding import Mesh
+    import jax.experimental.shard_map as shard_map
+    mesh = jax.make_mesh((1,), ("d",))
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(32,)) * 0.1,
+                          jnp.float32)}
+
+    def f(g):
+        return compressed_psum(g, "d")
+
+    out = jax.jit(shard_map.shard_map(
+        f, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),),
+        out_specs=jax.sharding.PartitionSpec()))(g)
+    rel = float(jnp.linalg.norm(out["w"] - g["w"]) /
+                jnp.linalg.norm(g["w"]))
+    assert rel < 0.05

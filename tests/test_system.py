@@ -1,0 +1,109 @@
+"""End-to-end system tests: train -> calibrate (Algorithm 1, no fine-tune)
+-> integer serve; plus train-loop determinism across checkpoint restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_smoke_config
+from repro.core.qmodel import ModuleBits, QuantContext, QuantMode
+from repro.data import SyntheticLMStream
+from repro.models import model as M
+from repro.optim import adamw, warmup_cosine
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Train a tiny LM a few hundred steps on the synthetic stream."""
+    cfg = get_smoke_config("llama3_2_1b").scaled(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw(weight_decay=0.0)
+    state = opt.init(params)
+    stream = SyntheticLMStream(cfg.vocab_size, 32, 8, seed=0)
+    lr = warmup_cosine(3e-3, 20, 200)
+    ctx = QuantContext(mode=QuantMode.FP)
+
+    @jax.jit
+    def step(p, s, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: M.loss_fn(pp, batch, cfg, ctx, remat=False),
+            has_aux=True)(p)
+        p2, s2 = opt.update(g, s, p, lr(s.step))
+        return p2, s2, loss
+
+    losses = []
+    for i in range(200):
+        b = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+        params, state, loss = step(params, state, b)
+        losses.append(float(loss))
+    return cfg, params, stream, losses
+
+
+def test_training_reduces_loss(trained):
+    cfg, params, stream, losses = trained
+    assert np.mean(losses[-20:]) < 0.8 * np.mean(losses[:20])
+
+
+def test_fake_quant_model_tracks_fp(trained):
+    """Paper Table 1 analogue: 8-bit fake-quant model's predictions agree
+    with the FP model (no fine-tuning)."""
+    cfg, params, stream, _ = trained
+    batch = {k: jnp.asarray(v) for k, v in stream.batch(999).items()}
+    fp_ctx = QuantContext(mode=QuantMode.FP)
+    q_ctx = QuantContext(mode=QuantMode.FAKE)
+    lf, _ = M.forward(params, batch, cfg, fp_ctx)
+    lq, _ = M.forward(params, batch, cfg, q_ctx)
+    agree = float(jnp.mean((jnp.argmax(lf, -1) == jnp.argmax(lq, -1))
+                           .astype(jnp.float32)))
+    assert agree > 0.9, f"prediction agreement {agree}"
+
+
+def test_int_serve_matches_fake(trained):
+    """Integer decode path is consistent with the fake-quant arithmetic."""
+    cfg, params, stream, _ = trained
+    batch = {"tokens": jnp.asarray(stream.batch(998)["tokens"][:, :31])}
+    for mode in (QuantMode.FAKE, QuantMode.INT):
+        ctx = QuantContext(mode=mode)
+        logits, cache = M.prefill(params, batch, cfg, ctx, max_seq=32)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        logits2, _ = M.decode_step(params, tok, cache, jnp.asarray(31),
+                                   cfg, ctx)
+        assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_train_restore_determinism(tmp_path):
+    """Checkpoint at step k, restart, reach the same loss at step k+n —
+    the fault-tolerance correctness contract."""
+    cfg = get_smoke_config("qwen3_1_7b").scaled(dtype="float32")
+    opt = adamw(weight_decay=0.0)
+    ctx = QuantContext(mode=QuantMode.FP)
+    stream = SyntheticLMStream(cfg.vocab_size, 16, 4, seed=5)
+
+    @jax.jit
+    def step(p, s, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: M.loss_fn(pp, batch, cfg, ctx, remat=False),
+            has_aux=True)(p)
+        p2, s2 = opt.update(g, s, p, 1e-3)
+        return p2, s2, loss
+
+    def run(p, s, lo, hi):
+        loss = None
+        for i in range(lo, hi):
+            b = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+            p, s, loss = step(p, s, b)
+        return p, s, float(loss)
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init(params)
+    params, state, _ = run(params, state, 0, 5)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, {"params": params, "opt": state}, blocking=True)
+    _, _, loss_direct = run(params, state, 5, 10)
+
+    restored, _ = ck.restore(jax.eval_shape(
+        lambda: {"params": params, "opt": state}))
+    _, _, loss_resumed = run(restored["params"], restored["opt"], 5, 10)
+    assert abs(loss_direct - loss_resumed) < 1e-5
