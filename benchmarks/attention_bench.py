@@ -1,0 +1,153 @@
+"""Attention dataflow benchmark: fused int8-KV flash kernel vs pure JAX.
+
+Sweeps S in {1k, 8k, 32k} x {bf16, int8} KV x {flash kernel, pure-JAX
+chunked}, reporting µs/call (wall-clock over jitted calls) and the analytic
+HBM KV bytes moved per call (DESIGN.md §2 bytes model — the quantity the
+paper's dataflow argument is about).
+
+On CPU the kernel runs in Pallas interpret mode, which is not a timing
+proxy; kernel µs are only measured on a real TPU backend (pass
+``--time-kernel`` to force).  The bytes model needs no hardware — that is
+the acceptance metric tracked across PRs (BENCH_attention.json).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.attention_bench [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qscheme import quant
+from repro.kernels import ops
+from repro.models.attention import chunked_attention
+
+# decode-shaped cell: serving's steady state, where KV reads dominate
+BATCH, HEADS, KV_HEADS, HEAD_DIM = 1, 8, 2, 128
+NKV = 4
+SIZES = (1024, 8192, 32768)
+
+
+def _timeit(fn, *args, reps: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _decode_cell(s: int, int8_kv: bool, rng: np.random.Generator):
+    groups = HEADS // KV_HEADS
+    # bf16 throughout — the serving dtype the kv="bf16" label claims
+    q = jnp.asarray(rng.normal(size=(BATCH, 1, HEADS, HEAD_DIM)),
+                    jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(BATCH, s, KV_HEADS, HEAD_DIM)),
+                    jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(BATCH, s, KV_HEADS, HEAD_DIM)),
+                    jnp.bfloat16)
+    if int8_kv:
+        k, v = quant(k, NKV, 8), quant(v, NKV, 8)
+    pos = jnp.asarray(s - 1, jnp.int32)
+    return q, k, v, pos, groups
+
+
+def _jax_path(q, k, v, pos, groups):
+    """The dataflow the kernel deletes: dequantize the whole cache to HBM,
+    repeat the groups, then chunked attention — the exact fallback the
+    kernel is validated against (ops._dequant_then_repeat)."""
+    del groups  # derived inside the shared fallback helper
+    kr, vr = ops._dequant_then_repeat(q, k, v, NKV)
+    return chunked_attention(q, kr, vr, causal=True, q_offset=pos)
+
+
+def bench_attention(sizes=SIZES, *, time_kernel: bool | None = None,
+                    reps: int = 3) -> list[dict]:
+    """Returns one row per (S, kv dtype, path) cell."""
+    if time_kernel is None:
+        time_kernel = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(0)
+    rows = []
+    for s in sizes:
+        for int8_kv in (False, True):
+            q, k, v, pos, groups = _decode_cell(s, int8_kv, rng)
+            kv_bits = 8 if int8_kv else 16
+            common = dict(seq=s, kv=("int8" if int8_kv else "bf16"),
+                          batch=BATCH, kv_heads=KV_HEADS, head_dim=HEAD_DIM)
+            jax_fn = jax.jit(lambda q_, k_, v_, p: _jax_path(
+                q_, k_, v_, p, groups))
+            rows.append(dict(
+                common, path="jax_chunked",
+                us_per_call=round(_timeit(jax_fn, q, k, v, pos, reps=reps), 1),
+                kv_bytes=ops.attention_kv_bytes(
+                    s, KV_HEADS, HEAD_DIM, HEAD_DIM, kv_bits=kv_bits,
+                    fused=False, batch=BATCH, groups=groups)))
+            flash_us = None
+            if time_kernel:
+                flash_fn = jax.jit(lambda q_, k_, v_, p: ops.flash_decode(
+                    q_, k_, v_, pos=p,
+                    kv_frac_bits=NKV if int8_kv else None))
+                flash_us = round(_timeit(flash_fn, q, k, v, pos, reps=reps), 1)
+            rows.append(dict(
+                common, path="flash_fused", us_per_call=flash_us,
+                kv_bytes=ops.attention_kv_bytes(
+                    s, KV_HEADS, HEAD_DIM, HEAD_DIM, kv_bits=kv_bits,
+                    fused=True, batch=BATCH)))
+    return rows
+
+
+def rows_to_csv(rows):
+    """CSV rows in the benchmarks/run.py ``name,us_per_call,derived``
+    contract; derived = analytic KV bytes per call."""
+    for r in rows:
+        name = f"attn_{r['path']}_s{r['seq']}_{r['kv']}"
+        us = r["us_per_call"] if r["us_per_call"] is not None else 0
+        yield f"{name},{us},kv_bytes={r['kv_bytes']}"
+
+
+def bench_rows(sizes=SIZES, **kw):
+    """run.py entry point: run the sweep, persist BENCH_attention.json,
+    yield CSV rows."""
+    rows = bench_attention(sizes, **kw)
+    with open("BENCH_attention.json", "w") as f:
+        json.dump({"backend": jax.default_backend(), "rows": rows}, f,
+                  indent=2)
+    yield from rows_to_csv(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_attention.json")
+    ap.add_argument("--sizes", type=int, nargs="+", default=list(SIZES))
+    ap.add_argument("--time-kernel", action="store_true",
+                    help="time the Pallas kernel even off-TPU (interpret "
+                         "mode: orders of magnitude slow, not a proxy)")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    rows = bench_attention(tuple(args.sizes),
+                           time_kernel=args.time_kernel or None,
+                           reps=args.reps)
+    payload = {"backend": jax.default_backend(), "rows": rows}
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("name,us_per_call,derived")
+    for line in rows_to_csv(rows):
+        print(line)
+    # headline ratio the paper's argument predicts (>= 3x at 8k, see tests)
+    by = {(r["seq"], r["kv"], r["path"]): r for r in rows}
+    for s in args.sizes:
+        f_ = by.get((s, "int8", "flash_fused"))
+        d_ = by.get((s, "int8", "jax_chunked"))
+        if f_ and d_:
+            print(f"attn_kv_bytes_ratio_s{s},0,"
+                  f"ratio={d_['kv_bytes'] / f_['kv_bytes']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

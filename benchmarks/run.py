@@ -1,4 +1,6 @@
-"""Benchmark driver: one function per paper table (+ Fig. 2).
+"""Benchmark driver: one function per paper table (+ Fig. 2) plus the
+attention dataflow sweep (``attention_bench.bench_rows``, which also
+persists BENCH_attention.json for the cross-PR perf trajectory).
 
 Prints ``name,us_per_call,derived`` CSV rows.  The roofline/dry-run benches
 need the 512-device env and run as separate modules:
@@ -12,13 +14,14 @@ import sys
 
 
 def main() -> None:
+    from benchmarks import attention_bench as A
     from benchmarks import paper_tables as T
 
     print("name,us_per_call,derived")
     ok = True
     for fn in (T.table1_accuracy, T.table2_calibration_time,
                T.table3_bitwidths, T.table4_bitwidth_quality,
-               T.table5_hwcost, T.fig2_stats):
+               T.table5_hwcost, T.fig2_stats, A.bench_rows):
         try:
             for row in fn():
                 print(row)

@@ -103,6 +103,11 @@ class ModelConfig:
     # rope/qk-norm K and V are O(1)-ranged, n=4 keeps |x|<8 representable.
     kv_cache_bits: Optional[int] = None
     kv_cache_frac_bits: int = 4
+    # attention implementation for the hot paths (DESIGN §2):
+    #   'chunked' — pure-JAX online-softmax scan (reference, CPU-friendly)
+    #   'flash'   — fused Pallas kernel; with an int8 KV cache the codes are
+    #               dequantized in-register, so the bf16 KV never hits HBM
+    attn_kernel: str = "chunked"
 
     @property
     def resolved_head_dim(self) -> int:

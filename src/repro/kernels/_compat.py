@@ -1,0 +1,14 @@
+"""Pallas API compatibility across jax versions.
+
+jax <= 0.4.x names the TPU compiler-params dataclass ``TPUCompilerParams``;
+newer releases renamed it ``CompilerParams``.  Resolve once here so every
+kernel module stays version-agnostic.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -1,0 +1,266 @@
+"""Pallas TPU flash attention with FUSED int8-KV bit-shift dequantization.
+
+The paper's thesis (DESIGN.md §1) is that every avoidable memory touch of a
+full-precision tensor costs energy and information: its ASIC fuses the
+requant unit between the MAC array and SRAM so un-requantized tensors never
+reach memory.  ``int8_matmul.py`` realizes that for projections; this module
+realizes it for attention — the dominant cost at long sequence and during
+decode (DESIGN.md §2).
+
+Dataflow (the whole point):
+
+    HBM:   int8 KV codes ──DMA──▶ VMEM tile ──cast·2^-N (in-register)──▶ MXU
+                                      │
+           (the bf16 KV tensor never exists in HBM; previously the cache was
+            dequantized to a full bf16 copy *before* attention, tripling KV
+            read/write bytes, and the (B,H,qc,kc) score tiles round-tripped
+            through HBM between the softmax and the PV matmul)
+
+Dequantization of a power-of-two-grid code is ``x * 2^-N`` (Eq. 1 inverse)
+with static ``N``:
+
+  * K codes: the scalar folds into the softmax scale — the kernel computes
+    ``(q @ K_codes^T) * (sm_scale * 2^-N_k)``; the cast int8→bf16 is exact
+    (|code| <= 128 < 2^8) and happens on the VMEM tile.
+  * V codes: the scalar folds into the final normalization —
+    ``out = acc * 2^-N_v / l`` — exact because ``l`` depends only on ``p``.
+
+Two grid variants:
+
+  * **prefill**: grid (B, H, Sq/bq, Skv/bk), causal, online softmax with
+    fp32 running (m, l, acc) in VMEM scratch, GQA via the K/V index map
+    (``h // groups`` — no repeated KV is ever materialized).  KV tiles
+    above the causal diagonal (and fully-padded tiles) are skipped.
+  * **decode**: q_len == 1, grid (B, KVH, S/bk), the (scalar, traced)
+    absolute position arrives via scalar prefetch; all ``groups`` query
+    heads of one KV head ride in the sublane dimension of a single q tile,
+    so a KV tile is DMA'd exactly once per group (GQA-aware).  KV tiles
+    entirely in the future (``kv_start > pos``) are skipped.
+
+Tiling follows the ``int8_matmul`` conventions: lane dim 128, fp32 scratch
+persists across the innermost ("arbitrary") KV grid dimension, block shapes
+are static and chosen by the ``ops.py`` wrapper which also pads inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+__all__ = ["make_flash_prefill", "make_flash_decode", "DEFAULT_MASK_VALUE"]
+
+# Finite stand-in for -inf: exp(MASK - m) underflows to exactly 0.0 in f32
+# whenever any in-tile entry is live, and never produces inf - inf = NaN.
+DEFAULT_MASK_VALUE = -0.7 * float(np.finfo(np.float32).max)
+
+# m/l running statistics keep a full 128-lane register row (TPU lane width);
+# only column 0 is semantically live, the rest is broadcast.
+_STATS_LANES = 128
+
+
+def _flash_prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                          *, groups: int, score_scale: float, v_scale: float,
+                          causal: bool, q_offset: int, sq: int, skv: int,
+                          bq: int, bk: int, nk: int, out_dtype):
+    """Grid (b, h, qi, ki), ki innermost.  Block shapes:
+    q (1,bq,1,dk) · k (1,bk,1,dk) · v (1,bk,1,dv) · o (1,bq,1,dv)."""
+    del groups, sq  # encoded in the index maps / wrapper slicing
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, -jnp.inf, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    # Tile-level skipping: causal tiles strictly above the diagonal and
+    # fully-padded tiles contribute nothing — no DMA'd compute is wasted.
+    kv_start = ki * bk
+    run = kv_start < skv
+    if causal:
+        run = jnp.logical_and(run, kv_start <= q_offset + (qi + 1) * bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :]                          # (bq, dk)
+        # int8 KV codes cast in-register; exact (|code| < 2^8 << bf16 mantissa)
+        k = k_ref[0, :, 0, :].astype(q.dtype)          # (bk, dk)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * score_scale
+
+        kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kv_pos < skv                            # padding mask
+        if causal:
+            q_pos = (q_offset + qi * bq
+                     + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+            mask = jnp.logical_and(mask, kv_pos <= q_pos)
+        s = jnp.where(mask, s, DEFAULT_MASK_VALUE)
+
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_curr = jnp.max(s, axis=1, keepdims=True)
+        m_next = jnp.maximum(m_prev, m_curr)
+        alpha = jnp.exp(m_prev - m_next)               # old-stats correction
+        p = jnp.exp(s - m_next)                        # masked entries -> 0.0
+        l_scr[...] = jnp.broadcast_to(
+            l_prev * alpha + jnp.sum(p, axis=1, keepdims=True), l_scr.shape)
+        m_scr[...] = jnp.broadcast_to(m_next, m_scr.shape)
+
+        v = v_ref[0, :, 0, :].astype(q.dtype)          # (bk, dv)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(q.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _store():
+        l = l_scr[:, :1]
+        l_inv = jnp.where(l == 0.0, 1.0, 1.0 / l)      # fully-masked rows
+        o_ref[0, :, 0, :] = (acc_scr[...] * l_inv * v_scale).astype(out_dtype)
+
+
+def make_flash_prefill(b: int, h: int, kvh: int, sq_p: int, skv_p: int,
+                       dk_p: int, dv_p: int, *, bq: int, bk: int,
+                       causal: bool, q_offset: int, sq: int, skv: int,
+                       score_scale: float, v_scale: float, k_dtype,
+                       out_dtype, interpret: bool = False):
+    """Build the prefill pallas_call.
+
+    Input layouts match the model's native (B, S, H, D) — the K/V index map
+    contracts the GQA grouping (``h // groups``) so grouped heads read the
+    same KV tile and nothing is repeated in HBM.  ``sq``/``skv`` are the
+    true (unpadded) lengths; ``*_p`` the padded operand shapes.
+    """
+    del k_dtype
+    groups = h // kvh
+    nk = skv_p // bk
+    kernel = functools.partial(
+        _flash_prefill_kernel, groups=groups, score_scale=score_scale,
+        v_scale=v_scale, causal=causal, q_offset=q_offset, sq=sq, skv=skv,
+        bq=bq, bk=bk, nk=nk, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sq_p // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dk_p),
+                         lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+            pl.BlockSpec((1, bk, 1, dk_p),
+                         lambda b_, h_, qi, ki: (b_, ki, h_ // groups, 0)),
+            pl.BlockSpec((1, bk, 1, dv_p),
+                         lambda b_, h_, qi, ki: (b_, ki, h_ // groups, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dv_p),
+                               lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq_p, h, dv_p), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _STATS_LANES), jnp.float32),   # running max m
+            pltpu.VMEM((bq, _STATS_LANES), jnp.float32),   # running sum l
+            pltpu.VMEM((bq, dv_p), jnp.float32),           # output acc
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )
+
+
+def _flash_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, score_scale: float,
+                         v_scale: float, bk: int, nk: int, out_dtype):
+    """Grid (b, kv_head, ki).  One q tile carries all ``groups`` query heads
+    of this KV head in its sublane dim — the KV tile is loaded once and
+    shared (GQA-aware).  ``pos`` (absolute position of the new token) is a
+    traced scalar delivered by scalar prefetch; KV tiles with
+    ``kv_start > pos`` are skipped, so decode cost tracks the LIVE sequence
+    length, not the allocated cache length."""
+    ki = pl.program_id(2)
+    pos = pos_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, -jnp.inf, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    @pl.when(ki * bk <= pos)
+    def _compute():
+        q = q_ref[0, 0]                                # (gp, dk)
+        k = k_ref[0, :, 0, :].astype(q.dtype)          # (bk, dk)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * score_scale
+
+        gp = q.shape[0]
+        kv_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (gp, bk), 1)
+        s = jnp.where(kv_pos <= pos, s, DEFAULT_MASK_VALUE)
+
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_curr = jnp.max(s, axis=1, keepdims=True)
+        m_next = jnp.maximum(m_prev, m_curr)
+        alpha = jnp.exp(m_prev - m_next)
+        p = jnp.exp(s - m_next)
+        l_scr[...] = jnp.broadcast_to(
+            l_prev * alpha + jnp.sum(p, axis=1, keepdims=True), l_scr.shape)
+        m_scr[...] = jnp.broadcast_to(m_next, m_scr.shape)
+
+        v = v_ref[0, :, 0, :].astype(q.dtype)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(q.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _store():
+        l = l_scr[:, :1]
+        l_inv = jnp.where(l == 0.0, 1.0, 1.0 / l)
+        o_ref[0, 0] = (acc_scr[...] * l_inv * v_scale).astype(out_dtype)
+
+
+def make_flash_decode(b: int, kvh: int, gp: int, s_max: int, dk_p: int,
+                      dv_p: int, *, bk: int, score_scale: float,
+                      v_scale: float, out_dtype, interpret: bool = False):
+    """Build the decode pallas_call.
+
+    Operands: pos (1,) int32 scalar-prefetch · q (B, KVH, gp, dk) ·
+    k/v (B, S_max, KVH, d) — the cache's native layout, indexed in place
+    (no transpose, no dequantized copy).  ``gp`` is the GQA group count
+    padded to the sublane minimum.
+    """
+    nk = s_max // bk
+    kernel = functools.partial(
+        _flash_decode_kernel, score_scale=score_scale, v_scale=v_scale,
+        bk=bk, nk=nk, out_dtype=out_dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, gp, dk_p),
+                         lambda b_, h_, ki, pos_ref: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, bk, 1, dk_p),
+                         lambda b_, h_, ki, pos_ref: (b_, ki, h_, 0)),
+            pl.BlockSpec((1, bk, 1, dv_p),
+                         lambda b_, h_, ki, pos_ref: (b_, ki, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gp, dv_p),
+                               lambda b_, h_, ki, pos_ref: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((gp, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((gp, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((gp, dv_p), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, gp, dv_p), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 __all__ = ["int8_matmul_kernel", "make_int8_matmul"]
 
 
@@ -63,7 +65,11 @@ def int8_matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
             if bias_shift >= 0:
                 b = b << bias_shift
             else:
-                b = _shift_requant_i32(b, -(-bias_shift), -(2**31), 2**31 - 1)
+                # negative bias_shift: the bias grid is FINER than the
+                # accumulator grid, so drop low bits with a rounding
+                # right-shift by |bias_shift| (Eq. 3, "sacrificing smaller
+                # values").
+                b = _shift_requant_i32(b, -bias_shift, -(2**31), 2**31 - 1)
             acc = acc + b
         if relu:
             acc = jnp.maximum(acc, 0)  # Fig. 1(b): sign check pre-requant
@@ -103,7 +109,7 @@ def make_int8_matmul(m: int, k: int, n: int, *, bm: int, bk: int, bn: int,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )

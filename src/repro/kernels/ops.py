@@ -16,6 +16,7 @@ and every dim is a multiple of the 128-lane MXU tiling.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -23,14 +24,17 @@ import jax.numpy as jnp
 
 from repro.core.integer_ops import LinearQuantSpec, int_linear
 from repro.kernels import ref
+from repro.kernels.flash_attention import make_flash_decode, make_flash_prefill
 from repro.kernels.int8_matmul import make_int8_matmul
 from repro.kernels.quantize import make_quantize
 from repro.kernels.residual_requant import make_residual_requant
 
 __all__ = ["int8_matmul", "quantize_act", "residual_requant",
-           "use_interpret", "DEFAULT_BLOCKS"]
+           "flash_attention", "flash_decode", "attention_kv_bytes",
+           "use_interpret", "DEFAULT_BLOCKS", "FLASH_BLOCKS"]
 
 DEFAULT_BLOCKS = (128, 512, 512)  # (bm, bk, bn)
+FLASH_BLOCKS = (256, 512)         # (bq, bk) — q tile x kv tile
 
 
 def use_interpret() -> bool:
@@ -92,6 +96,174 @@ def int8_matmul(x_int: jax.Array, w_int: jax.Array,
     else:
         out = call(x2, w2)
     return out[:m, :n].reshape(*batch, n)
+
+
+# ---------------------------------------------------------------------------
+# fused (int8-KV) flash attention — DESIGN.md §2
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _resolve_kv_frac_bits(k: jax.Array, kv_frac_bits: Optional[int]) -> int:
+    """int8 KV codes are meaningless without their Eq.-1 fractional bit —
+    defaulting to 2^0 would be a silent temperature/scale corruption."""
+    if k.dtype == jnp.int8:
+        if kv_frac_bits is None:
+            raise ValueError("int8 KV codes require kv_frac_bits (the "
+                             "cache's static Eq.-1 fractional bit)")
+        return int(kv_frac_bits)
+    return 0
+
+
+def _dequant_then_repeat(q, k, v, nkv):
+    """Reference dataflow the kernel deletes: full dequant copy + group
+    repeat, then the pure-JAX chunked attention."""
+    from repro.core.qscheme import dequant
+    from repro.models.attention import _repeat_kv
+    if k.dtype == jnp.int8:
+        k = dequant(k, nkv, out_dtype=q.dtype)
+        v = dequant(v, nkv, out_dtype=q.dtype)
+    groups = q.shape[2] // k.shape[2]
+    return _repeat_kv(k, groups), _repeat_kv(v, groups)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_offset: int = 0,
+                    kv_frac_bits: Optional[int] = None,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Fused flash attention: q (B,Sq,H,Dk) x KV (B,Skv,KVH,D) -> (B,Sq,H,Dv).
+
+    K/V may be int8 Eq.-1 codes (then ``kv_frac_bits`` is their static
+    fractional bit): the codes are loaded directly into VMEM and dequantized
+    in-register — the bf16 KV tensor never materializes in HBM.  GQA is
+    contracted via the kernel's index maps, never repeated.  Shapes not
+    worth a launch fall back to the pure-JAX ``chunked_attention`` (which
+    stays the reference oracle).  ``q_offset`` must be a *static* int here
+    (prefill); traced decode positions go through :func:`flash_decode`.
+    """
+    b, sq, h, dk = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    nkv = _resolve_kv_frac_bits(k, kv_frac_bits)
+    int8_kv = k.dtype == jnp.int8
+    if sq < 16 or skv < 128:
+        from repro.models.attention import chunked_attention
+        kr, vr = _dequant_then_repeat(q, k, v, nkv)
+        return chunked_attention(q, kr, vr, causal=causal,
+                                 q_offset=q_offset, scale=scale)
+
+    bq, bk = FLASH_BLOCKS
+    sq_p = _round_up(sq, 128)
+    skv_p = _round_up(skv, 128)
+    bq, bk = min(bq, sq_p), min(bk, skv_p)
+    sq_p, skv_p = _round_up(sq_p, bq), _round_up(skv_p, bk)
+    dk_p, dv_p = _round_up(dk, 128), _round_up(dv, 128)
+
+    def kernel_call(q_, k_, v_):
+        qp = _pad_to(_pad_to(q_, bq, 1), dk_p, 3)
+        kp = _pad_to(_pad_to(k_, bk, 1), dk_p, 3)
+        vp = _pad_to(_pad_to(v_, bk, 1), dv_p, 3)
+        call = make_flash_prefill(
+            b, h, kvh, sq_p, skv_p, dk_p, dv_p, bq=bq, bk=bk, causal=causal,
+            q_offset=q_offset, sq=sq, skv=skv,
+            score_scale=scale * 2.0 ** (-nkv), v_scale=2.0 ** (-nkv),
+            k_dtype=k_.dtype, out_dtype=q_.dtype, interpret=use_interpret())
+        return call(qp, kp, vp)[:, :sq, :, :dv]
+
+    if int8_kv:
+        # inference-only dataflow (codes are non-differentiable anyway)
+        return kernel_call(q, k, v)
+
+    # float KV (train / prefill-from-scratch): pallas_call has no VJP rule,
+    # so pair the fused forward with a backward that recomputes through the
+    # chunked reference — same exact function, flash-attention style.
+    def ref_fn(q_, k_, v_):
+        from repro.models.attention import chunked_attention
+        kr, vr = _dequant_then_repeat(q_, k_, v_, nkv)
+        return chunked_attention(q_, kr, vr, causal=causal,
+                                 q_offset=q_offset, scale=scale)
+
+    @jax.custom_vjp
+    def attn(q_, k_, v_):
+        return kernel_call(q_, k_, v_)
+
+    def attn_fwd(q_, k_, v_):
+        return kernel_call(q_, k_, v_), (q_, k_, v_)
+
+    def attn_bwd(res, g):
+        return jax.vjp(ref_fn, *res)[1](g)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn(q, k, v)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 pos: jax.Array, kv_frac_bits: Optional[int] = None,
+                 scale: Optional[float] = None) -> jax.Array:
+    """Single-token fused decode: q (B,1,H,Dk) over the full cache
+    (B,S_max,KVH,D), masked at traced absolute position ``pos``.
+
+    The cache is read IN PLACE (native layout, int8 codes straight into
+    VMEM); grouped query heads share one KV tile DMA.  Falls back to the
+    chunked reference when the cache length has no MXU-aligned tile divisor
+    OR the head dims are not lane multiples — padding the head dim here
+    would copy the ENTIRE cache every decode step, which is exactly the
+    dataflow this kernel deletes.
+    """
+    b, sq1, h, dk = q.shape
+    assert sq1 == 1, "flash_decode is the q_len=1 kernel"
+    s_max, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    groups = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    nkv = _resolve_kv_frac_bits(k, kv_frac_bits)
+
+    bk = next((c for c in (512, 256, 128) if s_max % c == 0), None)
+    if bk is None or s_max < 128 or dk % 128 or dv % 128:
+        from repro.models.attention import chunked_attention
+        kr, vr = _dequant_then_repeat(q, k, v, nkv)
+        return chunked_attention(q, kr, vr, causal=True, q_offset=pos,
+                                 scale=scale)
+
+    gp = max(8, _round_up(groups, 8))
+    q4 = _pad_to(q[:, 0].reshape(b, kvh, groups, dk), gp, 2)
+
+    call = make_flash_decode(
+        b, kvh, gp, s_max, dk, dv, bk=bk,
+        score_scale=scale * 2.0 ** (-nkv), v_scale=2.0 ** (-nkv),
+        out_dtype=q.dtype, interpret=use_interpret())
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    out = call(pos_arr, q4, k, v)                      # (B, KVH, gp, dv)
+    return out[:, :, :groups].reshape(b, 1, h, dv)
+
+
+def attention_kv_bytes(skv: int, kvh: int, dk: int, dv: int, *,
+                       kv_bits: int = 16, fused: bool = True,
+                       batch: int = 1, groups: int = 1) -> int:
+    """Analytic HBM bytes touched for the KV operands of one attention call.
+
+    ``fused``: codes are DMA'd once and dequantized in VMEM (this module).
+    ``not fused``: the dequantize-then-attend pipeline, staged uniformly —
+    [int8 only] dequant pass reads the codes and writes a bf16 copy;
+    [groups > 1 only] the repeat reads that copy and writes it ``groups``x;
+    attention then reads whatever the last stage produced.
+    """
+    elems = batch * skv * kvh * (dk + dv)
+    code_bytes = kv_bits // 8
+    if fused:
+        return elems * code_bytes
+    bf16 = 2
+    total, cur = 0, code_bytes
+    if kv_bits < 16:
+        total += code_bytes + bf16     # dequant: read codes, write bf16 copy
+        cur = bf16
+    if groups > 1:
+        total += cur + bf16 * groups   # repeat: read copy, write groups x
+        cur = bf16 * groups
+    return elems * (total + cur)       # + the attention read itself
 
 
 def quantize_act(x: jax.Array, n: int, bits: int = 8,

@@ -28,8 +28,13 @@ from repro.models import model as M
 
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           mode: str = "int", calibrate: bool = True, smoke: bool = True,
-          seed: int = 0, params=None) -> dict:
+          seed: int = 0, params=None,
+          attn_kernel: str | None = None) -> dict:
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if attn_kernel is not None:
+        # 'flash' routes prefill/decode through the fused Pallas attention
+        # (DESIGN §2); int8 KV codes then skip the dequantized HBM copy.
+        cfg = dataclasses.replace(cfg, attn_kernel=attn_kernel)
     if params is None:
         params = M.init_params(cfg, jax.random.PRNGKey(seed))
     stream = SyntheticLMStream(
@@ -85,10 +90,14 @@ def main(argv=None):
                     choices=["fp", "fake", "fake_sf", "int"])
     ap.add_argument("--no-calibrate", action="store_true")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--attn-kernel", default=None,
+                    choices=["chunked", "flash"],
+                    help="attention path (DESIGN §2); default: cfg's")
     args = ap.parse_args(argv)
     out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 gen=args.gen, mode=args.mode,
-                calibrate=not args.no_calibrate, smoke=not args.full)
+                calibrate=not args.no_calibrate, smoke=not args.full,
+                attn_kernel=args.attn_kernel)
     print(f"generated {out['tokens'].shape} tokens | "
           f"prefill {out['prefill_s']:.2f}s | "
           f"decode {1e3*out['decode_s_per_tok']:.1f} ms/tok")

@@ -6,6 +6,7 @@ pure function of (abstract) arrays with static (cfg, ctx) — no globals.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Optional
 
@@ -146,15 +147,45 @@ def build_train_step(cfg: ModelConfig, ctx: QuantContext, opt: Optimizer,
     return train_step
 
 
-def build_prefill_step(cfg: ModelConfig, ctx: QuantContext):
+def _resolve_attn_kernel(cfg: ModelConfig, attn_kernel: Optional[str],
+                         mesh: Optional[Mesh] = None) -> ModelConfig:
+    """Serving-path attention selector (DESIGN §2): ``attn_kernel`` overrides
+    ``cfg.attn_kernel`` for this step builder only — 'flash' routes prefill
+    and decode through the fused Pallas kernel (int8 KV codes dequantized
+    in-register), 'chunked' keeps the pure-JAX reference.
+
+    The flash kernels have no SPMD partitioning rule yet (DESIGN §2 open
+    item): under GSPMD on a >1-device mesh they would force the sequence-
+    sharded cache to be gathered/replicated per layer — the exact multi-GB
+    dataflow the chunked decode path avoids — so flash is demoted to
+    chunked there rather than silently regressing."""
+    if attn_kernel is not None and attn_kernel != cfg.attn_kernel:
+        cfg = dataclasses.replace(cfg, attn_kernel=attn_kernel)
+    if cfg.attn_kernel == "flash" and mesh is not None and mesh.size > 1:
+        import warnings
+        warnings.warn("attn_kernel='flash' is single-device for now; "
+                      "demoting to 'chunked' on a size-%d mesh" % mesh.size,
+                      stacklevel=3)
+        cfg = dataclasses.replace(cfg, attn_kernel="chunked")
+    return cfg
+
+
+def build_prefill_step(cfg: ModelConfig, ctx: QuantContext,
+                       attn_kernel: Optional[str] = None,
+                       mesh: Optional[Mesh] = None):
+    cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
+
     def prefill_step(params, batch):
         return M.prefill(params, batch, cfg, ctx)
 
     return prefill_step
 
 
-def build_serve_step(cfg: ModelConfig, ctx: QuantContext):
+def build_serve_step(cfg: ModelConfig, ctx: QuantContext,
+                     attn_kernel: Optional[str] = None,
+                     mesh: Optional[Mesh] = None):
     """One batched decode step (greedy sampling of the next token)."""
+    cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
 
     def serve_step(params, tokens, cache, pos):
         logits, cache = M.decode_step(params, tokens, cache, pos, cfg, ctx)
@@ -256,14 +287,15 @@ def _opt_spec_like(opt_abs: Any, p_spec: Any) -> Any:
 
 
 def jit_serve_step(cfg: ModelConfig, ctx: QuantContext, mesh: Mesh,
-                   shape: ShapeConfig, *, fsdp: bool = True):
+                   shape: ShapeConfig, *, fsdp: bool = True,
+                   attn_kernel: Optional[str] = None):
     """jit'd decode step with full sharding wiring for one decode cell."""
     params_abs = abstract_params(cfg)
     p_spec = shd.param_sharding_rules(params_abs, mesh, fsdp=fsdp,
                                       serve=True)
     cache_abs = abstract_cache(cfg, shape.global_batch, shape.seq_len)
     c_spec = shd.cache_sharding_rules(cache_abs, mesh)
-    step = build_serve_step(cfg, ctx)
+    step = build_serve_step(cfg, ctx, attn_kernel, mesh)
     ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                                    is_leaf=_is_pspec)
     tok_spec = NamedSharding(mesh, shd.batch_sharding(mesh, 2)
@@ -276,11 +308,12 @@ def jit_serve_step(cfg: ModelConfig, ctx: QuantContext, mesh: Mesh,
 
 
 def jit_prefill_step(cfg: ModelConfig, ctx: QuantContext, mesh: Mesh,
-                     shape: ShapeConfig, *, fsdp: bool = True):
+                     shape: ShapeConfig, *, fsdp: bool = True,
+                     attn_kernel: Optional[str] = None):
     params_abs = abstract_params(cfg)
     p_spec = shd.param_sharding_rules(params_abs, mesh, fsdp=fsdp,
                                       serve=True)
-    step = build_prefill_step(cfg, ctx)
+    step = build_prefill_step(cfg, ctx, attn_kernel, mesh)
     ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                                    is_leaf=_is_pspec)
     specs = input_specs(cfg, shape)

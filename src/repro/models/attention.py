@@ -9,6 +9,13 @@ Memory discipline: full-sequence attention materializes (B,H,S,S); at
 S=32k that is petabytes.  ``chunked_attention`` scans over KV chunks with
 an online softmax so the live tile is (B,H,qc,kc) — the pure-JAX analogue
 of a flash kernel, and what makes the prefill_32k dry-run cells fit.
+
+With ``cfg.attn_kernel = 'flash'`` the hot paths route through the fused
+Pallas kernels in ``repro.kernels.flash_attention`` (DESIGN §2): int8
+KV-cache codes are loaded straight into VMEM and bit-shift dequantized
+in-register, so the bf16 cache copy and the HBM score round-trips
+disappear.  ``chunked_attention`` stays the reference oracle and the
+fallback.
 """
 from __future__ import annotations
 
@@ -44,10 +51,18 @@ class MLACache(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """Expand KV heads for the pure-JAX fallback via broadcast-reshape.
+
+    ``jnp.repeat`` lowers to a gather that materializes a ``groups``x copy
+    of the cache in HBM; the broadcast of a size-1 axis is free until the
+    reshape, which XLA fuses into the consuming dot.  Head order matches
+    ``jnp.repeat(x, groups, axis=2)`` (each KV head's group is contiguous).
+    """
     if groups == 1:
         return x
     b, s, h, d = x.shape
-    return jnp.repeat(x, groups, axis=2)
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, groups, d))
+    return x.reshape(b, s, h * groups, d)
 
 
 import functools as _functools
@@ -233,6 +248,12 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
         kv_positions = positions if kv_x is None else jnp.arange(src.shape[1])[None]
         k = apply_rope(k, kv_positions, cfg.rope_theta)
 
+    # 'flash' routes the hot paths through the fused Pallas kernel
+    # (DESIGN §2): int8 KV codes are read straight into VMEM and bit-shift
+    # dequantized in-register, so the bf16 cache copy below is skipped.
+    use_flash = cfg.attn_kernel == "flash"
+    kv_frac_bits = None
+
     new_cache = None
     q_offset = 0
     if cache is not None:
@@ -248,8 +269,14 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
             v_full = jax.lax.dynamic_update_slice_in_dim(
                 cache.v, v_c, cache_pos, 1)
             new_cache = KVCache(k_full, v_full)
-            k = dequant(k_full, nkv, out_dtype=x.dtype)
-            v = dequant(v_full, nkv, out_dtype=x.dtype)
+            if use_flash:
+                # the whole point: no dequantized HBM copy — the kernel
+                # consumes the codes directly
+                k, v = k_full, v_full
+                kv_frac_bits = nkv
+            else:
+                k = dequant(k_full, nkv, out_dtype=x.dtype)
+                v = dequant(v_full, nkv, out_dtype=x.dtype)
         else:
             k_full = jax.lax.dynamic_update_slice_in_dim(
                 cache.k, k, cache_pos, 1)
@@ -261,14 +288,37 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
 
     groups = h // kvh
     if cache is not None and s == 1:
-        # decode: direct attention over the SEQUENCE-sharded cache
-        # (flash-decode): scores/values reduce over the seq axis, so the
-        # only collectives are (B,H,1)-sized softmax stats — vs re-gathering
-        # the whole cache when sharded on (non-dividing) kv heads
-        # (§Perf iteration D2: 128 GB/step -> ~0 on qwen3-32b decode_32k).
-        # GQA grouping is contracted in place — no KV repeat materializes.
-        out = _direct_decode_attention(q, k, v, q_offset)
+        if use_flash:
+            # fused decode kernel: cache read in place (int8 codes straight
+            # to VMEM), grouped heads share one KV tile DMA, traced position
+            # arrives via scalar prefetch.
+            from repro.kernels import ops as kops
+            out = kops.flash_decode(q, k, v, pos=q_offset,
+                                    kv_frac_bits=kv_frac_bits)
+        else:
+            # decode: direct attention over the SEQUENCE-sharded cache
+            # (flash-decode): scores/values reduce over the seq axis, so the
+            # only collectives are (B,H,1)-sized softmax stats — vs
+            # re-gathering the whole cache when sharded on (non-dividing) kv
+            # heads (§Perf iteration D2: 128 GB/step -> ~0 on qwen3-32b
+            # decode_32k).  GQA grouping is contracted in place — no KV
+            # repeat materializes.
+            out = _direct_decode_attention(q, k, v, q_offset)
+    elif use_flash and isinstance(q_offset, int):
+        # prefill / train: q-tiled x kv-tiled fused kernel; GQA contracted
+        # via the kernel index maps (no _repeat_kv), int8 codes (if any)
+        # dequantized in-register.  q_offset is static here by construction.
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal and kv_x is None,
+                                   q_offset=q_offset,
+                                   kv_frac_bits=kv_frac_bits)
     else:
+        if kv_frac_bits is not None:
+            # flash requested but unusable (traced multi-token offset):
+            # restore the reference dequantize-then-attend dataflow
+            from repro.core.qscheme import dequant
+            k = dequant(k, kv_frac_bits, out_dtype=x.dtype)
+            v = dequant(v, kv_frac_bits, out_dtype=x.dtype)
         k = constrain(_repeat_kv(k, groups), ("batch", None, "heads", None))
         v = constrain(_repeat_kv(v, groups), ("batch", None, "heads", None))
         out = chunked_attention(q, k, v, causal=causal and kv_x is None,
@@ -337,8 +387,14 @@ def mla_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
             [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, rope_d))],
             axis=-1)
         qq = jnp.concatenate([q_nope, q_pe], axis=-1)
-        out = chunked_attention(qq, k, v, causal=True, kv_chunk=kv_chunk,
-                                scale=scale)
+        if cfg.attn_kernel == "flash":
+            # fused prefill kernel (groups=1; dk=nope+rope is padded to the
+            # lane multiple inside the wrapper)
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(qq, k, v, causal=True, scale=scale)
+        else:
+            out = chunked_attention(qq, k, v, causal=True, kv_chunk=kv_chunk,
+                                    scale=scale)
         out = constrain(out.reshape(b, s, h * vdim), ("batch", None, "heads"))
         return linear(ctx, f"{name}/wo", out, p["wo"]), None
 

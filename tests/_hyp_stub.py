@@ -1,0 +1,71 @@
+"""Minimal fallback for ``hypothesis`` when it isn't installed.
+
+The tier-1 container does not ship hypothesis; these shims keep the
+property tests runnable as deterministic sampled sweeps (seeded rng, so
+failures reproduce).  Interface-compatible with the subset the test
+suite uses: ``@settings(max_examples=N, deadline=None)`` stacked on
+``@given(name=st.integers(lo, hi) | st.sampled_from(seq))``.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+__all__ = ["given", "settings", "st", "strategies"]
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+st = strategies = _Strategies()
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # pytest resolves fixture needs from inspect.signature, which follows
+        # __wrapped__ back to the parametrized original — drop it so the
+        # (*args, **kwargs) wrapper signature wins.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

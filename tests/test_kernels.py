@@ -6,7 +6,10 @@ tiling/epilogue logic is what's validated; MXU lowering is the TPU target).
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container lacks hypothesis
+    from _hyp_stub import given, settings, st
 
 from repro.core.integer_ops import LinearQuantSpec
 from repro.kernels import ops, ref
@@ -28,6 +31,23 @@ def test_int8_matmul_shapes(m, k, n, has_bias):
     expect = ref.int8_matmul_ref(x, w, b, shift=spec.requant_shift,
                                  bias_shift=spec.bias_shift)
     assert out.dtype == jnp.int8
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_int8_matmul_negative_bias_shift():
+    """Regression: bias grid finer than the accumulator grid (n_b > n_x+n_w).
+
+    The epilogue used to pass ``-(-bias_shift)`` (still negative) into the
+    shift helper, turning the intended rounding right-shift into a left
+    shift — off by up to 2^(2|shift|) per bias element.
+    """
+    x, w = _codes((128, 256), 21), _codes((256, 128), 22)
+    b = _codes((128,), 23)
+    spec = LinearQuantSpec(n_x=2, n_w=2, n_b=10, n_o=1)
+    assert spec.bias_shift < 0  # the buggy branch
+    out = ops.int8_matmul(x, w, b, spec)
+    expect = ref.int8_matmul_ref(x, w, b, shift=spec.requant_shift,
+                                 bias_shift=spec.bias_shift)
     assert np.array_equal(np.asarray(out), np.asarray(expect))
 
 
