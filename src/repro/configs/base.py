@@ -108,6 +108,13 @@ class ModelConfig:
     #   'flash'   — fused Pallas kernel; with an int8 KV cache the codes are
     #               dequantized in-register, so the bf16 KV never hits HBM
     attn_kernel: str = "chunked"
+    # mesh axis the flash kernels shard over (DESIGN §8): KV heads (whole
+    # GQA groups) are partitioned across this tensor axis via shard_map,
+    # each shard running the Pallas kernel on its local heads with the
+    # power-of-two KV scales resident.  The axis size must divide
+    # n_kv_heads, and only 'model' is wired through the cache/activation
+    # sharding rules — launch/steps raises NotImplementedError otherwise.
+    attn_shard_axis: str = "model"
 
     @property
     def resolved_head_dim(self) -> int:

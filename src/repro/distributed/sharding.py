@@ -20,7 +20,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["param_sharding_rules", "batch_sharding", "make_shardings",
-           "cache_sharding_rules", "DATA_AXES"]
+           "cache_sharding_rules", "current_mesh", "DATA_AXES"]
 
 DATA_AXES = ("pod", "data")  # gradient-reduction axes when both exist
 
@@ -203,9 +203,22 @@ def batch_sharding(mesh: Mesh, batch_dims: int = 2) -> P:
     return P(dp, *([None] * (batch_dims - 1)))
 
 
-def cache_sharding_rules(abstract_cache: Any, mesh: Mesh) -> Any:
-    """KV caches: (L, B, S, H, D) -> heads over model, batch over data when
-    it divides; recurrent states likewise on their head dim."""
+def cache_sharding_rules(abstract_cache: Any, mesh: Mesh,
+                         attn_kernel: str = "chunked",
+                         attn_shard_axis: str = "model") -> Any:
+    """KV caches: (L, B, S, H, D) -> batch over data when it divides, plus a
+    kernel-dependent second axis; recurrent states on their head dim.
+
+    ``attn_kernel='chunked'`` (default): SEQUENCE-sharded over model — the
+    pure-JAX decode contracts over S with tiny softmax-stat psums.
+
+    ``attn_kernel='flash'``: HEAD-sharded over model — the fused Pallas
+    kernels run per-shard under shard_map (DESIGN §8) with whole GQA groups
+    (and their power-of-two scales) resident per shard, so the cache must
+    live partitioned on KV heads; a sequence-sharded cache would be
+    all-gathered at the shard_map boundary every step.  Falls back to
+    sequence sharding when kv_heads doesn't divide the axis (the flash
+    resolver raises before that layout is ever used for flash)."""
     dp = _dp(mesh)
     dsize = 1
     for a in (dp if isinstance(dp, tuple) else (dp,) if dp else ()):
@@ -221,6 +234,10 @@ def cache_sharding_rules(abstract_cache: Any, mesh: Mesh) -> Any:
             return P(bdim if leaf.shape[0] % max(dsize, 1) == 0 else None,
                      None, mdim)
         if nd == 5:                            # (L, B, S, H, D) stacked KV
+            if (attn_kernel == "flash"
+                    and attn_shard_axis in mesh.axis_names
+                    and leaf.shape[3] % mesh.shape[attn_shard_axis] == 0):
+                return P(None, bdim, None, attn_shard_axis, None)
             # SEQUENCE-sharded over model (flash-decode/context-parallel):
             # decode contracts over S, so partial scores reduce with tiny
             # stat psums; head-sharding instead re-gathers the whole cache
@@ -286,6 +303,16 @@ def _axis_size(mesh: Mesh, entry) -> int:
             n *= mesh.shape[a]
         return n
     return mesh.shape[entry]
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The mesh of the active ``activation_sharding`` scope (None outside).
+
+    Model code uses this to hand the physical mesh to kernel wrappers that
+    partition work explicitly (shard_map'd flash attention, DESIGN §8) —
+    the same source of truth ``constrain`` uses, so kernel sharding and
+    activation constraints can never disagree about the mesh."""
+    return getattr(_TLS, "mesh", None)
 
 
 def data_shards() -> int:

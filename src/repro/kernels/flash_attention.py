@@ -137,8 +137,17 @@ def make_flash_prefill(b: int, h: int, kvh: int, sq_p: int, skv_p: int,
     contracts the GQA grouping (``h // groups``) so grouped heads read the
     same KV tile and nothing is repeated in HBM.  ``sq``/``skv`` are the
     true (unpadded) lengths; ``*_p`` the padded operand shapes.
+
+    ``h``/``kvh`` are PER-SHARD counts: under the shard_map wiring
+    (DESIGN §8) each device builds this call for its local slice of the
+    head axis, so whole GQA groups must land on one shard — the wrapper
+    partitions KV heads, never splits a group.
     """
     del k_dtype
+    assert kvh >= 1 and h % kvh == 0, (
+        f"(per-shard) query heads ({h}) must be a positive multiple of "
+        f"(per-shard) KV heads ({kvh}): the shard_map wrapper may only "
+        f"partition whole GQA groups across the tensor axis")
     groups = h // kvh
     nk = skv_p // bk
     kernel = functools.partial(
@@ -231,8 +240,14 @@ def make_flash_decode(b: int, kvh: int, gp: int, s_max: int, dk_p: int,
     Operands: pos (1,) int32 scalar-prefetch · q (B, KVH, gp, dk) ·
     k/v (B, S_max, KVH, d) — the cache's native layout, indexed in place
     (no transpose, no dequantized copy).  ``gp`` is the GQA group count
-    padded to the sublane minimum.
+    padded to the sublane minimum.  ``kvh`` is the PER-SHARD KV head count
+    under the shard_map wiring (DESIGN §8); the group structure is
+    shard-invariant, so ``gp`` needs no per-shard adjustment.
     """
+    assert kvh >= 1 and gp >= 1, (
+        f"(per-shard) decode needs at least one KV head and one group "
+        f"(got kvh={kvh}, gp={gp}) — the shard_map wrapper must not "
+        f"over-partition the head axis")
     nk = s_max // bk
     kernel = functools.partial(
         _flash_decode_kernel, score_scale=score_scale, v_scale=v_scale,

@@ -21,6 +21,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.integer_ops import LinearQuantSpec, int_linear
 from repro.kernels import ref
@@ -31,7 +32,8 @@ from repro.kernels.residual_requant import make_residual_requant
 
 __all__ = ["int8_matmul", "quantize_act", "residual_requant",
            "flash_attention", "flash_decode", "attention_kv_bytes",
-           "use_interpret", "DEFAULT_BLOCKS", "FLASH_BLOCKS"]
+           "attn_shard_size", "use_interpret", "DEFAULT_BLOCKS",
+           "FLASH_BLOCKS"]
 
 DEFAULT_BLOCKS = (128, 512, 512)  # (bm, bk, bn)
 FLASH_BLOCKS = (256, 512)         # (bq, bk) — q tile x kv tile
@@ -100,10 +102,85 @@ def int8_matmul(x_int: jax.Array, w_int: jax.Array,
 
 # ---------------------------------------------------------------------------
 # fused (int8-KV) flash attention — DESIGN.md §2
+# multi-device shard_map wiring (KV heads over the tensor axis) — DESIGN.md §8
 # ---------------------------------------------------------------------------
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+def attn_shard_size(mesh: Optional[Mesh], shard_axis: str) -> int:
+    """Size of the tensor axis the flash kernels shard heads over (1 when
+    there is no mesh or the axis is absent — the single-device path)."""
+    if mesh is None or shard_axis not in mesh.axis_names:
+        return 1
+    return mesh.shape[shard_axis]
+
+
+def _attn_batch_spec(mesh: Mesh, b: int):
+    """Batch-dim spec entry: the composite data axes — the SAME selection
+    ``sharding.batch_sharding`` uses, so the shard_map boundary matches
+    the activations' layout — when they divide B, else replicated."""
+    from repro.distributed import sharding as shd
+    dp = shd._dp(mesh)
+    return dp if (dp and b % shd._axis_size(mesh, dp) == 0) else None
+
+
+def _check_head_divisibility(kvh: int, tp: int, shard_axis: str):
+    if kvh % tp:
+        raise NotImplementedError(
+            f"flash attention shards KV heads over mesh axis "
+            f"'{shard_axis}' (size {tp}), which must divide the operand's "
+            f"KV head count ({kvh}); use attn_kernel='chunked' (sequence-"
+            f"sharded) for this mesh shape")
+
+
+# Why jit + a bounded cache: eager shard_map cannot evaluate the closed
+# calls inside the wrapper (jax.checkpoint / custom_vjp raise
+# NotImplementedError outside jit), so direct eager callers (tests, REPL)
+# need the jit; under an outer jitted step it simply inlines.  The cache
+# keeps eager re-calls from retracing; bounded so long-lived serving
+# processes can't accumulate a closure per distinct (mesh, q_offset, ...).
+@functools.lru_cache(maxsize=64)
+def _make_sharded_prefill(mesh: Mesh, head_entry, bdim, causal: bool,
+                          q_offset: int, kv_frac_bits, scale):
+    """shard_map'd prefill: q/k/v enter head-sharded on ``head_entry``
+    (whole GQA groups per shard — kvh % tp == 0 is checked by the caller;
+    None when the tensor axis is trivial), batch-sharded on the data axes
+    when divisible.  Each shard runs the full single-device wrapper on its
+    local heads: per-shard block picking, padding, and the static
+    power-of-two KV scale folded into that shard's kernel constants.  No
+    collectives — softmax is over the (replicated) KV sequence, so shards
+    are independent."""
+    from jax.experimental.shard_map import shard_map
+    spec = P(bdim, None, head_entry, None)
+
+    def local(q, k, v):
+        return flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_frac_bits=kv_frac_bits, scale=scale)
+
+    # check_rep=False: pallas_call has no replication rule
+    return jax.jit(shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                             out_specs=spec, check_rep=False))
+
+
+@functools.lru_cache(maxsize=64)
+def _make_sharded_decode(mesh: Mesh, head_entry, bdim, kv_frac_bits,
+                         scale):
+    """shard_map'd decode: the cache stays resident head-sharded (int8
+    codes + their static scale per shard), q is resharded to match (tiny),
+    ``pos`` is replicated.  Grouped query heads of a KV head land on the
+    same shard, so the kernel's one-DMA-per-group contract holds."""
+    from jax.experimental.shard_map import shard_map
+    spec = P(bdim, None, head_entry, None)
+
+    def local(pos, q, k, v):
+        return flash_decode(q, k, v, pos=pos, kv_frac_bits=kv_frac_bits,
+                            scale=scale)
+
+    return jax.jit(shard_map(local, mesh=mesh,
+                             in_specs=(P(), spec, spec, spec),
+                             out_specs=spec, check_rep=False))
 
 
 def _resolve_kv_frac_bits(k: jax.Array, kv_frac_bits: Optional[int]) -> int:
@@ -132,7 +209,9 @@ def _dequant_then_repeat(q, k, v, nkv):
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, q_offset: int = 0,
                     kv_frac_bits: Optional[int] = None,
-                    scale: Optional[float] = None) -> jax.Array:
+                    scale: Optional[float] = None,
+                    mesh: Optional[Mesh] = None,
+                    shard_axis: str = "model") -> jax.Array:
     """Fused flash attention: q (B,Sq,H,Dk) x KV (B,Skv,KVH,D) -> (B,Sq,H,Dv).
 
     K/V may be int8 Eq.-1 codes (then ``kv_frac_bits`` is their static
@@ -142,10 +221,25 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     worth a launch fall back to the pure-JAX ``chunked_attention`` (which
     stays the reference oracle).  ``q_offset`` must be a *static* int here
     (prefill); traced decode positions go through :func:`flash_decode`.
+
+    With a multi-device ``mesh`` the call runs under shard_map: KV heads
+    (whole GQA groups) are partitioned across ``shard_axis`` and every
+    shard launches the kernel on its local heads (DESIGN §8).  The axis
+    size must divide the KV head count.
     """
     b, sq, h, dk = q.shape
     skv, kvh = k.shape[1], k.shape[2]
     dv = v.shape[-1]
+    if mesh is not None and mesh.size > 1:
+        # >1 device: ALWAYS cross a shard_map boundary — GSPMD treats the
+        # pallas_call as an opaque custom call and would gather/replicate
+        # its operands otherwise (the exact dataflow this kernel deletes).
+        tp = attn_shard_size(mesh, shard_axis)
+        _check_head_divisibility(kvh, tp, shard_axis)
+        call = _make_sharded_prefill(mesh, shard_axis if tp > 1 else None,
+                                     _attn_batch_spec(mesh, b),
+                                     causal, q_offset, kv_frac_bits, scale)
+        return call(q, k, v)
     scale = scale if scale is not None else 1.0 / math.sqrt(dk)
     nkv = _resolve_kv_frac_bits(k, kv_frac_bits)
     int8_kv = k.dtype == jnp.int8
@@ -202,7 +296,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
                  pos: jax.Array, kv_frac_bits: Optional[int] = None,
-                 scale: Optional[float] = None) -> jax.Array:
+                 scale: Optional[float] = None,
+                 mesh: Optional[Mesh] = None,
+                 shard_axis: str = "model") -> jax.Array:
     """Single-token fused decode: q (B,1,H,Dk) over the full cache
     (B,S_max,KVH,D), masked at traced absolute position ``pos``.
 
@@ -212,11 +308,23 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
     OR the head dims are not lane multiples — padding the head dim here
     would copy the ENTIRE cache every decode step, which is exactly the
     dataflow this kernel deletes.
+
+    With a multi-device ``mesh``: shard_map over ``shard_axis`` with the
+    cache resident head-sharded — int8 codes AND their static power-of-two
+    scale stay with their shard; only the (B,1,H,D) query and the scalar
+    position cross the boundary (DESIGN §8).
     """
     b, sq1, h, dk = q.shape
     assert sq1 == 1, "flash_decode is the q_len=1 kernel"
     s_max, kvh = k.shape[1], k.shape[2]
     dv = v.shape[-1]
+    if mesh is not None and mesh.size > 1:
+        tp = attn_shard_size(mesh, shard_axis)
+        _check_head_divisibility(kvh, tp, shard_axis)
+        call = _make_sharded_decode(mesh, shard_axis if tp > 1 else None,
+                                    _attn_batch_spec(mesh, b),
+                                    kv_frac_bits, scale)
+        return call(jnp.asarray(pos, jnp.int32), q, k, v)
     groups = h // kvh
     scale = scale if scale is not None else 1.0 / math.sqrt(dk)
     nkv = _resolve_kv_frac_bits(k, kv_frac_bits)

@@ -28,13 +28,24 @@ from repro.models import model as M
 
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           mode: str = "int", calibrate: bool = True, smoke: bool = True,
-          seed: int = 0, params=None,
-          attn_kernel: str | None = None) -> dict:
+          seed: int = 0, params=None, attn_kernel: str | None = None,
+          mesh_shape: tuple[int, int] | None = None,
+          cfg_overrides: dict | None = None) -> dict:
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     if attn_kernel is not None:
         # 'flash' routes prefill/decode through the fused Pallas attention
         # (DESIGN §2); int8 KV codes then skip the dequantized HBM copy.
         cfg = dataclasses.replace(cfg, attn_kernel=attn_kernel)
+    if cfg_overrides:
+        # e.g. head_dim=128 so the fused decode kernel genuinely launches
+        # on smoke configs (it refuses non-lane-multiple head dims)
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    mesh = None
+    if mesh_shape is not None:
+        # (data, model) mesh: flash runs per-shard via shard_map — KV heads
+        # over 'model', batch over 'data' (DESIGN §8).  The builders raise
+        # NotImplementedError if 'model' doesn't divide n_kv_heads.
+        mesh = jax.make_mesh(tuple(mesh_shape), ("data", "model"))
     if params is None:
         params = M.init_params(cfg, jax.random.PRNGKey(seed))
     stream = SyntheticLMStream(
@@ -56,9 +67,9 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
               f"in {time.time()-t0:.1f}s")
 
     max_seq = prompt_len + gen
-    prefill_fn = jax.jit(lambda p, b: M.prefill(p, b, cfg, ctx,
-                                                max_seq=max_seq))
-    serve_fn = jax.jit(S.build_serve_step(cfg, ctx))
+    prefill_fn = jax.jit(S.build_prefill_step(cfg, ctx, mesh=mesh,
+                                              max_seq=max_seq))
+    serve_fn = jax.jit(S.build_serve_step(cfg, ctx, mesh=mesh))
 
     t0 = time.time()
     logits, cache = prefill_fn(params, prompt)
@@ -93,11 +104,19 @@ def main(argv=None):
     ap.add_argument("--attn-kernel", default=None,
                     choices=["chunked", "flash"],
                     help="attention path (DESIGN §2); default: cfg's")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve on a (data, model) device mesh, e.g. '1x2';"
+                         " with --attn-kernel flash the fused kernels run"
+                         " per-shard via shard_map (DESIGN §8)")
     args = ap.parse_args(argv)
+    mesh_shape = None
+    if args.mesh is not None:
+        d, m = (int(x) for x in args.mesh.lower().split("x"))
+        mesh_shape = (d, m)
     out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 gen=args.gen, mode=args.mode,
                 calibrate=not args.no_calibrate, smoke=not args.full,
-                attn_kernel=args.attn_kernel)
+                attn_kernel=args.attn_kernel, mesh_shape=mesh_shape)
     print(f"generated {out['tokens'].shape} tokens | "
           f"prefill {out['prefill_s']:.2f}s | "
           f"decode {1e3*out['decode_s_per_tok']:.1f} ms/tok")

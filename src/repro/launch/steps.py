@@ -154,29 +154,59 @@ def _resolve_attn_kernel(cfg: ModelConfig, attn_kernel: Optional[str],
     and decode through the fused Pallas kernel (int8 KV codes dequantized
     in-register), 'chunked' keeps the pure-JAX reference.
 
-    The flash kernels have no SPMD partitioning rule yet (DESIGN §2 open
-    item): under GSPMD on a >1-device mesh they would force the sequence-
-    sharded cache to be gathered/replicated per layer — the exact multi-GB
-    dataflow the chunked decode path avoids — so flash is demoted to
-    chunked there rather than silently regressing."""
+    On a >1-device mesh the flash kernels run per-shard under shard_map
+    (DESIGN §8): KV heads — whole GQA groups, scales resident — partition
+    across ``cfg.attn_shard_axis``, so the axis size must divide
+    ``n_kv_heads``.  Mesh shapes that would split a GQA group raise an
+    explicit NotImplementedError here, at build time, instead of silently
+    demoting to the chunked path (or worse, gathering the cache)."""
     if attn_kernel is not None and attn_kernel != cfg.attn_kernel:
         cfg = dataclasses.replace(cfg, attn_kernel=attn_kernel)
     if cfg.attn_kernel == "flash" and mesh is not None and mesh.size > 1:
-        import warnings
-        warnings.warn("attn_kernel='flash' is single-device for now; "
-                      "demoting to 'chunked' on a size-%d mesh" % mesh.size,
-                      stacklevel=3)
-        cfg = dataclasses.replace(cfg, attn_kernel="chunked")
+        if cfg.attn_shard_axis != "model":
+            # the cache rules and the logical 'heads' activation pins are
+            # wired to 'model'; a different kernel shard axis would make
+            # GSPMD reshard the cache at the shard_map boundary every
+            # step — refuse rather than silently regress (DESIGN §8)
+            raise NotImplementedError(
+                f"attn_shard_axis='{cfg.attn_shard_axis}' is not wired "
+                f"through the cache/activation sharding rules yet; only "
+                f"'model' is supported on multi-device meshes")
+        from repro.kernels.ops import attn_shard_size
+        tp = attn_shard_size(mesh, cfg.attn_shard_axis)
+        # the head count the kernel actually shards: MLA's flash prefill
+        # runs with kvh == n_heads (n_kv_heads is nominal there)
+        kvh = cfg.n_heads if cfg.mla is not None else cfg.n_kv_heads
+        if kvh % tp:
+            raise NotImplementedError(
+                f"attn_kernel='flash' shards KV heads over mesh axis "
+                f"'{cfg.attn_shard_axis}' (size {tp}), which must divide "
+                f"the KV head count ({kvh}"
+                + (", = n_heads for MLA" if cfg.mla is not None else
+                   " = n_kv_heads")
+                + f"); pick a mesh whose '{cfg.attn_shard_axis}' axis "
+                f"divides it or use attn_kernel='chunked'")
     return cfg
+
+
+def _mesh_scope(mesh: Optional[Mesh]):
+    """Activation-sharding scope for a step body: makes ``constrain`` and
+    ``current_mesh()`` (the shard_map'd flash kernels, DESIGN §8) see the
+    mesh while the step is TRACED, wherever the jit call happens."""
+    import contextlib
+    return (shd.activation_sharding(mesh) if mesh is not None
+            else contextlib.nullcontext())
 
 
 def build_prefill_step(cfg: ModelConfig, ctx: QuantContext,
                        attn_kernel: Optional[str] = None,
-                       mesh: Optional[Mesh] = None):
+                       mesh: Optional[Mesh] = None,
+                       max_seq: Optional[int] = None):
     cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
 
     def prefill_step(params, batch):
-        return M.prefill(params, batch, cfg, ctx)
+        with _mesh_scope(mesh):
+            return M.prefill(params, batch, cfg, ctx, max_seq=max_seq)
 
     return prefill_step
 
@@ -188,9 +218,11 @@ def build_serve_step(cfg: ModelConfig, ctx: QuantContext,
     cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
 
     def serve_step(params, tokens, cache, pos):
-        logits, cache = M.decode_step(params, tokens, cache, pos, cfg, ctx)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return next_tok[:, None], cache
+        with _mesh_scope(mesh):
+            logits, cache = M.decode_step(params, tokens, cache, pos, cfg,
+                                          ctx)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok[:, None], cache
 
     return serve_step
 
@@ -294,7 +326,11 @@ def jit_serve_step(cfg: ModelConfig, ctx: QuantContext, mesh: Mesh,
     p_spec = shd.param_sharding_rules(params_abs, mesh, fsdp=fsdp,
                                       serve=True)
     cache_abs = abstract_cache(cfg, shape.global_batch, shape.seq_len)
-    c_spec = shd.cache_sharding_rules(cache_abs, mesh)
+    # flash keeps the cache HEAD-sharded (shard_map residency, DESIGN §8);
+    # chunked keeps it sequence-sharded (context-parallel decode, §5)
+    c_spec = shd.cache_sharding_rules(
+        cache_abs, mesh, attn_kernel=attn_kernel or cfg.attn_kernel,
+        attn_shard_axis=cfg.attn_shard_axis)
     step = build_serve_step(cfg, ctx, attn_kernel, mesh)
     ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                                    is_leaf=_is_pspec)

@@ -29,7 +29,7 @@ from repro.models.scan_lib import scan as _scan
 
 from repro.configs.base import MLAConfig, ModelConfig
 from repro.core.qmodel import QuantContext
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, current_mesh
 from repro.models.common import apply_rope, linear, rmsnorm
 
 __all__ = ["KVCache", "MLACache", "init_gqa", "gqa_attention", "init_mla",
@@ -291,10 +291,17 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
         if use_flash:
             # fused decode kernel: cache read in place (int8 codes straight
             # to VMEM), grouped heads share one KV tile DMA, traced position
-            # arrives via scalar prefetch.
+            # arrives via scalar prefetch.  Under a multi-device mesh the
+            # call crosses a shard_map boundary with the cache resident
+            # HEAD-sharded on cfg.attn_shard_axis (DESIGN §8) — pin the
+            # operands there so GSPMD hands them over without a reshard.
             from repro.kernels import ops as kops
+            k = constrain(k, ("batch", None, "heads", None))
+            v = constrain(v, ("batch", None, "heads", None))
             out = kops.flash_decode(q, k, v, pos=q_offset,
-                                    kv_frac_bits=kv_frac_bits)
+                                    kv_frac_bits=kv_frac_bits,
+                                    mesh=current_mesh(),
+                                    shard_axis=cfg.attn_shard_axis)
         else:
             # decode: direct attention over the SEQUENCE-sharded cache
             # (flash-decode): scores/values reduce over the seq axis, so the
@@ -309,9 +316,13 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
         # via the kernel index maps (no _repeat_kv), int8 codes (if any)
         # dequantized in-register.  q_offset is static here by construction.
         from repro.kernels import ops as kops
+        k = constrain(k, ("batch", None, "heads", None))
+        v = constrain(v, ("batch", None, "heads", None))
         out = kops.flash_attention(q, k, v, causal=causal and kv_x is None,
                                    q_offset=q_offset,
-                                   kv_frac_bits=kv_frac_bits)
+                                   kv_frac_bits=kv_frac_bits,
+                                   mesh=current_mesh(),
+                                   shard_axis=cfg.attn_shard_axis)
     else:
         if kv_frac_bits is not None:
             # flash requested but unusable (traced multi-token offset):
@@ -389,9 +400,12 @@ def mla_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
         qq = jnp.concatenate([q_nope, q_pe], axis=-1)
         if cfg.attn_kernel == "flash":
             # fused prefill kernel (groups=1; dk=nope+rope is padded to the
-            # lane multiple inside the wrapper)
+            # lane multiple inside the wrapper); shard_map'd over full heads
+            # on a multi-device mesh (kvh == h here)
             from repro.kernels import ops as kops
-            out = kops.flash_attention(qq, k, v, causal=True, scale=scale)
+            out = kops.flash_attention(qq, k, v, causal=True, scale=scale,
+                                       mesh=current_mesh(),
+                                       shard_axis=cfg.attn_shard_axis)
         else:
             out = chunked_attention(qq, k, v, causal=True, kv_chunk=kv_chunk,
                                     scale=scale)

@@ -1,0 +1,17 @@
+"""Force a 4-device CPU backend for the whole suite.
+
+The shard_map parity harness (``test_shard_map_parity.py``) needs real
+multi-device meshes; XLA can split the host CPU into virtual devices, but
+only if the flag is set BEFORE jax initializes its backends.  conftest is
+imported before any test module, so this is the one reliable place.
+Single-device tests are unaffected — default placement stays device 0.
+
+A pre-set ``xla_force_host_platform_device_count`` (e.g. the CI
+``multidevice`` job exporting it explicitly) is respected.
+"""
+import os
+
+_FLAG = "xla_force_host_platform_device_count"
+_flags = os.environ.get("XLA_FLAGS", "")
+if _FLAG not in _flags:
+    os.environ["XLA_FLAGS"] = f"{_flags} --{_FLAG}=4".strip()

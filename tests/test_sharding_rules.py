@@ -86,3 +86,76 @@ def test_cache_sharding_rules():
 def test_batch_sharding_composite_axis():
     multi = _abstract_mesh((2, 4, 4), ("pod", "data", "model"))
     assert shd.batch_sharding(multi, 2) == P(("pod", "data"), None)
+
+
+# ---------------------------------------------------------------------------
+# divisibility / rank-fitting edge cases (the machinery every rule runs on)
+# ---------------------------------------------------------------------------
+
+def test_fit_rank_pads_and_truncates():
+    # shorter spec than leaf rank: scan (layer-stack) axis gets None
+    assert shd._fit_rank(P(None, "model"), 3) == [None, None, "model"]
+    # longer spec than leaf rank: keep the TRAILING entries (the rule's
+    # meaningful dims are rightmost)
+    assert shd._fit_rank(P("model", None), 1) == [None]
+    assert shd._fit_rank(P("model", None), 0) == []
+
+
+def test_divisible_odd_head_counts():
+    mesh = _mesh(data=2, model=2)
+    # 7 heads on a 2-wide axis: not divisible
+    assert not shd._divisible(["model", None], (7, 64), mesh)
+    assert shd._divisible(["model", None], (8, 64), mesh)
+    # composite-axis entry multiplies sizes: 4 needed
+    assert not shd._divisible([("data", "model")], (6,), mesh)
+    assert shd._divisible([("data", "model")], (8,), mesh)
+
+
+def test_divisible_one_sized_mesh_axes():
+    mesh = _mesh(data=1, model=1)
+    # size-1 axes divide everything — odd dims included
+    assert shd._divisible(["model", "data"], (7, 13), mesh)
+    cfg = get_smoke_config("qwen3_1_7b")
+    specs = shd.param_sharding_rules(S.abstract_params(cfg), mesh,
+                                    fsdp=False)
+    # rules still produce model-axis entries (sharding into 1 piece is
+    # valid and keeps the spec stable across mesh sizes)
+    assert specs["blocks"]["attn"]["wq"] == P(None, None, "model")
+
+
+def test_spec_for_strips_non_dividing_axes():
+    mesh = _mesh(data=2, model=16)
+    # odd rows AND cols on a 16-wide model axis: every candidate fails,
+    # the last-resort path strips the non-dividing entries instead of
+    # crashing (granite's 40-expert case generalized)
+    assert shd._spec_for("blocks/attn/wq", (24, 24), mesh) == P(None, None)
+    # only the free dim fails -> the contract-dim candidate is used
+    assert shd._spec_for("blocks/attn/wq", (64, 24), mesh) == \
+        P("model", None)
+
+
+def test_cache_rules_unmatched_leaves_fall_through():
+    """Cache trees with leaves matching NO rule (not 5-dim KV, not 4-dim
+    latent, not 'memory') must come back fully replicated, not crash."""
+    mesh = _mesh()
+    weird = jax.eval_shape(lambda: {
+        "scalar_state": jnp.zeros((), jnp.float32),          # 0-dim
+        "conv_state": jnp.zeros((2, 4, 3), jnp.float32),     # 3-dim, odd
+        "flags": jnp.zeros((2, 7), jnp.int32),               # 2-dim, odd
+    })
+    specs = shd.cache_sharding_rules(weird, mesh)
+    assert specs["scalar_state"] == P()
+    assert specs["conv_state"] == P(None, None, None)
+    assert specs["flags"] == P(None, None)
+
+
+def test_flash_cache_rules_non_dividing_heads_fall_back():
+    """attn_kernel='flash' head sharding only engages when kv_heads
+    divides the model axis; otherwise the sequence-sharded chunked layout
+    is kept (the flash resolver raises before this layout is used)."""
+    mesh = _mesh(data=2, model=4)
+    cfg = get_smoke_config("qwen3_1_7b")          # n_kv_heads = 2
+    cache_abs = S.abstract_cache(cfg, batch=4, max_seq=128)
+    specs = shd.cache_sharding_rules(cache_abs, mesh, attn_kernel="flash")
+    k_spec = specs["kv"].k
+    assert k_spec[3] is None and k_spec[2] == "model"
