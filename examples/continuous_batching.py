@@ -1,0 +1,76 @@
+"""Continuous-batching serving on the paged int8-KV block pool.
+
+    PYTHONPATH=src python examples/continuous_batching.py [--arch qwen3_1_7b]
+
+Submits a mixed-length Poisson workload to the serving engine
+(DESIGN §9): requests are admitted FCFS into a fixed-width slot batch as
+others finish, prompts prefill in chunks under a token budget, and every
+request's KV lives as int8 blocks (power-of-two scales) that are written
+once and never requantized while resident.  The demo also re-runs one
+request standalone through the dense-cache path to show the paged engine
+is token-exact, and prints the paper-Table-5 requant-energy accounting.
+"""
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_1_7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.serve import serve_engine
+    from repro.models import model as M
+
+    out = serve_engine(args.arch, n_requests=args.requests, rate=50.0,
+                       n_slots=4, block_size=16, chunk=16, mode="fp",
+                       calibrate=False, temperature=args.temperature)
+    rep = out["report"]
+    print(f"[{args.arch}] {rep['completed']}/{rep['n_requests']} requests, "
+          f"{rep['gen_tokens']} tokens in {rep['wall_s']}s "
+          f"({rep['tokens_per_s']} tok/s incl. compile)")
+    print(f"pool: {rep['pool']['peak_live_blocks']} peak blocks "
+          f"({rep['pool']['peak_utilization']:.0%} of "
+          f"{rep['pool']['num_blocks'] - 1}), "
+          f"{rep['pool']['evictions']} evictions")
+    hw = rep["hwcost"]
+    print(f"requant ops: {hw['requant_ops_performed']} performed "
+          f"(write-once int8 blocks) vs "
+          f"{hw['requant_ops_performed'] + hw['requant_ops_avoided']} for a "
+          f"dequantize-per-step cache — "
+          f"{hw['energy_uj_bit_shift']:.2f} uJ vs "
+          f"{hw['energy_uj_if_requant_per_step']:.2f} uJ bit-shift "
+          f"({hw['energy_uj_if_scaling_factor']:.2f} uJ scaling-factor, "
+          f"paper Table 5)")
+    for rid, toks in sorted(out["outputs"].items())[:4]:
+        print(f"  req {rid}: {toks[:12].tolist()}")
+
+    if args.temperature == 0.0:
+        # token-exactness spot check: replay request 0 through the DENSE
+        # cache path (one request, no paging) — greedy tokens must agree
+        req = next(r for r in out["requests"] if r.rid == 0)
+        cfg = out["engine"].cfg
+        ctx = out["engine"].ctx
+        params = out["engine"].params
+        P = len(req.prompt)
+        logits, cache = M.prefill(params, {"tokens": jnp.asarray(
+            req.prompt[None])}, cfg, ctx, max_seq=P + req.max_new_tokens)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        oracle = [int(tok[0, 0])]
+        for i in range(req.max_new_tokens - 1):
+            l, cache = M.decode_step(params, tok, cache,
+                                     jnp.asarray(P + i, jnp.int32), cfg, ctx)
+            tok = jnp.argmax(l, -1)[:, None].astype(jnp.int32)
+            oracle.append(int(tok[0, 0]))
+        agree = np.array_equal(out["outputs"][0], np.asarray(oracle))
+        print(f"paged engine vs dense-cache oracle (req 0): "
+              f"{'exact match' if agree else 'MISMATCH'}")
+
+
+if __name__ == "__main__":
+    main()

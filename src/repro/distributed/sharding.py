@@ -229,6 +229,18 @@ def cache_sharding_rules(abstract_cache: Any, mesh: Mesh,
         ps = _path_str(path)
         batch_ok = leaf.shape[1] % dsize == 0 if nd >= 2 and dsize else False
         bdim = dp if batch_ok else None
+        if "paged" in ps and nd == 5:          # (L, NB, BS, KVH, D) pool
+            # serving-engine block pool (DESIGN §9): shared by every slot,
+            # so no batch axis exists to shard — KV heads go over the
+            # tensor axis (the shard_map-resident layout the paged kernel
+            # expects), everything else stays whole.  Blocks of ONE
+            # sequence land on every shard's local pool at the same
+            # indices, which is why block tables can be replicated.
+            hdim = (attn_shard_axis
+                    if attn_shard_axis in mesh.axis_names
+                    and leaf.shape[3] % mesh.shape[attn_shard_axis] == 0
+                    else None)
+            return P(None, None, None, hdim, None)
         if "memory" in ps:                     # (B, T, d)
             mdim = "model" if leaf.shape[2] % mesh.shape["model"] == 0 else None
             return P(bdim if leaf.shape[0] % max(dsize, 1) == 0 else None,

@@ -53,7 +53,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
-__all__ = ["make_flash_prefill", "make_flash_decode", "DEFAULT_MASK_VALUE"]
+__all__ = ["make_flash_prefill", "make_flash_decode",
+           "make_paged_flash_decode", "DEFAULT_MASK_VALUE"]
 
 # Finite stand-in for -inf: exp(MASK - m) underflows to exactly 0.0 in f32
 # whenever any in-tile entry is live, and never produces inf - inf = NaN.
@@ -265,6 +266,116 @@ def make_flash_decode(b: int, kvh: int, gp: int, s_max: int, dk_p: int,
         ],
         out_specs=pl.BlockSpec((1, 1, gp, dv_p),
                                lambda b_, h_, ki, pos_ref: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((gp, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((gp, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((gp, dv_p), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, gp, dv_p), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+
+
+def _paged_flash_decode_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                               m_scr, l_scr, acc_scr, *, score_scale: float,
+                               v_scale: float, bs: int, nb: int, out_dtype):
+    """Grid (slot, kv_head, ti).  Identical online softmax to the dense
+    decode kernel, except (a) the KV tile for grid step ``ti`` is whatever
+    POOL BLOCK the slot's block table names (the index map reads
+    ``bt_ref[b, ti]`` — the gather happens in the DMA engine, no gathered
+    copy ever exists in HBM), and (b) the mask position is PER-SLOT
+    (``pos_ref[b]``), which is what makes continuous batching work: every
+    slot in the fixed-width batch decodes at its own sequence length."""
+    del bt_ref  # consumed by the index maps
+    b = pl.program_id(0)
+    ti = pl.program_id(2)
+    pos = pos_ref[b]
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, -jnp.inf, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    @pl.when(ti * bs <= pos)
+    def _compute():
+        q = q_ref[0, 0]                                # (gp, dk)
+        k = k_ref[0, :, 0, :].astype(q.dtype)          # (bs, dk) pool block
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * score_scale
+
+        gp = q.shape[0]
+        kv_pos = ti * bs + jax.lax.broadcasted_iota(jnp.int32, (gp, bs), 1)
+        s = jnp.where(kv_pos <= pos, s, DEFAULT_MASK_VALUE)
+
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_curr = jnp.max(s, axis=1, keepdims=True)
+        m_next = jnp.maximum(m_prev, m_curr)
+        alpha = jnp.exp(m_prev - m_next)
+        p = jnp.exp(s - m_next)
+        l_scr[...] = jnp.broadcast_to(
+            l_prev * alpha + jnp.sum(p, axis=1, keepdims=True), l_scr.shape)
+        m_scr[...] = jnp.broadcast_to(m_next, m_scr.shape)
+
+        v = v_ref[0, :, 0, :].astype(q.dtype)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(q.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ti == nb - 1)
+    def _store():
+        l = l_scr[:, :1]
+        l_inv = jnp.where(l == 0.0, 1.0, 1.0 / l)
+        o_ref[0, 0] = (acc_scr[...] * l_inv * v_scale).astype(out_dtype)
+
+
+def make_paged_flash_decode(b: int, kvh: int, gp: int, nbmax: int, bs: int,
+                            dk_p: int, dv_p: int, *, score_scale: float,
+                            v_scale: float, out_dtype,
+                            interpret: bool = False):
+    """Build the PAGED decode pallas_call (serving engine, DESIGN §9).
+
+    Operands: pos (B,) int32 + block_tables (B, nbmax) int32 (both
+    scalar-prefetch) · q (B, KVH, gp, dk) · k/v POOL (NB, bs, KVH, d) — the
+    block pool's native layout.  ``nbmax`` is the per-sequence block-table
+    width (grid's KV extent), ``bs`` the pool block size; the K/V index
+    maps translate grid step ``ti`` to pool block ``bt[b, ti]``, so the
+    kernel walks each slot's logical sequence through physically scattered
+    blocks with zero gather/copy.  Unallocated table tail entries point at
+    the pool's trash block; their tiles are masked by ``pos`` exactly like
+    the dense kernel masks the cache tail.  ``kvh`` is the PER-SHARD KV
+    head count under shard_map (pool head-sharded, tables/positions
+    replicated across the tensor axis — DESIGN §9)."""
+    assert kvh >= 1 and gp >= 1, (
+        f"(per-shard) paged decode needs at least one KV head and one "
+        f"group (got kvh={kvh}, gp={gp})")
+    kernel = functools.partial(
+        _paged_flash_decode_kernel, score_scale=score_scale, v_scale=v_scale,
+        bs=bs, nb=nbmax, out_dtype=out_dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, nbmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, gp, dk_p),
+                         lambda b_, h_, ti, pos_ref, bt_ref: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dk_p),
+                         lambda b_, h_, ti, pos_ref, bt_ref:
+                         (bt_ref[b_, ti], 0, h_, 0)),
+            pl.BlockSpec((1, bs, 1, dv_p),
+                         lambda b_, h_, ti, pos_ref, bt_ref:
+                         (bt_ref[b_, ti], 0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gp, dv_p),
+                               lambda b_, h_, ti, pos_ref, bt_ref:
+                               (b_, h_, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((gp, _STATS_LANES), jnp.float32),
             pltpu.VMEM((gp, _STATS_LANES), jnp.float32),

@@ -25,15 +25,17 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.integer_ops import LinearQuantSpec, int_linear
 from repro.kernels import ref
-from repro.kernels.flash_attention import make_flash_decode, make_flash_prefill
+from repro.kernels.flash_attention import (make_flash_decode,
+                                           make_flash_prefill,
+                                           make_paged_flash_decode)
 from repro.kernels.int8_matmul import make_int8_matmul
 from repro.kernels.quantize import make_quantize
 from repro.kernels.residual_requant import make_residual_requant
 
 __all__ = ["int8_matmul", "quantize_act", "residual_requant",
-           "flash_attention", "flash_decode", "attention_kv_bytes",
-           "attn_shard_size", "use_interpret", "DEFAULT_BLOCKS",
-           "FLASH_BLOCKS"]
+           "flash_attention", "flash_decode", "paged_attention",
+           "attention_kv_bytes", "attn_shard_size", "use_interpret",
+           "DEFAULT_BLOCKS", "FLASH_BLOCKS"]
 
 DEFAULT_BLOCKS = (128, 512, 512)  # (bm, bk, bn)
 FLASH_BLOCKS = (256, 512)         # (bq, bk) — q tile x kv tile
@@ -345,6 +347,129 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
         out_dtype=q.dtype, interpret=use_interpret())
     pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
     out = call(pos_arr, q4, k, v)                      # (B, KVH, gp, dv)
+    return out[:, :, :groups].reshape(b, 1, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# paged attention over the serving engine's KV block pool — DESIGN.md §9
+# ---------------------------------------------------------------------------
+
+def _paged_ref_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                         block_tables: jax.Array, q_positions: jax.Array,
+                         nkv: int, scale: float) -> jax.Array:
+    """Reference paged attention: gather every table block from the pool,
+    dequantize, and attend with per-(slot, query) causal masks.
+
+    This IS the dataflow the paged kernel deletes — a dequantized gathered
+    copy of each slot's cache materializes in HBM — kept as the oracle, the
+    CPU path, and the fallback for shapes the kernel refuses (non-lane-
+    multiple head dims, non-MXU block sizes, multi-token chunks)."""
+    from repro.core.qscheme import dequant
+    b, c, h, dk = q.shape
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    dv = v_pool.shape[-1]
+    g = h // kvh
+    s_len = block_tables.shape[1] * bs
+    k = k_pool[block_tables].reshape(b, s_len, kvh, dk)
+    v = v_pool[block_tables].reshape(b, s_len, kvh, dv)
+    if k.dtype == jnp.int8:
+        k = dequant(k, nkv, out_dtype=q.dtype)
+        v = dequant(v, nkv, out_dtype=q.dtype)
+    else:
+        k, v = k.astype(q.dtype), v.astype(q.dtype)
+    qg = q.reshape(b, c, kvh, g, dk)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    kv_pos = jnp.arange(s_len)
+    mask = kv_pos[None, None, :] <= q_positions[:, :, None]   # (B, C, S)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, c, h, dv).astype(q.dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _make_sharded_paged_decode(mesh: Mesh, head_entry, bdim, kv_frac_bits,
+                               scale):
+    """shard_map'd paged decode: the BLOCK POOL stays resident head-sharded
+    on ``head_entry`` (int8 codes + static po2 scale per shard, exactly
+    like the dense cache in DESIGN §8); block tables and per-slot positions
+    are slot-metadata — they follow the q/batch partition (``bdim``) and
+    are replicated over the tensor axis, so every head shard walks the
+    same logical→physical block mapping.  No collectives."""
+    from jax.experimental.shard_map import shard_map
+    qspec = P(bdim, None, head_entry, None)
+    pspec = P(None, None, head_entry, None)
+
+    def local(pos, bt, q, kp, vp):
+        return paged_attention(q, kp, vp, bt, pos[:, None],
+                               kv_frac_bits=kv_frac_bits, scale=scale)
+
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bdim), P(bdim, None), qspec, pspec, pspec),
+        out_specs=qspec, check_rep=False))
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, q_positions: jax.Array, *,
+                    kv_frac_bits: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    mesh: Optional[Mesh] = None,
+                    shard_axis: str = "model") -> jax.Array:
+    """Attention over the serving engine's paged KV block pool (DESIGN §9).
+
+    q: (B, C, H, Dk) — C == 1 is the continuous-batching decode hot path,
+    C > 1 a chunked-prefill chunk.  k/v_pool: (NB, BS, KVH, D) — ALL
+    sequences' blocks in one pool, int8 Eq.-1 codes (``kv_frac_bits``) or
+    float.  block_tables: (B, NBmax) int32 mapping each slot's logical
+    block ``i`` to its pool block (unallocated tail entries point at the
+    trash block and are masked).  q_positions: (B, C) int32 absolute
+    positions of the query tokens; attention is causal per slot
+    (``kv_pos <= q_positions[b, c]``), which is what lets a fixed-width
+    slot batch serve sequences of different live lengths.
+
+    The C == 1 case with MXU-aligned shapes launches the fused paged
+    kernel: the block table is consumed by the BlockSpec index maps, so KV
+    codes stream block-by-block from the pool straight into VMEM — no
+    gathered copy, no dequantized copy, written-once codes are never
+    requantized.  Everything else takes the reference gather path.  With a
+    multi-device ``mesh`` the kernel path crosses a shard_map boundary:
+    pool head-sharded over ``shard_axis``, tables/positions replicated
+    across it (batch over the data axes when divisible).
+    """
+    b, c, h, dk = q.shape
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    dv = v_pool.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    nkv = _resolve_kv_frac_bits(k_pool, kv_frac_bits)
+    kernel_ok = (c == 1 and bs % 128 == 0 and dk % 128 == 0
+                 and dv % 128 == 0)
+    if mesh is not None and mesh.size > 1:
+        tp = attn_shard_size(mesh, shard_axis)
+        _check_head_divisibility(kvh, tp, shard_axis)
+        if not kernel_ok:
+            # reference path is plain jnp — GSPMD partitions it directly
+            return _paged_ref_attention(q, k_pool, v_pool, block_tables,
+                                        q_positions, nkv, scale)
+        call = _make_sharded_paged_decode(
+            mesh, shard_axis if tp > 1 else None, _attn_batch_spec(mesh, b),
+            kv_frac_bits, scale)
+        return call(jnp.asarray(q_positions[:, 0], jnp.int32),
+                    jnp.asarray(block_tables, jnp.int32), q, k_pool, v_pool)
+    if not kernel_ok:
+        return _paged_ref_attention(q, k_pool, v_pool, block_tables,
+                                    q_positions, nkv, scale)
+    groups = h // kvh
+    gp = max(8, _round_up(groups, 8))
+    q4 = _pad_to(q[:, 0].reshape(b, kvh, groups, dk), gp, 2)
+    call = make_paged_flash_decode(
+        b, kvh, gp, block_tables.shape[1], bs, dk, dv,
+        score_scale=scale * 2.0 ** (-nkv), v_scale=2.0 ** (-nkv),
+        out_dtype=q.dtype, interpret=use_interpret())
+    pos = jnp.asarray(q_positions[:, 0], jnp.int32)
+    out = call(pos, jnp.asarray(block_tables, jnp.int32), q4, k_pool, v_pool)
     return out[:, :, :groups].reshape(b, 1, h, dv)
 
 

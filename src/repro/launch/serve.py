@@ -6,7 +6,16 @@
 Pipeline (DESIGN §3): optional Algorithm-1 calibration on one batch ->
 int8 weight conversion -> jit'd prefill + decode steps in the requested
 quantization mode.  The decode loop is greedy (framework demo; sampling
-plugs into serve_step).
+plugs into serve_step).  Steps are AOT-compiled first, so the reported
+``prefill_s`` / ``decode_s_per_tok`` are STEADY-STATE; compile time is
+reported separately (``compile_prefill_s`` / ``compile_decode_s``).
+
+``--engine`` switches to the continuous-batching serving engine
+(DESIGN §9): a synthetic Poisson workload of mixed prompt/gen lengths is
+served from the paged int8-KV block pool with slot-based continuous
+batching, chunked prefill, and per-request sampling/stop handling; the
+report adds throughput, latency percentiles, pool utilization, and the
+paper-Table-5 requant-energy accounting.
 """
 from __future__ import annotations
 
@@ -26,26 +35,40 @@ from repro.launch import steps as S
 from repro.models import model as M
 
 
+def _resolve_cfg_mesh(arch: str, *, smoke: bool,
+                      attn_kernel: str | None = None,
+                      cfg_overrides: dict | None = None,
+                      mesh_shape: tuple[int, int] | None = None):
+    """Shared config/mesh setup for the classic and engine drivers.
+
+    ``attn_kernel='flash'`` routes prefill/decode through the fused Pallas
+    attention (DESIGN §2); int8 KV codes then skip the dequantized HBM
+    copy.  ``cfg_overrides`` patches arbitrary config fields (e.g.
+    head_dim=128 so the fused decode kernel genuinely launches on smoke
+    configs — it refuses non-lane-multiple head dims).  ``mesh_shape``
+    builds a (data, model) mesh: the fused kernels run per-shard via
+    shard_map — KV heads over 'model', batch over 'data' (DESIGN §8/§9);
+    the step builders raise NotImplementedError if 'model' doesn't divide
+    n_kv_heads."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if attn_kernel is not None:
+        cfg = dataclasses.replace(cfg, attn_kernel=attn_kernel)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    mesh = None
+    if mesh_shape is not None:
+        mesh = jax.make_mesh(tuple(mesh_shape), ("data", "model"))
+    return cfg, mesh
+
+
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           mode: str = "int", calibrate: bool = True, smoke: bool = True,
           seed: int = 0, params=None, attn_kernel: str | None = None,
           mesh_shape: tuple[int, int] | None = None,
           cfg_overrides: dict | None = None) -> dict:
-    cfg = get_smoke_config(arch) if smoke else get_config(arch)
-    if attn_kernel is not None:
-        # 'flash' routes prefill/decode through the fused Pallas attention
-        # (DESIGN §2); int8 KV codes then skip the dequantized HBM copy.
-        cfg = dataclasses.replace(cfg, attn_kernel=attn_kernel)
-    if cfg_overrides:
-        # e.g. head_dim=128 so the fused decode kernel genuinely launches
-        # on smoke configs (it refuses non-lane-multiple head dims)
-        cfg = dataclasses.replace(cfg, **cfg_overrides)
-    mesh = None
-    if mesh_shape is not None:
-        # (data, model) mesh: flash runs per-shard via shard_map — KV heads
-        # over 'model', batch over 'data' (DESIGN §8).  The builders raise
-        # NotImplementedError if 'model' doesn't divide n_kv_heads.
-        mesh = jax.make_mesh(tuple(mesh_shape), ("data", "model"))
+    cfg, mesh = _resolve_cfg_mesh(arch, smoke=smoke, attn_kernel=attn_kernel,
+                                  cfg_overrides=cfg_overrides,
+                                  mesh_shape=mesh_shape)
     if params is None:
         params = M.init_params(cfg, jax.random.PRNGKey(seed))
     stream = SyntheticLMStream(
@@ -71,16 +94,29 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
                                               max_seq=max_seq))
     serve_fn = jax.jit(S.build_serve_step(cfg, ctx, mesh=mesh))
 
+    # AOT-compile both steps so the timings below are steady-state: the
+    # old code folded jit tracing+compilation into prefill_s and the first
+    # decode step, which dwarfed the actual compute at smoke scale.
     t0 = time.time()
-    logits, cache = prefill_fn(params, prompt)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    prefill_c = prefill_fn.lower(params, prompt).compile()
+    compile_prefill_s = time.time() - t0
+
+    t0 = time.time()
+    logits, cache = prefill_c(params, prompt)
+    jax.block_until_ready(logits)
     t_prefill = time.time() - t0
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+    t0 = time.time()
+    serve_c = serve_fn.lower(params, tok, cache,
+                             jnp.asarray(prompt_len, jnp.int32)).compile()
+    compile_decode_s = time.time() - t0
 
     out_tokens = [tok]
     t0 = time.time()
     for i in range(gen - 1):
-        tok, cache = serve_fn(params, tok, cache,
-                              jnp.asarray(prompt_len + i, jnp.int32))
+        tok, cache = serve_c(params, tok, cache,
+                             jnp.asarray(prompt_len + i, jnp.int32))
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
@@ -88,7 +124,82 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     gen_tokens = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
     return {"tokens": gen_tokens, "prefill_s": t_prefill,
             "decode_s_per_tok": t_decode / max(gen - 1, 1),
+            "compile_prefill_s": compile_prefill_s,
+            "compile_decode_s": compile_decode_s,
             "report": report, "ctx": ctx}
+
+
+def poisson_workload(vocab_size: int, *, n_requests: int, rate: float,
+                     prompt_lens=(8, 16, 24, 32), gen_lens=(4, 8, 16, 24),
+                     temperature: float = 0.0, seed: int = 0) -> list:
+    """Synthetic open-loop workload: Poisson arrivals (exponential
+    inter-arrival at ``rate`` req/s on the engine clock) with mixed
+    prompt/generation lengths — the shape continuous batching exists for
+    (a static batch pads every request to the longest member)."""
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab_size,
+                                size=int(rng.choice(prompt_lens))
+                                ).astype(np.int32),
+            max_new_tokens=int(rng.choice(gen_lens)),
+            temperature=temperature,
+            arrival=t))
+    return reqs
+
+
+def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
+                 n_slots: int = 4, block_size: int = 16, chunk: int = 16,
+                 max_model_len: int | None = None,
+                 num_blocks: int | None = None, mode: str = "fp",
+                 calibrate: bool = False, smoke: bool = True, seed: int = 0,
+                 attn_kernel: str | None = None, kv_bits: int | None = 8,
+                 temperature: float = 0.0, top_k: int = 0,
+                 mesh_shape: tuple[int, int] | None = None,
+                 prompt_lens=(8, 16, 24, 32), gen_lens=(4, 8, 16, 24),
+                 requests=None, cfg_overrides: dict | None = None) -> dict:
+    """Continuous-batching serving on the paged int8-KV block pool
+    (DESIGN §9).  Returns {"report", "outputs", "requests", "engine"}."""
+    from repro.serving import ServingEngine
+    overrides = dict(cfg_overrides or {})
+    if kv_bits is not None:
+        overrides.setdefault("kv_cache_bits", kv_bits)
+    cfg, mesh = _resolve_cfg_mesh(arch, smoke=smoke, attn_kernel=attn_kernel,
+                                  cfg_overrides=overrides,
+                                  mesh_shape=mesh_shape)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+
+    ctx = QuantContext(mode=QuantMode(mode))
+    if calibrate and mode in ("fake", "int"):
+        stream = SyntheticLMStream(cfg.vocab_size, max(prompt_lens), 4,
+                                   seed=seed)
+        b0 = {k: jnp.asarray(v) for k, v in stream.batch(0).items()
+              if k == "tokens"}
+        ctx_cal, _ = calibrate_lm(
+            lambda p, b, c: M.forward(p, b, cfg, c), params, b0)
+        ctx = dataclasses.replace(ctx_cal, mode=QuantMode(mode))
+
+    if requests is None:
+        requests = poisson_workload(
+            cfg.vocab_size, n_requests=n_requests, rate=rate,
+            prompt_lens=prompt_lens, gen_lens=gen_lens,
+            temperature=temperature, seed=seed)
+    if max_model_len is None:
+        need = max(len(r.prompt) + r.max_new_tokens for r in requests)
+        max_model_len = -(-need // block_size) * block_size
+    engine = ServingEngine(cfg, params, ctx, n_slots=n_slots,
+                           block_size=block_size, chunk=chunk,
+                           max_model_len=max_model_len,
+                           num_blocks=num_blocks, top_k=top_k, mesh=mesh,
+                           seed=seed)
+    report = engine.run(requests)
+    return {"report": report, "outputs": engine.outputs(),
+            "requests": requests, "engine": engine}
 
 
 def main(argv=None):
@@ -108,18 +219,51 @@ def main(argv=None):
                     help="serve on a (data, model) device mesh, e.g. '1x2';"
                          " with --attn-kernel flash the fused kernels run"
                          " per-shard via shard_map (DESIGN §8)")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine on the paged int8-KV "
+                         "block pool (DESIGN §9) against a synthetic "
+                         "Poisson workload of mixed prompt/gen lengths")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="[--engine] workload size")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="[--engine] Poisson arrival rate, req/s")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="[--engine] continuous-batch width")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="[--engine] KV pool block size, tokens")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="[--engine] prefill chunk / per-step token budget")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="[--engine] sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="[--engine] top-k sampling cutoff (0 = full)")
     args = ap.parse_args(argv)
     mesh_shape = None
     if args.mesh is not None:
         d, m = (int(x) for x in args.mesh.lower().split("x"))
         mesh_shape = (d, m)
+
+    if args.engine:
+        import json
+        out = serve_engine(args.arch, n_requests=args.requests,
+                           rate=args.rate, n_slots=args.slots,
+                           block_size=args.block_size, chunk=args.chunk,
+                           mode=args.mode, calibrate=not args.no_calibrate,
+                           smoke=not args.full,
+                           attn_kernel=args.attn_kernel,
+                           temperature=args.temperature, top_k=args.top_k,
+                           mesh_shape=mesh_shape)
+        print(json.dumps(out["report"], indent=2))
+        return
     out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 gen=args.gen, mode=args.mode,
                 calibrate=not args.no_calibrate, smoke=not args.full,
                 attn_kernel=args.attn_kernel, mesh_shape=mesh_shape)
     print(f"generated {out['tokens'].shape} tokens | "
+          f"compile {out['compile_prefill_s']:.2f}s+"
+          f"{out['compile_decode_s']:.2f}s | "
           f"prefill {out['prefill_s']:.2f}s | "
-          f"decode {1e3*out['decode_s_per_tok']:.1f} ms/tok")
+          f"decode {1e3*out['decode_s_per_tok']:.1f} ms/tok (steady)")
     print("sample:", out["tokens"][0][:16])
 
 

@@ -23,8 +23,9 @@ from repro.optim import adamw, adafactor, clip_by_global_norm
 from repro.optim.optimizers import Optimizer, OptState
 
 __all__ = ["pick_optimizer", "build_train_step", "build_prefill_step",
-           "build_serve_step", "input_specs", "abstract_params",
-           "abstract_opt_state", "abstract_cache", "param_count"]
+           "build_serve_step", "build_paged_step", "input_specs",
+           "abstract_params", "abstract_opt_state", "abstract_cache",
+           "abstract_paged_cache", "param_count"]
 
 ADAFACTOR_THRESHOLD = 30e9  # params; above this AdamW state cannot fit v5e
 
@@ -50,6 +51,12 @@ def abstract_opt_state(cfg: ModelConfig, opt: Optimizer) -> Any:
 
 def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
     return jax.eval_shape(lambda: M.init_cache(cfg, batch, max_seq))
+
+
+def abstract_paged_cache(cfg: ModelConfig, num_blocks: int,
+                         block_size: int) -> Any:
+    return jax.eval_shape(
+        lambda: M.init_paged_cache(cfg, num_blocks, block_size))
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +232,25 @@ def build_serve_step(cfg: ModelConfig, ctx: QuantContext,
             return next_tok[:, None], cache
 
     return serve_step
+
+
+def build_paged_step(cfg: ModelConfig, ctx: QuantContext,
+                     attn_kernel: Optional[str] = None,
+                     mesh: Optional[Mesh] = None):
+    """One serving-engine step over the paged KV block pool (DESIGN §9):
+    (params, tokens (B,C), cache, positions (B,C), block_tables (B,NBmax))
+    -> (logits (B,C,V), cache).  The SAME builder serves continuous-
+    batching decode (B=n_slots, C=1) and chunked prefill (B=1, C=chunk);
+    jit specializes per distinct (B, C) — the engine's bucketing keeps
+    that set bounded."""
+    cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
+
+    def paged_step(params, tokens, cache, positions, block_tables):
+        with _mesh_scope(mesh):
+            return M.paged_step(params, tokens, cache, positions,
+                                block_tables, cfg, ctx)
+
+    return paged_step
 
 
 # ---------------------------------------------------------------------------

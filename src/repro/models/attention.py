@@ -32,8 +32,8 @@ from repro.core.qmodel import QuantContext
 from repro.distributed.sharding import constrain, current_mesh
 from repro.models.common import apply_rope, linear, rmsnorm
 
-__all__ = ["KVCache", "MLACache", "init_gqa", "gqa_attention", "init_mla",
-           "mla_attention", "chunked_attention"]
+__all__ = ["KVCache", "MLACache", "PagedKVCache", "init_gqa",
+           "gqa_attention", "init_mla", "mla_attention", "chunked_attention"]
 
 
 class KVCache(NamedTuple):
@@ -44,6 +44,17 @@ class KVCache(NamedTuple):
 class MLACache(NamedTuple):
     c_kv: jax.Array     # (B, S_max, kv_lora)  — compressed latent
     k_pe: jax.Array     # (B, S_max, rope_dim) — shared rope key
+
+
+class PagedKVCache(NamedTuple):
+    """Serving-engine KV block pool (DESIGN §9): ALL slots' KV lives in one
+    pool of fixed-size blocks; per-slot block tables (passed alongside, not
+    stored here — they are host-managed ints) map logical block i to a pool
+    block.  int8 Eq.-1 codes are written ONCE at their token's step and
+    never requantized; block 0 is the trash block inactive slots write to.
+    """
+    k: jax.Array        # (NB, BS, KVH, D) — int8 codes or model dtype
+    v: jax.Array        # (NB, BS, KVH, D)
 
 
 # ---------------------------------------------------------------------------
@@ -219,12 +230,19 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
                   cache_pos: Optional[jax.Array] = None,
                   causal: bool = True, kv_x: Optional[jax.Array] = None,
                   use_rope: bool = True, kv_chunk: int = 1024,
+                  block_tables: Optional[jax.Array] = None,
                   name: str = "attn") -> tuple[jax.Array, Optional[KVCache]]:
     """GQA with optional qk_norm, KV cache (decode) and cross-attn (kv_x).
 
     cache semantics: if ``cache`` is given, new K/V are written at
     ``cache_pos`` (scalar step index) and attention runs over the full
     cache (decode); otherwise attention is over the local sequence.
+
+    Paged serving (DESIGN §9): with ``cache`` a :class:`PagedKVCache` the
+    new K/V codes are scattered into the block pool through
+    ``block_tables`` at per-token absolute positions ``cache_pos`` (shape
+    (B, S) — continuous batching decodes every slot at its own position)
+    and attention runs over the pool via ``ops.paged_attention``.
     """
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -247,6 +265,36 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
         q = apply_rope(q, positions, cfg.rope_theta)
         kv_positions = positions if kv_x is None else jnp.arange(src.shape[1])[None]
         k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    if isinstance(cache, PagedKVCache):
+        # serving-engine paged path (DESIGN §9): quantize ONCE, scatter the
+        # codes into the slot's pool blocks at their absolute positions,
+        # then attend over the pool.  ``cache_pos`` is (B, S): each slot in
+        # the fixed-width batch is at its OWN live length (decode, S=1) or
+        # its chunk's position range (chunked prefill, S=chunk).
+        assert block_tables is not None and cache_pos is not None
+        nb_pool, bs_blk = cache.k.shape[0], cache.k.shape[1]
+        kv_frac_bits = None
+        if cache.k.dtype == jnp.int8:
+            from repro.core.qscheme import quant
+            kv_frac_bits = cfg.kv_cache_frac_bits
+            k_c, v_c = quant(k, kv_frac_bits, 8), quant(v, kv_frac_bits, 8)
+        else:
+            k_c, v_c = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+        blk = jnp.take_along_axis(block_tables, cache_pos // bs_blk, axis=1)
+        idx = (blk * bs_blk + cache_pos % bs_blk).reshape(-1)    # (B*S,)
+        k_pool = cache.k.reshape(nb_pool * bs_blk, kvh, hd).at[idx].set(
+            k_c.reshape(-1, kvh, hd)).reshape(cache.k.shape)
+        v_pool = cache.v.reshape(nb_pool * bs_blk, kvh, hd).at[idx].set(
+            v_c.reshape(-1, kvh, hd)).reshape(cache.v.shape)
+        from repro.kernels import ops as kops
+        out = kops.paged_attention(q, k_pool, v_pool, block_tables,
+                                   cache_pos, kv_frac_bits=kv_frac_bits,
+                                   mesh=current_mesh(),
+                                   shard_axis=cfg.attn_shard_axis)
+        out = constrain(out.reshape(b, s, h * hd), ("batch", None, "heads"))
+        return (linear(ctx, f"{name}/wo", out, p["wo"]),
+                PagedKVCache(k_pool, v_pool))
 
     # 'flash' routes the hot paths through the fused Pallas kernel
     # (DESIGN §2): int8 KV codes are read straight into VMEM and bit-shift

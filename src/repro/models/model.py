@@ -24,8 +24,8 @@ from repro.models import ssm as ssm_lib
 from repro.models import transformer as tfm
 from repro.models.common import Initializer, embed, rmsnorm, unembed
 
-__all__ = ["init_params", "init_cache", "forward", "prefill", "decode_step",
-           "loss_fn"]
+__all__ = ["init_params", "init_cache", "init_paged_cache", "forward",
+           "prefill", "decode_step", "paged_step", "loss_fn"]
 
 
 def _dtype(cfg: ModelConfig):
@@ -143,6 +143,31 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
             "kv": kv(n_groups),
         }
     raise ValueError(fam)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> Any:
+    """KV BLOCK POOL for the continuous-batching serving engine (DESIGN §9).
+
+    Unlike :func:`init_cache` (one dense (B, S_max) cache per batch), the
+    pool is a single (L, NB, BS, KVH, D) arena shared by every in-flight
+    request; the host-side :class:`repro.serving.kv_pool.BlockPool` hands
+    out blocks and per-sequence block tables.  Block 0 is the trash block
+    (inactive slots write there), so ``num_blocks`` must be >= 2.
+    """
+    if cfg.family not in ("dense", "vlm") or cfg.mla is not None:
+        raise NotImplementedError(
+            f"paged serving covers GQA KV caches (family dense/vlm); "
+            f"got family={cfg.family!r} mla={cfg.mla is not None}")
+    if num_blocks < 2:
+        raise ValueError("pool needs >= 2 blocks (block 0 is the trash "
+                         "block inactive slots write to)")
+    dt = _dtype(cfg)
+    kv_dt = jnp.int8 if cfg.kv_cache_bits == 8 else dt  # Eq.-1 codes
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
+    return {"paged_kv": att.PagedKVCache(k=jnp.zeros(shape, kv_dt),
+                                         v=jnp.zeros(shape, kv_dt))}
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +414,39 @@ def decode_step(params: dict, tokens: jax.Array, cache: Any, pos: jax.Array,
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = unembed(ctx, x, head)
     return logits[:, 0], new_cache
+
+
+def paged_step(params: dict, tokens: jax.Array, cache: Any,
+               positions: jax.Array, block_tables: jax.Array,
+               cfg: ModelConfig, ctx: QuantContext) -> tuple[jax.Array, Any]:
+    """One serving-engine step over the paged KV block pool (DESIGN §9).
+
+    tokens (B, C) at PER-TOKEN absolute ``positions`` (B, C);
+    ``block_tables`` (B, NBmax) maps each slot's logical blocks to pool
+    blocks.  Covers BOTH engine shapes: continuous-batching decode
+    (B = n_slots, C = 1 — every slot at its own live length) and chunked
+    prefill (B = 1, C = chunk bucket).  Returns (logits fp32 (B, C, V),
+    new cache); the engine samples from the last REAL token's row.
+    """
+    b, c = tokens.shape
+    if cfg.family not in ("dense", "vlm") or cfg.mla is not None:
+        raise NotImplementedError(
+            f"paged_step covers GQA dense/vlm families; got {cfg.family!r}")
+    dt = _dtype(cfg)
+    x = constrain(embed(params["embed"], tokens, dt), ("batch", None, None))
+
+    def body(x, inp):
+        p_l, c_l = inp
+        y, cl = tfm.dense_block(ctx, p_l, x, cfg, positions=positions,
+                                cache=c_l, cache_pos=positions,
+                                block_tables=block_tables)
+        return y, cl
+
+    x, kv = _scan(body, x, (params["blocks"], cache["paged_kv"]))
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(ctx, x, head)
+    return logits, {"paged_kv": kv}
 
 
 # ---------------------------------------------------------------------------

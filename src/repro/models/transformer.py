@@ -55,20 +55,26 @@ def init_dense_block(init: Initializer, cfg: ModelConfig) -> dict:
     return p
 
 
-def _attn_dispatch(ctx, p, x, cfg, positions, cache, cache_pos, use_rope=True):
+def _attn_dispatch(ctx, p, x, cfg, positions, cache, cache_pos,
+                   use_rope=True, block_tables=None):
     if cfg.mla is not None:
+        if block_tables is not None:
+            raise NotImplementedError(
+                "paged serving covers GQA caches only; MLA's compressed "
+                "latent cache has no block-pool layout yet (DESIGN §9)")
         return att.mla_attention(ctx, p["attn"], x, cfg, positions=positions,
                                  cache=cache, cache_pos=cache_pos)
     return att.gqa_attention(ctx, p["attn"], x, cfg, positions=positions,
                              cache=cache, cache_pos=cache_pos,
-                             use_rope=use_rope)
+                             use_rope=use_rope, block_tables=block_tables)
 
 
 def dense_block(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
                 *, positions: jax.Array, cache=None, cache_pos=None,
-                use_rope: bool = True):
+                use_rope: bool = True, block_tables=None):
     h, new_cache = _attn_dispatch(ctx, p, rmsnorm(x, p["ln1"], cfg.norm_eps),
-                                  cfg, positions, cache, cache_pos, use_rope)
+                                  cfg, positions, cache, cache_pos, use_rope,
+                                  block_tables)
     x = constrain(x + h, ("batch", None, None))
     x = x + mlp_lib.mlp(ctx, p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps),
                         cfg.act)
@@ -89,9 +95,11 @@ def init_moe_block(init: Initializer, cfg: ModelConfig) -> dict:
 
 
 def moe_block(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
-              *, positions: jax.Array, cache=None, cache_pos=None):
+              *, positions: jax.Array, cache=None, cache_pos=None,
+              block_tables=None):
     h, new_cache = _attn_dispatch(ctx, p, rmsnorm(x, p["ln1"], cfg.norm_eps),
-                                  cfg, positions, cache, cache_pos)
+                                  cfg, positions, cache, cache_pos,
+                                  block_tables=block_tables)
     x = constrain(x + h, ("batch", None, None))
     x = x + mlp_lib.moe(ctx, p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
     return constrain(x, ("batch", None, None)), new_cache

@@ -1,0 +1,23 @@
+"""Continuous-batching serving engine on a paged int8-KV block pool.
+
+Three layers (DESIGN §9):
+
+* :mod:`repro.serving.kv_pool`   — host-side block allocator over the
+  device-resident pool (``models.model.init_paged_cache``): fixed-size
+  blocks of int8 Eq.-1 codes + per-block power-of-two scale exponents,
+  per-sequence block tables, alloc/extend/free/evict, utilization stats.
+* :mod:`repro.serving.scheduler` — request lifecycle
+  WAITING→PREFILL→DECODE→DONE, FCFS slot-based continuous batching,
+  chunked prefill under a per-step token budget, recompute preemption
+  (youngest-first, so the oldest request always progresses).
+* :mod:`repro.serving.engine`    — the step loop: jitted paged
+  prefill/decode with fixed slot shapes, greedy + temperature/top-k
+  sampling, per-request stop/max-tokens, throughput + latency + hwcost
+  report.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_pool import BlockPool, BlockPoolError
+from repro.serving.scheduler import Request, RequestState, Scheduler
+
+__all__ = ["ServingEngine", "BlockPool", "BlockPoolError", "Request",
+           "RequestState", "Scheduler"]

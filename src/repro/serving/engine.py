@@ -1,0 +1,370 @@
+"""Continuous-batching step loop over the paged int8-KV block pool.
+
+The engine owns the device state (params + the block-pool cache from
+``models.model.init_paged_cache``) and drives ONE jitted step builder
+(``launch.steps.build_paged_step``) at two shapes:
+
+* decode: (n_slots, 1) — every engine step decodes ALL live slots at
+  their own positions; finished slots are backfilled by newly admitted
+  requests, so the batch never drains (continuous batching).
+* chunked prefill: (1, C) for C in the scheduler's bucket set — prompts
+  are fed ``chunk`` tokens at a time under a per-step token budget.
+
+jit therefore compiles a BOUNDED set of executables:
+1 (decode) + |buckets| (prefill) — bucketing is what keeps that true.
+
+KV codes are written once on the Eq.-1 power-of-two grid and stay
+int8-resident in the pool until the request leaves; attention consumes
+them in place (fused paged kernel on MXU-aligned shapes, gather reference
+otherwise).  The report quantifies what that buys with the paper's Table 5
+constants (``core.hwcost``): the requant ops actually executed vs the ops
+a dequantize-the-cache-every-step dataflow would have executed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import hwcost
+from repro.core.qmodel import QuantContext
+from repro.launch import steps as S
+from repro.models import model as M
+from repro.serving.kv_pool import TRASH_BLOCK, BlockPool
+from repro.serving.scheduler import (Request, RequestState, Scheduler,
+                                     chunk_bucket)
+
+__all__ = ["ServingEngine", "sample_tokens", "summarize_step_times"]
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array,
+                  temperatures: jax.Array,
+                  top_k: Optional[jax.Array] = None) -> jax.Array:
+    """Greedy + temperature/top-k sampling hook.
+
+    logits (B, V); temperatures (B,) — 0 selects greedy for that row;
+    top_k (B,) int32 — 0 keeps the full vocabulary for that row.  Both
+    are PER-ROW traced values, so one fixed-shape call serves a batch
+    mixing greedy, full-vocab and top-k requests (continuous batching
+    cannot afford a recompile per sampling config)."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)
+    if top_k is not None:
+        v = logits.shape[-1]
+        srt = jnp.sort(logits, axis=-1)                    # ascending
+        kth_idx = jnp.clip(v - jnp.maximum(top_k, 1), 0, v - 1)
+        kth = jnp.take_along_axis(srt, kth_idx[:, None], axis=-1)
+        logits = jnp.where((top_k[:, None] > 0) & (logits < kth),
+                           -jnp.inf, logits)
+    scaled = logits / jnp.maximum(temperatures, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    return jnp.where(temperatures > 0, sampled, greedy).astype(jnp.int32)
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else None
+
+
+def summarize_step_times(step_times: dict) -> dict:
+    """Per-shape compile-vs-steady split: the first call of a jitted shape
+    pays tracing+compilation, the median of the rest is steady state.
+    Keys may be shape tuples (the engine's) or preformatted strings (the
+    static-baseline bench's)."""
+    shapes = {}
+    for shape, ts in sorted(step_times.items()):
+        key = "x".join(map(str, shape)) if isinstance(shape, tuple) \
+            else str(shape)
+        steady = float(np.median(ts[1:])) if len(ts) > 1 else None
+        shapes[key] = {
+            "calls": len(ts), "first_s": round(ts[0], 4),
+            "steady_s": round(steady, 4) if steady is not None else None}
+    return shapes
+
+
+class ServingEngine:
+    """Continuous-batching serving engine (DESIGN §9)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, ctx: QuantContext, *,
+                 n_slots: int = 4, block_size: int = 16,
+                 max_model_len: int = 128,
+                 num_blocks: Optional[int] = None, chunk: int = 16,
+                 prefill_token_budget: Optional[int] = None,
+                 top_k: int = 0, mesh=None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ctx
+        self.n_slots = n_slots
+        self.max_model_len = max_model_len
+        nbmax = -(-max_model_len // block_size)
+        if num_blocks is None:
+            # full residency: every slot can reach max_model_len (+ trash).
+            # Callers undersize this deliberately to exercise preemption.
+            num_blocks = 1 + n_slots * nbmax
+        scale_exp = cfg.kv_cache_frac_bits if cfg.kv_cache_bits == 8 else 0
+        self.pool = BlockPool(num_blocks, block_size, scale_exp=scale_exp)
+        self.sched = Scheduler(self.pool, n_slots=n_slots, chunk=chunk,
+                               max_model_len=max_model_len,
+                               prefill_token_budget=prefill_token_budget)
+        self.cache = M.init_paged_cache(cfg, num_blocks, block_size)
+        # sampling is FUSED into the jitted step: one dispatch + one host
+        # sync per engine step, and only the (B,) sampled tokens ever leave
+        # the device — logits never cross to the host.  The rng key derives
+        # from a per-call counter via fold_in inside the jit, so the host
+        # does zero PRNG work per step and runs stay seed-reproducible.
+        base_step = S.build_paged_step(cfg, ctx, mesh=mesh)
+        base_key = jax.random.PRNGKey(seed)
+
+        def sampled_step(params, tokens, cache, positions, bt, temps, topks,
+                         last_idx, step_idx):
+            logits, cache = base_step(params, tokens, cache, positions, bt)
+            row = jax.lax.dynamic_index_in_dim(logits, last_idx, axis=1,
+                                               keepdims=False)     # (B, V)
+            key = jax.random.fold_in(base_key, step_idx)
+            return sample_tokens(row, key, temps, topks), cache
+
+        # donate the pool: the per-token scatter then updates the arena in
+        # place — without donation XLA copies the whole multi-MB pool
+        # every step, which is exactly the write-amplification the paged
+        # design exists to avoid
+        self._step_fn = jax.jit(sampled_step, donate_argnums=(2,))
+        self._step_counter = 0
+        # engine-level default top-k, applied to requests that don't set
+        # their own (Request.top_k > 0 wins per slot)
+        self.default_top_k = top_k
+        # one requant op per KV element (paper's unit of Table 5)
+        self._elems_per_token = (cfg.n_layers * cfg.n_kv_heads
+                                 * cfg.resolved_head_dim * 2)
+        self.requant_ops_performed = 0
+        self.requant_ops_avoided = 0
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self._step_times: dict[tuple, list] = {}    # (B, C) -> wall seconds
+        self._t0 = time.perf_counter()
+        self._skip = 0.0
+        self._wall_s = 0.0
+
+    # -- clock ------------------------------------------------------------
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0 + self._skip
+
+    # -- public API -------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def reset_metrics(self) -> None:
+        """Clear accounting between runs (e.g. after a warm-up workload
+        that populated the jit caches) — engine must be drained first.
+        The sampling step counter resets too, so a reused engine replays
+        the same rng stream (seed-reproducible across passes); note that
+        post-reset ``first_s`` per shape reflects a WARM first call, not
+        compilation."""
+        assert self.sched.idle and self.pool.n_live == 0, \
+            "reset_metrics on a non-drained engine"
+        from repro.serving.kv_pool import PoolStats
+        self._step_counter = 0
+        self.sched.done.clear()
+        self.sched.admission_log.clear()
+        self.pool.stats = PoolStats()
+        self.requant_ops_performed = 0
+        self.requant_ops_avoided = 0
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self._step_times.clear()
+        self._wall_s = 0.0
+
+    def run(self, requests: list[Request]) -> dict:
+        """Serve ``requests`` (arrival-stamped) to completion; idle gaps
+        between arrivals are fast-forwarded on the engine clock, so the
+        report's latencies are arrival-relative without real sleeps."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        self._t0, self._skip = time.perf_counter(), 0.0
+        while pending or not self.sched.idle:
+            now = self._now()
+            if self.sched.idle and pending and pending[0].arrival > now:
+                self._skip += pending[0].arrival - now
+                now = self._now()
+            while pending and pending[0].arrival <= now:
+                self.submit(pending.pop(0))
+            self.step()
+        self._wall_s = self._now()
+        return self.report()
+
+    def step(self) -> None:
+        """One engine iteration: admit → chunked prefill → decode."""
+        self.sched.admit(self._now())
+        self._run_prefills()
+        self._run_decode()
+
+    # -- prefill ----------------------------------------------------------
+
+    def _run_prefills(self) -> None:
+        # one shared token budget per engine step: admitting a long prompt
+        # costs the decode batch at most `budget` tokens of extra latency
+        budget = self.sched.prefill_token_budget
+        for req in self.sched.prefill_jobs():
+            while budget > 0 and req.state is RequestState.PREFILL:
+                budget -= self._prefill_chunk(req, budget)
+
+    def _prefill_chunk(self, req: Request, budget: int) -> int:
+        start = req.n_prefilled
+        c_real = min(self.sched.chunk, len(req.feed) - start, budget)
+        c_pad = chunk_bucket(c_real, self.sched.chunk)
+        cap = self.max_model_len - start
+        if c_pad > cap:
+            # near the end of the table the padded tail could land past
+            # max_model_len (clamped block-table lookups would then alias
+            # LIVE rows of the last block).  Shrink to the largest power
+            # of two that fits — still pow2, so at most 2 widths below
+            # the bucket floor (1 and 2) join the executable set; at
+            # worst the boundary chunk feeds fewer real tokens.
+            c_pad = 1 << (cap.bit_length() - 1)
+            c_real = min(c_real, c_pad)
+        tokens = np.zeros((1, c_pad), np.int32)
+        tokens[0, :c_real] = req.feed[start:start + c_real]
+        positions = (start + np.arange(c_pad, dtype=np.int32))[None]
+        bt = self.pool.table_row(req.rid, self.sched.nbmax)[None]
+        toks = self._timed_step(tokens, positions, bt,
+                                np.asarray([req.temperature], np.float32),
+                                np.asarray([self._req_top_k(req)], np.int32),
+                                c_real - 1)
+        req.n_prefilled += c_real
+        req.n_ctx = req.n_prefilled
+        self.prefill_chunks += 1
+        self.requant_ops_performed += c_real * self._elems_per_token
+        if req.n_prefilled == len(req.feed):
+            # prompt fully resident: the token sampled from the last real
+            # row IS the first generated token (for preemption resumes it
+            # just continues the sequence)
+            tok = int(toks[0])
+            now = self._now()
+            if req.t_first is None:
+                req.t_first = now
+            done = req.finished_by(tok, self.max_model_len)
+            req.generated.append(tok)
+            if done:
+                self.sched.finish(req, now)
+            else:
+                req.state = RequestState.DECODE
+        return c_real
+
+    # -- decode -----------------------------------------------------------
+
+    def _run_decode(self) -> None:
+        now = self._now()
+        for req in list(self.sched.decode_reqs()):
+            if req.slot is not None and req.state is RequestState.DECODE:
+                self.sched.grow_for_decode(req, now)
+        reqs = self.sched.decode_reqs()
+        if not reqs:
+            return
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        positions = np.zeros((self.n_slots, 1), np.int32)
+        bt = np.full((self.n_slots, self.sched.nbmax), TRASH_BLOCK, np.int32)
+        temps = np.zeros((self.n_slots,), np.float32)
+        topks = np.zeros((self.n_slots,), np.int32)
+        for req in reqs:
+            s = req.slot
+            tokens[s, 0] = req.generated[-1]
+            positions[s, 0] = req.n_ctx
+            bt[s] = self.pool.table_row(req.rid, self.sched.nbmax)
+            temps[s] = req.temperature
+            topks[s] = self._req_top_k(req)
+        toks = self._timed_step(tokens, positions, bt, temps, topks, 0)
+        self.decode_steps += 1
+        self.requant_ops_performed += len(reqs) * self._elems_per_token
+        now = self._now()
+        for req in reqs:
+            req.n_ctx += 1
+            # the dataflow the int8-resident pool deletes: dequantizing the
+            # slot's whole live cache before attending, EVERY step
+            self.requant_ops_avoided += req.n_ctx * self._elems_per_token
+            tok = int(toks[req.slot])
+            done = req.finished_by(tok, self.max_model_len)
+            req.generated.append(tok)
+            if done:
+                self.sched.finish(req, now)
+
+    # -- shared step plumbing --------------------------------------------
+
+    def _req_top_k(self, req: Request) -> int:
+        return req.top_k if req.top_k > 0 else self.default_top_k
+
+    def _timed_step(self, tokens, positions, bt, temps, topks, last_idx):
+        t0 = time.perf_counter()
+        self._step_counter += 1
+        # all-zero top-k (the greedy/full-vocab default) drops to the
+        # sampler's None fast path: the per-step full-vocab jnp.sort never
+        # enters the hot executable.  Costs at most one extra jit variant
+        # per shape.
+        topks = np.asarray(topks)
+        topks_arg = jnp.asarray(topks) if topks.any() else None
+        toks, self.cache = self._step_fn(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(positions), jnp.asarray(bt), jnp.asarray(temps),
+            topks_arg, jnp.asarray(last_idx, jnp.int32),
+            jnp.asarray(self._step_counter, jnp.uint32))
+        toks = np.asarray(toks)                  # host sync
+        self._step_times.setdefault(tuple(tokens.shape), []).append(
+            time.perf_counter() - t0)
+        return toks
+
+    # -- report -----------------------------------------------------------
+
+    def outputs(self) -> dict[int, np.ndarray]:
+        return {r.rid: np.asarray(r.generated, np.int32)
+                for r in self.sched.done}
+
+    def report(self) -> dict:
+        done = self.sched.done
+        ttft = [r.t_first - r.arrival for r in done if r.t_first is not None]
+        e2e = [r.t_done - r.arrival for r in done if r.t_done is not None]
+        tpot = [(r.t_done - r.t_first) / (r.n_generated - 1)
+                for r in done if r.n_generated > 1]
+        gen_tokens = sum(r.n_generated for r in done)
+        prompt_tokens = sum(len(r.prompt) for r in done)
+        wall = self._wall_s or self._now()
+        shapes = summarize_step_times(self._step_times)
+        perf = self.requant_ops_performed
+        avoid = self.requant_ops_avoided
+        hw = {
+            "requant_ops_performed": perf,
+            "requant_ops_avoided": avoid,
+            "energy_uj_bit_shift": hwcost.estimate(
+                "bit_shifting", perf).energy_uj,
+            "energy_uj_if_requant_per_step": hwcost.estimate(
+                "bit_shifting", perf + avoid).energy_uj,
+            "energy_uj_if_scaling_factor": hwcost.estimate(
+                "scaling_factor", perf + avoid).energy_uj,
+        }
+        return {
+            "n_requests": len(done) + len(self.sched.waiting)
+            + len(self.sched.active()),
+            "completed": len(done),
+            "preemptions": sum(r.preemptions for r in done),
+            "gen_tokens": gen_tokens,
+            "prompt_tokens": prompt_tokens,
+            "wall_s": round(wall, 4),
+            "tokens_per_s": round(gen_tokens / wall, 2) if wall else None,
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "ttft_s": {"p50": _pct(ttft, 50), "p99": _pct(ttft, 99)},
+            "tpot_s": {"p50": _pct(tpot, 50), "p99": _pct(tpot, 99)},
+            "e2e_s": {"p50": _pct(e2e, 50), "p99": _pct(e2e, 99)},
+            "step_shapes": shapes,
+            "pool": {
+                "num_blocks": self.pool.num_blocks,
+                "block_size": self.pool.block_size,
+                "peak_live_blocks": self.pool.stats.peak_live,
+                "peak_utilization": round(
+                    self.pool.stats.peak_live
+                    / max(self.pool.num_blocks - 1, 1), 3),
+                "evictions": self.pool.stats.evictions,
+            },
+            "hwcost": hw,
+        }

@@ -1,0 +1,212 @@
+"""Host-side allocator for the paged KV block pool (DESIGN §9).
+
+The device arrays live in ``models.model.init_paged_cache`` (one
+(L, NB, BS, KVH, D) arena per K and V); this module owns the *map*: which
+pool block belongs to which sequence, in which logical order, at which
+power-of-two scale exponent.  Everything here is plain Python/numpy — no
+jax — so the scheduler property tests run without a model.
+
+Invariants (checked by :meth:`BlockPool.check_invariants`, enforced by the
+tier-1 property tests):
+
+* block 0 is the TRASH block: never allocated, never freed — inactive
+  engine slots point their whole block table at it so their masked writes
+  land somewhere harmless.
+* every non-trash block is either on the free stack or owned by exactly
+  one sequence (no orphans, no double ownership).
+* freeing an unknown sequence (double free) raises — it never corrupts.
+* a live block's scale exponent never changes: codes are written once on
+  the Eq.-1 grid chosen at alloc time and never requantized while resident
+  (the paper's fewer-requant-ops thesis applied to serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["BlockPool", "BlockPoolError", "PoolStats"]
+
+TRASH_BLOCK = 0
+
+
+class BlockPoolError(RuntimeError):
+    """Allocator misuse (double free, unknown sequence, exhausted pool)."""
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocs: int = 0            # blocks handed out
+    frees: int = 0             # blocks returned
+    evictions: int = 0         # sequences evicted (preemption)
+    peak_live: int = 0         # max simultaneously-owned blocks
+    alloc_failures: int = 0    # alloc/extend requests refused
+
+
+class BlockPool:
+    """Fixed-capacity pool of KV blocks with per-sequence block tables."""
+
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 scale_exp: int = 0):
+        if num_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (block 0 is trash)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.default_scale_exp = scale_exp
+        # LIFO free stack — recently freed blocks are re-used first (their
+        # pool rows are hot).  Block 0 (trash) is never on it.
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
+        self._seqs: dict[int, list[int]] = {}       # seq id -> blocks, order
+        self._owner: dict[int, int] = {}            # block -> seq id
+        # per-block po2 scale exponent (Eq.-1 fractional bit) — written at
+        # alloc, immutable while live.  One int8 per block of metadata.
+        self.scale_exp = np.full((num_blocks,), scale_exp, np.int32)
+        self.stats = PoolStats()
+
+    # -- capacity ---------------------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` KV rows."""
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.n_live / max(self.num_blocks - 1, 1)
+
+    def can_alloc(self, n_blocks: int) -> bool:
+        return n_blocks <= len(self._free)
+
+    def live_seqs(self) -> list[int]:
+        return list(self._seqs)
+
+    def n_blocks_of(self, seq_id: int) -> int:
+        return len(self._seqs.get(seq_id, ()))
+
+    # -- alloc / extend / free -------------------------------------------
+
+    def alloc_seq(self, seq_id: int, n_tokens: int, *,
+                  scale_exp: int | None = None) -> list[int]:
+        """Allocate the blocks for a new sequence of ``n_tokens`` rows."""
+        if seq_id in self._seqs:
+            raise BlockPoolError(f"sequence {seq_id} already allocated")
+        need = self.blocks_for(n_tokens)
+        if not self.can_alloc(need):
+            self.stats.alloc_failures += 1
+            raise BlockPoolError(
+                f"pool exhausted: need {need} blocks, {self.n_free} free")
+        exp = self.default_scale_exp if scale_exp is None else scale_exp
+        blocks = [self._take(exp) for _ in range(need)]
+        self._seqs[seq_id] = blocks
+        for blk in blocks:
+            self._owner[blk] = seq_id
+        return list(blocks)  # copy: callers must not mutate the pool's map
+
+    def extend(self, seq_id: int, n_tokens_total: int) -> list[int]:
+        """Grow ``seq_id`` to cover ``n_tokens_total`` rows; returns the
+        newly allocated blocks ([] when already covered)."""
+        if seq_id not in self._seqs:
+            raise BlockPoolError(f"unknown sequence {seq_id}")
+        blocks = self._seqs[seq_id]
+        need = self.blocks_for(n_tokens_total) - len(blocks)
+        if need <= 0:
+            return []
+        if not self.can_alloc(need):
+            self.stats.alloc_failures += 1
+            raise BlockPoolError(
+                f"pool exhausted: extend needs {need}, {self.n_free} free")
+        exp = int(self.scale_exp[blocks[0]]) if blocks \
+            else self.default_scale_exp
+        new = [self._take(exp) for _ in range(need)]
+        blocks.extend(new)
+        for blk in new:
+            self._owner[blk] = seq_id
+        return new
+
+    def free_seq(self, seq_id: int) -> int:
+        """Return all of ``seq_id``'s blocks; raises on double free."""
+        if seq_id not in self._seqs:
+            raise BlockPoolError(f"double free: unknown sequence {seq_id}")
+        blocks = self._seqs.pop(seq_id)
+        for blk in blocks:
+            del self._owner[blk]
+            self._free.append(blk)
+        self.stats.frees += len(blocks)
+        return len(blocks)
+
+    def evict(self, seq_id: int) -> int:
+        """Preemption path: free + count the eviction."""
+        n = self.free_seq(seq_id)
+        self.stats.evictions += 1
+        return n
+
+    def _take(self, scale_exp: int) -> int:
+        blk = self._free.pop()
+        self.scale_exp[blk] = scale_exp
+        self.stats.allocs += 1
+        self.stats.peak_live = max(self.stats.peak_live, self.n_live)
+        return blk
+
+    # -- views ------------------------------------------------------------
+
+    def table_row(self, seq_id: int, width: int) -> np.ndarray:
+        """(width,) int32 block table for the engine: the sequence's blocks
+        in logical order, tail-padded with the trash block (those entries
+        are only ever touched by masked positions).  Unknown sequences
+        raise — decoding a freed sequence against trash garbage must fail
+        fast, never corrupt silently; INACTIVE slots get their all-trash
+        rows from the engine's ``np.full(TRASH_BLOCK)`` default, not from
+        here."""
+        if seq_id not in self._seqs:
+            raise BlockPoolError(f"unknown sequence {seq_id}")
+        blocks = self._seqs[seq_id]
+        if len(blocks) > width:
+            raise BlockPoolError(
+                f"sequence {seq_id} has {len(blocks)} blocks > table "
+                f"width {width}")
+        row = np.full((width,), TRASH_BLOCK, np.int32)
+        row[:len(blocks)] = blocks
+        return row
+
+    def seq_scale_exp(self, seq_id: int) -> int:
+        """The (uniform) Eq.-1 exponent of a live sequence's blocks."""
+        blocks = self._seqs.get(seq_id)
+        if not blocks:
+            raise BlockPoolError(f"unknown sequence {seq_id}")
+        exps = {int(self.scale_exp[b]) for b in blocks}
+        if len(exps) != 1:
+            raise BlockPoolError(
+                f"sequence {seq_id} spans blocks with mixed scale "
+                f"exponents {sorted(exps)} — a block was requantized")
+        return exps.pop()
+
+    # -- invariants -------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        """Raises AssertionError on any broken pool invariant."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate blocks on free list"
+        assert TRASH_BLOCK not in free, "trash block on the free list"
+        assert TRASH_BLOCK not in self._owner, "trash block owned"
+        owned: set[int] = set()
+        for sid, blocks in self._seqs.items():
+            bset = set(blocks)
+            assert len(bset) == len(blocks), f"seq {sid} repeats a block"
+            assert not (bset & owned), f"seq {sid} shares blocks"
+            for blk in blocks:
+                assert self._owner.get(blk) == sid, \
+                    f"owner map out of sync for block {blk}"
+            owned |= bset
+        assert not (owned & free), "block both free and owned"
+        assert owned | free == set(range(1, self.num_blocks)), \
+            "orphan blocks (neither free nor owned)"
+        assert self.stats.peak_live <= self.num_blocks - 1

@@ -1,0 +1,230 @@
+"""Request lifecycle + slot-based continuous batching (DESIGN §9).
+
+Pure host-side bookkeeping — no jax imports — so the fairness and
+no-starvation property tests drive it with a fake model.
+
+Lifecycle::
+
+    WAITING --admit (FCFS, slot + blocks available)--> PREFILL
+    PREFILL --chunked prefill done, first token sampled--> DECODE
+    DECODE  --stop token / max-new-tokens / model-len--> DONE
+    PREFILL/DECODE --pool pressure (recompute preemption)--> WAITING
+
+Scheduling policy:
+
+* **FCFS with head-of-line blocking**: requests admit strictly in arrival
+  order; if the head of the queue doesn't fit (no free slot or not enough
+  pool blocks) nothing behind it admits either.  A later small request can
+  therefore never starve an earlier large one.
+* **Chunked prefill**: prompts are fed in ``chunk``-token pieces under a
+  per-engine-step token budget, so admitting a long prompt never stalls
+  the decode batch for more than one chunk.
+* **Recompute preemption, youngest first**: when a decode step cannot get
+  a block, the most recently *admitted* request is evicted (its blocks
+  freed, its prompt+generated tokens re-queued for re-prefill).  The
+  oldest running request is only ever preempted when it is the sole
+  runner, so the oldest request always makes progress — no livelock, no
+  starvation.  Generated tokens survive preemption: the re-prefill feed is
+  ``prompt + generated`` and decoding resumes where it left off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.kv_pool import BlockPool, BlockPoolError
+
+__all__ = ["Request", "RequestState", "Scheduler", "chunk_bucket"]
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+def chunk_bucket(n: int, chunk: int, *, floor: int = 4) -> int:
+    """Shape bucket for a prefill piece of ``n`` real tokens: the full
+    ``chunk`` when it fills one, else the smallest power of two >= n
+    (floored) — so jit sees at most log2(chunk) distinct prefill widths."""
+    if n >= chunk:
+        return chunk
+    b = floor
+    while b < n:
+        b <<= 1
+    return min(b, chunk)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its runtime bookkeeping."""
+
+    rid: int
+    prompt: np.ndarray                    # int32 token ids (immutable)
+    max_new_tokens: int
+    temperature: float = 0.0              # 0 -> greedy
+    top_k: int = 0                        # 0 -> full vocab (engine hook)
+    stop_token: Optional[int] = None
+    arrival: float = 0.0                  # seconds on the engine clock
+
+    # runtime (managed by the scheduler/engine)
+    state: RequestState = RequestState.WAITING
+    slot: Optional[int] = None
+    generated: list = dataclasses.field(default_factory=list)
+    feed: Optional[np.ndarray] = None     # tokens to (re-)prefill
+    n_prefilled: int = 0                  # feed tokens whose KV is written
+    n_ctx: int = 0                        # KV rows live in the pool
+    preemptions: int = 0
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None       # first token sampled (TTFT)
+    t_done: Optional[float] = None
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+    def finished_by(self, token: int, max_model_len: int) -> bool:
+        """Would sampling ``token`` complete this request?"""
+        if self.stop_token is not None and token == self.stop_token:
+            return True
+        if self.n_generated + 1 >= self.max_new_tokens:
+            return True
+        # +1: the next decode step would need to WRITE this token's KV row
+        return len(self.prompt) + self.n_generated + 1 >= max_model_len
+
+
+class Scheduler:
+    """Slot-based continuous batching over a :class:`BlockPool`."""
+
+    def __init__(self, pool: BlockPool, *, n_slots: int, chunk: int,
+                 max_model_len: int,
+                 prefill_token_budget: Optional[int] = None):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        if max_model_len > (pool.num_blocks - 1) * pool.block_size:
+            raise ValueError(
+                f"max_model_len {max_model_len} exceeds pool capacity "
+                f"{(pool.num_blocks - 1) * pool.block_size} tokens — a "
+                f"lone max-length request could deadlock")
+        self.pool = pool
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.max_model_len = max_model_len
+        self.prefill_token_budget = prefill_token_budget or chunk
+        self.nbmax = -(-max_model_len // pool.block_size)
+        self.waiting: list[Request] = []      # kept sorted by (arrival, rid)
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self.done: list[Request] = []
+        self.admission_log: list[int] = []    # rids in admission order
+
+    # -- queue ------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_model_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new_tokens} exceeds max_model_len "
+                f"{self.max_model_len}")
+        req.state = RequestState.WAITING
+        self._enqueue(req)
+
+    def _enqueue(self, req: Request) -> None:
+        key = (req.arrival, req.rid)
+        i = 0
+        while i < len(self.waiting) and \
+                (self.waiting[i].arrival, self.waiting[i].rid) <= key:
+            i += 1
+        self.waiting.insert(i, req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and all(s is None for s in self.slots)
+
+    def active(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    # -- admission (FCFS, head-of-line blocking) --------------------------
+
+    def admit(self, now: float) -> list[Request]:
+        admitted = []
+        while self.waiting:
+            try:
+                slot = self.slots.index(None)
+            except ValueError:
+                break
+            req = self.waiting[0]
+            req.feed = np.concatenate(
+                [req.prompt, np.asarray(req.generated, np.int32)]) \
+                if req.generated else req.prompt
+            if not self.pool.can_alloc(self.pool.blocks_for(len(req.feed))):
+                break                         # head blocks the line: FCFS
+            self.waiting.pop(0)
+            self.pool.alloc_seq(req.rid, len(req.feed))
+            req.state = RequestState.PREFILL
+            req.slot = slot
+            req.n_prefilled = 0
+            req.n_ctx = 0
+            req.t_admit = now if req.t_admit is None else req.t_admit
+            self.slots[slot] = req
+            self.admission_log.append(req.rid)
+            admitted.append(req)
+        return admitted
+
+    # -- prefill ----------------------------------------------------------
+
+    def prefill_jobs(self) -> list[Request]:
+        """PREFILL-state requests in admission (slot-stable FCFS) order."""
+        jobs = [r for r in self.slots
+                if r is not None and r.state is RequestState.PREFILL]
+        jobs.sort(key=lambda r: (r.t_admit, r.rid))
+        return jobs
+
+    # -- decode -----------------------------------------------------------
+
+    def decode_reqs(self) -> list[Request]:
+        return [r for r in self.slots
+                if r is not None and r.state is RequestState.DECODE]
+
+    def grow_for_decode(self, req: Request, now: float) -> bool:
+        """Ensure ``req`` owns a block for KV row ``n_ctx`` (the incoming
+        token's position).  On pool pressure, evict the youngest-admitted
+        running request and retry; returns False iff ``req`` itself was
+        the youngest and got preempted (skip its decode this step)."""
+        while True:
+            try:
+                self.pool.extend(req.rid, req.n_ctx + 1)
+                return True
+            except BlockPoolError:
+                victim = max(self.active(),
+                             key=lambda r: (r.t_admit, r.rid))
+                self.preempt(victim, now)
+                if victim is req:
+                    return False
+
+    def preempt(self, req: Request, now: float) -> None:
+        """Recompute preemption: free blocks, requeue (arrival order keeps
+        its place near the front), keep generated tokens for the resume
+        feed."""
+        del now
+        self.pool.evict(req.rid)
+        self.slots[req.slot] = None
+        req.slot = None
+        req.state = RequestState.WAITING
+        req.n_prefilled = 0
+        req.n_ctx = 0
+        req.preemptions += 1
+        self._enqueue(req)
+
+    def finish(self, req: Request, now: float) -> None:
+        self.pool.free_seq(req.rid)
+        self.slots[req.slot] = None
+        req.slot = None
+        req.state = RequestState.DONE
+        req.t_done = now
+        self.done.append(req)

@@ -1,0 +1,126 @@
+"""Property tests for the serving engine's KV block pool (DESIGN §9).
+
+Invariants under random alloc/extend/free/evict traces: the non-trash
+blocks always partition into {free} ∪ {owned-by-exactly-one-sequence},
+double frees raise instead of corrupting, the trash block is never handed
+out, utilization accounting matches ownership, and a live block's Eq.-1
+scale exponent never changes (codes are never requantized while resident).
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import TRASH_BLOCK, BlockPool, BlockPoolError
+from tests._hyp_stub import given, settings, st
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_random_trace_invariants(seed):
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(num_blocks=int(rng.integers(2, 25)),
+                     block_size=int(rng.integers(1, 9)), scale_exp=4)
+    live: dict[int, int] = {}          # seq id -> tokens
+    next_sid = 0
+    for _ in range(60):
+        op = int(rng.integers(4))
+        if op == 0:                    # alloc a fresh sequence
+            sid, next_sid = next_sid, next_sid + 1
+            ntok = int(rng.integers(1, 40))
+            if pool.can_alloc(pool.blocks_for(ntok)):
+                blocks = pool.alloc_seq(sid, ntok)
+                assert TRASH_BLOCK not in blocks
+                live[sid] = ntok
+            else:
+                with pytest.raises(BlockPoolError):
+                    pool.alloc_seq(sid, ntok)
+        elif op == 1 and live:         # extend an existing sequence
+            sid = int(rng.choice(list(live)))
+            total = live[sid] + int(rng.integers(0, 20))
+            before = pool.n_blocks_of(sid)
+            try:
+                new = pool.extend(sid, total)
+                live[sid] = max(live[sid], total)
+                assert pool.n_blocks_of(sid) == before + len(new)
+            except BlockPoolError:     # atomic refusal: nothing changed
+                assert pool.n_blocks_of(sid) == before
+        elif op == 2 and live:         # free
+            sid = int(rng.choice(list(live)))
+            pool.free_seq(sid)
+            del live[sid]
+        elif op == 3 and live:         # evict (preemption path)
+            sid = int(rng.choice(list(live)))
+            pool.evict(sid)
+            del live[sid]
+        pool.check_invariants()
+        # utilization accounting matches ownership exactly
+        expect = sum(pool.blocks_for(n) for n in live.values())
+        assert pool.n_live == expect
+        assert pool.n_free == pool.num_blocks - 1 - expect
+    for sid in list(live):
+        pool.free_seq(sid)
+    pool.check_invariants()
+    assert pool.n_live == 0 and pool.utilization == 0.0
+    assert pool.stats.frees + 0 == pool.stats.allocs  # all blocks returned
+
+
+def test_double_free_raises():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    pool.alloc_seq(7, 10)
+    pool.free_seq(7)
+    with pytest.raises(BlockPoolError, match="double free"):
+        pool.free_seq(7)
+    pool.check_invariants()
+
+
+def test_double_alloc_raises():
+    pool = BlockPool(num_blocks=6, block_size=8)
+    pool.alloc_seq(1, 8)
+    with pytest.raises(BlockPoolError, match="already allocated"):
+        pool.alloc_seq(1, 8)
+
+
+def test_trash_block_reserved():
+    pool = BlockPool(num_blocks=5, block_size=4)
+    blocks = pool.alloc_seq(0, 16)             # everything allocatable
+    assert TRASH_BLOCK not in blocks and len(blocks) == 4
+    assert not pool.can_alloc(1)               # trash is NOT allocatable
+    # reading a table for an unknown sequence fails fast (decoding a
+    # freed sequence against trash garbage must never happen silently)
+    with pytest.raises(BlockPoolError, match="unknown sequence"):
+        pool.table_row(999, 4)
+
+
+def test_table_row_logical_order_and_padding():
+    pool = BlockPool(num_blocks=10, block_size=4)
+    blocks = pool.alloc_seq(3, 9)              # 3 blocks
+    blocks += pool.extend(3, 14)               # +1 block
+    row = pool.table_row(3, 6)
+    assert row[:4].tolist() == blocks
+    assert (row[4:] == TRASH_BLOCK).all()
+    with pytest.raises(BlockPoolError, match="table"):
+        pool.table_row(3, 2)                   # table too narrow
+
+
+def test_scale_exp_written_once_and_uniform():
+    pool = BlockPool(num_blocks=8, block_size=4, scale_exp=4)
+    pool.alloc_seq(0, 8, scale_exp=5)
+    pool.extend(0, 20)                         # inherits the seq's exponent
+    assert pool.seq_scale_exp(0) == 5
+    pool.alloc_seq(1, 4)                       # pool default
+    assert pool.seq_scale_exp(1) == 4
+    # a requantized (mutated) block is detected, never silently served
+    blk = pool.table_row(0, 5)[0]
+    pool.scale_exp[blk] = 2
+    with pytest.raises(BlockPoolError, match="requantized"):
+        pool.seq_scale_exp(0)
+
+
+def test_exhaustion_counts_failures():
+    pool = BlockPool(num_blocks=3, block_size=4)
+    pool.alloc_seq(0, 8)
+    with pytest.raises(BlockPoolError, match="exhausted"):
+        pool.alloc_seq(1, 4)
+    assert pool.stats.alloc_failures == 1
+    with pytest.raises(BlockPoolError, match="exhausted"):
+        pool.extend(0, 12)
+    assert pool.stats.alloc_failures == 2

@@ -1,0 +1,175 @@
+"""Scheduler property tests: fairness and no-starvation (DESIGN §9).
+
+The scheduler is pure host bookkeeping, so these tests drive the full
+WAITING→PREFILL→DECODE→DONE lifecycle with a FAKE model (every "decode"
+emits token 1) under random arrival traces and verify: every request
+completes in bounded steps (no starvation), admission is strictly FCFS in
+arrival order (head-of-line blocking — a late small request never
+overtakes an early large one), preempted requests resume and still emit
+exactly ``max_new_tokens``, and the pool ends empty with invariants held
+throughout.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import BlockPool
+from repro.serving.scheduler import (Request, RequestState, Scheduler,
+                                     chunk_bucket)
+from tests._hyp_stub import given, settings, st
+
+MAX_LEN = 32
+
+
+def _mk_requests(rng, n, max_len=MAX_LEN):
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.1))
+        p = int(rng.integers(1, max_len - 1))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, 100, size=p).astype(np.int32),
+            max_new_tokens=int(rng.integers(1, max_len - p + 1)),
+            arrival=t))
+    return reqs
+
+
+def _drive(sched: Scheduler, requests, max_iters=10_000):
+    """Fake-model engine loop mirroring ServingEngine.step's structure."""
+    pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    clock = 0.0
+    iters = 0
+    while pending or not sched.idle:
+        iters += 1
+        assert iters < max_iters, "scheduler made no progress (starvation)"
+        clock += 0.01
+        if sched.idle and pending and pending[0].arrival > clock:
+            clock = pending[0].arrival
+        while pending and pending[0].arrival <= clock:
+            sched.submit(pending.pop(0))
+        sched.admit(clock)
+        # chunked prefill under the budget
+        budget = sched.prefill_token_budget
+        for req in sched.prefill_jobs():
+            while budget > 0 and req.state is RequestState.PREFILL:
+                c = min(sched.chunk, len(req.feed) - req.n_prefilled, budget)
+                req.n_prefilled += c
+                req.n_ctx = req.n_prefilled
+                budget -= c
+                if req.n_prefilled == len(req.feed):
+                    tok = 1                      # fake first sampled token
+                    if req.t_first is None:
+                        req.t_first = clock
+                    done = req.finished_by(tok, sched.max_model_len)
+                    req.generated.append(tok)
+                    if done:
+                        sched.finish(req, clock)
+                    else:
+                        req.state = RequestState.DECODE
+        # one decode step over all live slots
+        for req in list(sched.decode_reqs()):
+            if req.slot is None or req.state is not RequestState.DECODE:
+                continue                         # preempted this iteration
+            if not sched.grow_for_decode(req, clock):
+                continue
+            req.n_ctx += 1
+            tok = 1
+            done = req.finished_by(tok, sched.max_model_len)
+            req.generated.append(tok)
+            if done:
+                sched.finish(req, clock)
+        sched.pool.check_invariants()
+    return iters
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100_000), slots=st.integers(1, 4),
+       blocks=st.integers(9, 24))
+def test_random_traces_complete_fcfs(seed, slots, blocks):
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(num_blocks=blocks, block_size=4)
+    sched = Scheduler(pool, n_slots=slots, chunk=8, max_model_len=MAX_LEN)
+    reqs = _mk_requests(rng, int(rng.integers(3, 12)))
+    _drive(sched, reqs)
+    # every request completed with exactly its token budget — preemption
+    # (if any) resumed without dropping or duplicating generated tokens
+    assert len(sched.done) == len(reqs)
+    for r in reqs:
+        assert r.state is RequestState.DONE
+        assert len(r.generated) == r.max_new_tokens
+        assert r.t_first is not None and r.t_done is not None
+    # FIRST admissions are strictly FCFS in (arrival, rid) order: a later
+    # request never overtakes an earlier one into the batch
+    first_admission = []
+    for rid in sched.admission_log:
+        if rid not in first_admission:
+            first_admission.append(rid)
+    by_arrival = [r.rid for r in sorted(reqs,
+                                        key=lambda r: (r.arrival, r.rid))]
+    assert first_admission == by_arrival
+    # pool fully drained
+    assert pool.n_live == 0
+    pool.check_invariants()
+
+
+def test_tight_pool_preempts_youngest_and_completes():
+    """Pool sized so concurrent decodes MUST collide: the youngest-admitted
+    request is evicted (oldest always progresses), resumes, and still
+    produces its full token count."""
+    pool = BlockPool(num_blocks=6, block_size=4)   # 5 usable = 20 rows
+    sched = Scheduler(pool, n_slots=2, chunk=8, max_model_len=20)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 100, size=7).astype(
+        np.int32), max_new_tokens=12, arrival=0.0) for i in range(3)]
+    _drive(sched, reqs)
+    assert len(sched.done) == 3
+    assert pool.stats.evictions > 0
+    assert all(len(r.generated) == 12 for r in reqs)
+    # the earliest-admitted request is never the chosen victim while a
+    # younger runner exists
+    oldest = min(reqs, key=lambda r: (r.t_admit, r.rid))
+    youngest_preempted = max(r.preemptions for r in reqs)
+    assert youngest_preempted > 0 and oldest.preemptions == 0
+    assert pool.n_live == 0
+
+
+def test_big_early_request_not_starved_by_small_late_ones():
+    """Head-of-line blocking: while the big request 0 waits for blocks,
+    later small requests must NOT be admitted around it."""
+    pool = BlockPool(num_blocks=8, block_size=4)   # 28 rows
+    sched = Scheduler(pool, n_slots=2, chunk=8, max_model_len=28)
+    rng = np.random.default_rng(1)
+    big = Request(rid=0, prompt=rng.integers(0, 100, size=20).astype(
+        np.int32), max_new_tokens=8, arrival=0.0)
+    small = [Request(rid=i, prompt=rng.integers(0, 100, size=2).astype(
+        np.int32), max_new_tokens=2, arrival=0.001 * i)
+        for i in range(1, 6)]
+    _drive(sched, [big] + small)
+    assert len(sched.done) == 6
+    assert sched.admission_log[0] == 0             # big admitted first
+    assert big.t_done is not None
+
+
+def test_submit_validation():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    sched = Scheduler(pool, n_slots=1, chunk=8, max_model_len=16)
+    with pytest.raises(ValueError, match="max_model_len"):
+        sched.submit(Request(rid=0, prompt=np.arange(10, dtype=np.int32),
+                             max_new_tokens=10))
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(rid=1, prompt=np.zeros((0,), np.int32),
+                             max_new_tokens=2))
+    # a scheduler whose max_model_len exceeds pool capacity could deadlock
+    with pytest.raises(ValueError, match="pool capacity"):
+        Scheduler(BlockPool(num_blocks=3, block_size=4), n_slots=1,
+                  chunk=8, max_model_len=16)
+
+
+def test_chunk_bucket_bounded_pow2():
+    for chunk in (8, 16, 64):
+        seen = set()
+        for n in range(1, chunk + 1):
+            b = chunk_bucket(n, chunk)
+            assert b >= n and b <= chunk
+            assert b & (b - 1) == 0                # power of two
+            seen.add(b)
+        assert len(seen) <= chunk.bit_length()     # bounded compile set
+        assert chunk_bucket(5 * chunk, chunk) == chunk

@@ -1,0 +1,227 @@
+"""Serving-engine end-to-end coverage (DESIGN §9) — the CI `serving`
+smoke: a small Poisson trace on CPU must COMPLETE every request and the
+continuous-batching paged tokens must MATCH the static-batch dense-cache
+oracle exactly at fp32 (greedy).  Plus: preemption round-trip parity,
+sampling hooks, report integrity, and the serve() warm-up split.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.qmodel import QuantContext, QuantMode
+from repro.models import model as M
+from repro.serving import Request, ServingEngine
+
+CTX = QuantContext(mode=QuantMode.FP)
+
+
+def _cfg(**kw):
+    cfg = get_smoke_config("qwen3_1_7b").scaled(dtype="float32")
+    return dataclasses.replace(cfg, kv_cache_bits=8, **kw)
+
+
+def _dense_oracle(cfg, params, prompt: np.ndarray, gen: int) -> list:
+    """Static-batch oracle: one request, dense cache, greedy decode."""
+    p_len = len(prompt)
+    logits, cache = M.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                              cfg, CTX, max_seq=p_len + gen)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    for i in range(gen - 1):
+        l, cache = M.decode_step(params, tok, cache,
+                                 jnp.asarray(p_len + i, jnp.int32), cfg, CTX)
+        tok = jnp.argmax(l, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def _check_vs_oracle(cfg, params, reqs, outputs):
+    for r in reqs:
+        oracle = _dense_oracle(cfg, params, r.prompt, r.max_new_tokens)
+        got = outputs[r.rid].tolist()
+        # stop-token-free requests emit exactly max_new_tokens
+        assert got == oracle[:len(got)] and len(got) == r.max_new_tokens, \
+            f"req {r.rid}: engine {got} vs oracle {oracle}"
+
+
+def _workload(rng, n, vocab, *, p_lo=5, p_hi=20, g_lo=3, g_hi=9,
+              arrivals=False):
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        t += float(rng.exponential(0.02)) if arrivals else 0.0
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, size=int(
+                rng.integers(p_lo, p_hi))).astype(np.int32),
+            max_new_tokens=int(rng.integers(g_lo, g_hi)), arrival=t))
+    return reqs
+
+
+def test_poisson_smoke_completes_and_matches_oracle():
+    """The CI `serving` smoke: small Poisson trace, every request
+    completes, tokens are exactly the static-batch fp32 oracle's."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _workload(np.random.default_rng(0), 6, cfg.vocab_size,
+                     arrivals=True)
+    eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                        max_model_len=32, chunk=8)
+    rep = eng.run(reqs)
+    assert rep["completed"] == len(reqs)
+    eng.pool.check_invariants()
+    assert eng.pool.n_live == 0                    # all blocks returned
+    _check_vs_oracle(cfg, params, reqs, eng.outputs())
+    # report integrity
+    assert rep["gen_tokens"] == sum(r.max_new_tokens for r in reqs)
+    assert rep["tokens_per_s"] > 0
+    assert rep["ttft_s"]["p50"] is not None
+    assert rep["tpot_s"]["p50"] is not None
+    # decode steps batched slots: fewer steps than total generated tokens
+    assert rep["decode_steps"] < rep["gen_tokens"]
+    # compile/steady split exists for the decode shape
+    dec = rep["step_shapes"]["2x1"]
+    assert dec["first_s"] > dec["steady_s"] > 0
+
+
+def test_preemption_roundtrip_matches_oracle():
+    """Undersized pool: decode growth must evict and resume (recompute),
+    and the resumed requests still emit the oracle's exact tokens."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, size=14).astype(np.int32), max_new_tokens=12)
+        for i in range(4)]
+    # 5 usable blocks x 8 = 40 rows < 2 slots x 26 rows each
+    eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                        max_model_len=32, num_blocks=6, chunk=8)
+    rep = eng.run(reqs)
+    assert rep["completed"] == 4
+    assert rep["preemptions"] > 0 and rep["pool"]["evictions"] > 0
+    eng.pool.check_invariants()
+    assert eng.pool.n_live == 0
+    _check_vs_oracle(cfg, params, reqs, eng.outputs())
+
+
+def test_stop_token_and_max_len():
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    # find what greedy emits first, then use it as the stop token
+    first = _dense_oracle(cfg, params, prompt, 1)[0]
+    reqs = [
+        Request(rid=0, prompt=prompt, max_new_tokens=10, stop_token=first),
+        # prompt 28 + max_new 4 == max_model_len 32: must clamp, not hang
+        Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, size=28)
+                .astype(np.int32), max_new_tokens=4),
+    ]
+    eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                        max_model_len=32, chunk=8)
+    rep = eng.run(reqs)
+    assert rep["completed"] == 2
+    outs = eng.outputs()
+    assert outs[0].tolist() == [first]             # stopped immediately
+    assert len(outs[1]) == 4
+
+
+def test_sampling_hooks_deterministic():
+    """temperature/top-k sampling: tokens stay in-vocab and the whole run
+    is reproducible from the engine seed."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run():
+        rng = np.random.default_rng(7)
+        reqs = _workload(rng, 4, cfg.vocab_size)
+        for r in reqs:
+            r.temperature = 0.8
+        eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                            max_model_len=32, chunk=8, top_k=5, seed=42)
+        eng.run(reqs)
+        return eng.outputs()
+
+    a, b = run(), run()
+    for rid in a:
+        assert a[rid].tolist() == b[rid].tolist()
+        assert (a[rid] >= 0).all() and (a[rid] < cfg.vocab_size).all()
+
+
+def test_per_request_top_k_honored():
+    """Request.top_k is applied per slot: top_k=1 with temperature > 0
+    degenerates to greedy (the only survivor of the k-filter is the
+    argmax), so its tokens must equal the greedy oracle's while riding in
+    the same batch as full-vocab sampled requests."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    reqs = _workload(rng, 3, cfg.vocab_size, g_lo=4, g_hi=7)
+    reqs[0].temperature = 1.0
+    reqs[0].top_k = 1                              # == greedy
+    reqs[1].temperature = 1.0                      # full-vocab sampling
+    eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                        max_model_len=32, chunk=8, seed=3)
+    eng.run(reqs)
+    outs = eng.outputs()
+    oracle = _dense_oracle(cfg, params, reqs[0].prompt,
+                           reqs[0].max_new_tokens)
+    assert outs[0].tolist() == oracle
+    assert outs[2].tolist() == _dense_oracle(cfg, params, reqs[2].prompt,
+                                             reqs[2].max_new_tokens)
+
+
+def test_mixed_greedy_and_sampled_slots():
+    """temperature=0 rows in a sampled batch stay EXACTLY greedy: the
+    fixed-shape sampler must not perturb greedy requests."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(9)
+    reqs = _workload(rng, 4, cfg.vocab_size, g_lo=4, g_hi=7)
+    reqs[1].temperature = 1.0
+    reqs[3].temperature = 1.0
+    eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                        max_model_len=32, chunk=8, seed=1)
+    eng.run(reqs)
+    outs = eng.outputs()
+    for r in (reqs[0], reqs[2]):                   # the greedy ones
+        oracle = _dense_oracle(cfg, params, r.prompt, r.max_new_tokens)
+        assert outs[r.rid].tolist() == oracle
+
+
+def test_hwcost_requant_accounting():
+    """Write-once accounting: performed ops == KV elements written once
+    per (real) token; avoided ops grow with live context per decode step —
+    and the Table 5 energies order accordingly."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    req = Request(rid=0, prompt=np.arange(10, dtype=np.int32) % cfg.vocab_size,
+                  max_new_tokens=6)
+    eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                        max_model_len=32, chunk=8)
+    rep = eng.run([req])
+    per_tok = (cfg.n_layers * cfg.n_kv_heads * cfg.resolved_head_dim * 2)
+    hw = rep["hwcost"]
+    # 10 prompt + 5 decode-fed tokens, each quantized exactly once
+    assert hw["requant_ops_performed"] == 15 * per_tok
+    # dequant-per-step counterfactual: sum of live context over 5 steps
+    assert hw["requant_ops_avoided"] == sum(
+        11 + i for i in range(5)) * per_tok
+    assert (hw["energy_uj_bit_shift"]
+            < hw["energy_uj_if_requant_per_step"]
+            < hw["energy_uj_if_scaling_factor"])
+
+
+def test_serve_warmup_reports_compile_separately():
+    """Satellite: serve() AOT-compiles, so prefill_s / decode_s_per_tok
+    are steady-state and compile time is its own field."""
+    from repro.launch.serve import serve
+    out = serve("qwen3_1_7b", batch=2, prompt_len=8, gen=4, mode="fp",
+                calibrate=False)
+    assert out["compile_prefill_s"] > 0 and out["compile_decode_s"] > 0
+    assert out["prefill_s"] > 0 and out["decode_s_per_tok"] > 0
+    # steady per-token decode must not contain a multi-second jit compile
+    assert out["decode_s_per_tok"] < out["compile_decode_s"]
