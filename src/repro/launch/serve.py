@@ -131,22 +131,32 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
 
 def poisson_workload(vocab_size: int, *, n_requests: int, rate: float,
                      prompt_lens=(8, 16, 24, 32), gen_lens=(4, 8, 16, 24),
-                     temperature: float = 0.0, seed: int = 0) -> list:
+                     temperature: float = 0.0, seed: int = 0,
+                     shared_prefix: int = 0) -> list:
     """Synthetic open-loop workload: Poisson arrivals (exponential
     inter-arrival at ``rate`` req/s on the engine clock) with mixed
     prompt/generation lengths — the shape continuous batching exists for
-    (a static batch pads every request to the longest member)."""
+    (a static batch pads every request to the longest member).
+
+    ``shared_prefix`` prepends the SAME ``shared_prefix`` random tokens (a
+    synthetic system prompt) to every request's prompt — the shape the
+    content-addressed prefix cache exists for (DESIGN §10): real fleets
+    are dominated by shared prefixes, and the cache quantizes them once.
+    ``prompt_lens`` then sizes the per-request unique tail."""
     from repro.serving import Request
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab_size, size=shared_prefix
+                          ).astype(np.int32)
     t = 0.0
     reqs = []
     for i in range(n_requests):
         t += float(rng.exponential(1.0 / rate))
+        tail = rng.integers(0, vocab_size,
+                            size=int(rng.choice(prompt_lens))
+                            ).astype(np.int32)
         reqs.append(Request(
             rid=i,
-            prompt=rng.integers(0, vocab_size,
-                                size=int(rng.choice(prompt_lens))
-                                ).astype(np.int32),
+            prompt=np.concatenate([prefix, tail]) if shared_prefix else tail,
             max_new_tokens=int(rng.choice(gen_lens)),
             temperature=temperature,
             arrival=t))
@@ -162,9 +172,14 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                  temperature: float = 0.0, top_k: int = 0,
                  mesh_shape: tuple[int, int] | None = None,
                  prompt_lens=(8, 16, 24, 32), gen_lens=(4, 8, 16, 24),
-                 requests=None, cfg_overrides: dict | None = None) -> dict:
+                 requests=None, cfg_overrides: dict | None = None,
+                 shared_prefix: int = 0, prefix_cache: bool = True) -> dict:
     """Continuous-batching serving on the paged int8-KV block pool
-    (DESIGN §9).  Returns {"report", "outputs", "requests", "engine"}."""
+    (DESIGN §9/§10).  Returns {"report", "outputs", "requests", "engine"}.
+
+    ``shared_prefix`` prepends an N-token system prompt to every request
+    (see :func:`poisson_workload`); ``prefix_cache=False`` disables the
+    content-addressed cache for A/B comparison at equal pool size."""
     from repro.serving import ServingEngine
     overrides = dict(cfg_overrides or {})
     if kv_bits is not None:
@@ -188,7 +203,8 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
         requests = poisson_workload(
             cfg.vocab_size, n_requests=n_requests, rate=rate,
             prompt_lens=prompt_lens, gen_lens=gen_lens,
-            temperature=temperature, seed=seed)
+            temperature=temperature, seed=seed,
+            shared_prefix=shared_prefix)
     if max_model_len is None:
         need = max(len(r.prompt) + r.max_new_tokens for r in requests)
         max_model_len = -(-need // block_size) * block_size
@@ -196,7 +212,7 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                            block_size=block_size, chunk=chunk,
                            max_model_len=max_model_len,
                            num_blocks=num_blocks, top_k=top_k, mesh=mesh,
-                           seed=seed)
+                           seed=seed, prefix_cache=prefix_cache)
     report = engine.run(requests)
     return {"report": report, "outputs": engine.outputs(),
             "requests": requests, "engine": engine}
@@ -237,6 +253,14 @@ def main(argv=None):
                     help="[--engine] sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="[--engine] top-k sampling cutoff (0 = full)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="[--engine] prepend the SAME N-token system "
+                         "prompt to every request — the workload the "
+                         "content-addressed prefix cache serves with one "
+                         "quantization pass (DESIGN §10)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="[--engine] disable the prefix cache (baseline "
+                         "for A/B at equal pool size)")
     args = ap.parse_args(argv)
     mesh_shape = None
     if args.mesh is not None:
@@ -252,8 +276,17 @@ def main(argv=None):
                            smoke=not args.full,
                            attn_kernel=args.attn_kernel,
                            temperature=args.temperature, top_k=args.top_k,
-                           mesh_shape=mesh_shape)
+                           mesh_shape=mesh_shape,
+                           shared_prefix=args.shared_prefix,
+                           prefix_cache=not args.no_prefix_cache)
         print(json.dumps(out["report"], indent=2))
+        pc = out["report"].get("prefix_cache")
+        if pc is not None:
+            print(f"prefix cache: hit-rate {pc['hit_rate']:.1%} "
+                  f"({pc['hits']}/{pc['hits'] + pc['misses']} block "
+                  f"lookups), {pc['cached_prefill_tokens']} prefill "
+                  f"tokens served from cache, {pc['cow_copies']} COW "
+                  f"copies, {pc['cache_evictions']} LRU evictions")
         return
     out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 gen=args.gen, mode=args.mode,

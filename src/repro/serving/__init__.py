@@ -14,10 +14,16 @@ Three layers (DESIGN §9):
   prefill/decode with fixed slot shapes, greedy + temperature/top-k
   sampling, per-request stop/max-tokens, throughput + latency + hwcost
   report.
+* :mod:`repro.serving.prefix_cache` — content-addressed prefix cache
+  (DESIGN §10): full blocks keyed by a radix-style chained hash of
+  (parent key, block token ids, scale exponent), shared read-only across
+  sequences with per-block refcounts, copy-on-write on divergence, and
+  LRU eviction of idle cached blocks only under allocation pressure.
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_pool import BlockPool, BlockPoolError
+from repro.serving.prefix_cache import CacheStats, PrefixCache
 from repro.serving.scheduler import Request, RequestState, Scheduler
 
-__all__ = ["ServingEngine", "BlockPool", "BlockPoolError", "Request",
-           "RequestState", "Scheduler"]
+__all__ = ["ServingEngine", "BlockPool", "BlockPoolError", "CacheStats",
+           "PrefixCache", "Request", "RequestState", "Scheduler"]

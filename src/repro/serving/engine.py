@@ -93,7 +93,8 @@ class ServingEngine:
                  max_model_len: int = 128,
                  num_blocks: Optional[int] = None, chunk: int = 16,
                  prefill_token_budget: Optional[int] = None,
-                 top_k: int = 0, mesh=None, seed: int = 0):
+                 top_k: int = 0, mesh=None, seed: int = 0,
+                 prefix_cache: bool = True):
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
@@ -105,7 +106,8 @@ class ServingEngine:
             # Callers undersize this deliberately to exercise preemption.
             num_blocks = 1 + n_slots * nbmax
         scale_exp = cfg.kv_cache_frac_bits if cfg.kv_cache_bits == 8 else 0
-        self.pool = BlockPool(num_blocks, block_size, scale_exp=scale_exp)
+        self.pool = BlockPool(num_blocks, block_size, scale_exp=scale_exp,
+                              prefix_cache=prefix_cache)
         self.sched = Scheduler(self.pool, n_slots=n_slots, chunk=chunk,
                                max_model_len=max_model_len,
                                prefill_token_budget=prefill_token_budget)
@@ -131,6 +133,16 @@ class ServingEngine:
         # every step, which is exactly the write-amplification the paged
         # design exists to avoid
         self._step_fn = jax.jit(sampled_step, donate_argnums=(2,))
+
+        # COW device copy (DESIGN §10): duplicate one pool block's rows
+        # (all layers, K and V) into a fresh private block before a write
+        # would land in a shared/published block.  Donated for the same
+        # reason as the step: copy block_size rows, not the whole arena.
+        def cow_copy(cache, src, dst):
+            return jax.tree.map(
+                lambda a: a.at[:, dst].set(a[:, src]), cache)
+
+        self._cow_fn = jax.jit(cow_copy, donate_argnums=(0,))
         self._step_counter = 0
         # engine-level default top-k, applied to requests that don't set
         # their own (Request.top_k > 0 wins per slot)
@@ -140,6 +152,10 @@ class ServingEngine:
                                  * cfg.resolved_head_dim * 2)
         self.requant_ops_performed = 0
         self.requant_ops_avoided = 0
+        # quant ops the PREFIX CACHE deleted outright: cached-prefix tokens
+        # are never quantized at all for the hitting request (Table 5)
+        self.requant_ops_avoided_cache = 0
+        self.cache_hit_prefill_tokens = 0
         self.decode_steps = 0
         self.prefill_chunks = 0
         self._step_times: dict[tuple, list] = {}    # (B, C) -> wall seconds
@@ -157,22 +173,32 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         self.sched.submit(req)
 
-    def reset_metrics(self) -> None:
+    def reset_metrics(self, *, flush_cache: bool = True) -> None:
         """Clear accounting between runs (e.g. after a warm-up workload
         that populated the jit caches) — engine must be drained first.
         The sampling step counter resets too, so a reused engine replays
         the same rng stream (seed-reproducible across passes); note that
         post-reset ``first_s`` per shape reflects a WARM first call, not
-        compilation."""
+        compilation.  By default the PREFIX CACHE is flushed too, so every
+        pass starts cold — inter-pass hits would make pass N incomparable
+        to pass 1; pass ``flush_cache=False`` to measure the warm-cache
+        steady state (e.g. after priming a shared system prompt)."""
         assert self.sched.idle and self.pool.n_live == 0, \
             "reset_metrics on a non-drained engine"
         from repro.serving.kv_pool import PoolStats
+        from repro.serving.prefix_cache import CacheStats
         self._step_counter = 0
         self.sched.done.clear()
         self.sched.admission_log.clear()
+        if flush_cache:
+            self.pool.flush_cache()
         self.pool.stats = PoolStats()
+        if self.pool.cache is not None:
+            self.pool.cache.stats = CacheStats()
         self.requant_ops_performed = 0
         self.requant_ops_avoided = 0
+        self.requant_ops_avoided_cache = 0
+        self.cache_hit_prefill_tokens = 0
         self.decode_steps = 0
         self.prefill_chunks = 0
         self._step_times.clear()
@@ -197,7 +223,12 @@ class ServingEngine:
 
     def step(self) -> None:
         """One engine iteration: admit → chunked prefill → decode."""
-        self.sched.admit(self._now())
+        for req in self.sched.admit(self._now()):
+            # cached-prefix hit: those tokens' KV is already resident, so
+            # their quantization ops simply never happen for this request
+            self.cache_hit_prefill_tokens += req.n_prefilled
+            self.requant_ops_avoided_cache += \
+                req.n_prefilled * self._elems_per_token
         self._run_prefills()
         self._run_decode()
 
@@ -214,6 +245,12 @@ class ServingEngine:
     def _prefill_chunk(self, req: Request, budget: int) -> int:
         start = req.n_prefilled
         c_real = min(self.sched.chunk, len(req.feed) - start, budget)
+        # copy-on-write (DESIGN §10): any block this chunk writes into
+        # must be private.  Only the fully-cached-feed re-feed ever lands
+        # in a shared block (partial hits start at a block boundary), but
+        # the check is general: preemption retry mirrors decode growth.
+        if not self._cow_for_range(req, start, start + c_real):
+            return 0                        # req itself was preempted
         c_pad = chunk_bucket(c_real, self.sched.chunk)
         cap = self.max_model_len - start
         if c_pad > cap:
@@ -235,6 +272,10 @@ class ServingEngine:
                                 c_real - 1)
         req.n_prefilled += c_real
         req.n_ctx = req.n_prefilled
+        # the chunk's KV rows are device-resident now: full blocks this
+        # completes become content-addressable (publish is a no-op when
+        # the prefix cache is off)
+        self.pool.commit(req.rid, start, req.feed[start:start + c_real])
         self.prefill_chunks += 1
         self.requant_ops_performed += c_real * self._elems_per_token
         if req.n_prefilled == len(req.feed):
@@ -280,6 +321,10 @@ class ServingEngine:
         self.requant_ops_performed += len(reqs) * self._elems_per_token
         now = self._now()
         for req in reqs:
+            # the fed token's KV row is resident: blocks that fill during
+            # decode publish too, so a preempted resume (or a later request
+            # sharing prompt+generation) can re-attach them
+            self.pool.commit(req.rid, req.n_ctx, [req.generated[-1]])
             req.n_ctx += 1
             # the dataflow the int8-resident pool deletes: dequantizing the
             # slot's whole live cache before attending, EVERY step
@@ -291,6 +336,27 @@ class ServingEngine:
                 self.sched.finish(req, now)
 
     # -- shared step plumbing --------------------------------------------
+
+    def _cow_for_range(self, req: Request, start: int, end: int) -> bool:
+        """Copy-on-write every SHARED block overlapping feed positions
+        [start, end) so the chunk's KV scatter only touches private
+        blocks.  The pool moves the map; the device rows are duplicated
+        here (one jitted block copy, donated — block_size rows per layer,
+        never the whole arena).  Returns False iff ``req`` itself was
+        preempted while finding a block for the copy."""
+        bs = self.pool.block_size
+        for idx in range(start // bs, -(-end // bs)):
+            if idx >= self.pool.n_blocks_of(req.rid):
+                break                       # rows beyond the table: extend
+            if self.pool.block_writable(req.rid, idx):
+                continue
+            pair = self.sched.cow_for_prefill(req, idx, self._now())
+            if pair is None:
+                return False
+            src, dst = pair
+            self.cache = self._cow_fn(self.cache, jnp.asarray(src),
+                                      jnp.asarray(dst))
+        return True
 
     def _req_top_k(self, req: Request) -> int:
         return req.top_k if req.top_k > 0 else self.default_top_k
@@ -332,16 +398,40 @@ class ServingEngine:
         shapes = summarize_step_times(self._step_times)
         perf = self.requant_ops_performed
         avoid = self.requant_ops_avoided
+        cache_avoid = self.requant_ops_avoided_cache
         hw = {
             "requant_ops_performed": perf,
             "requant_ops_avoided": avoid,
+            # ops a cache-less engine would have PERFORMED for the tokens
+            # the prefix cache served from resident blocks (Table 5's
+            # strongest case: quantized zero times instead of once)
+            "requant_ops_avoided_prefix_cache": cache_avoid,
             "energy_uj_bit_shift": hwcost.estimate(
                 "bit_shifting", perf).energy_uj,
             "energy_uj_if_requant_per_step": hwcost.estimate(
                 "bit_shifting", perf + avoid).energy_uj,
+            "energy_uj_if_no_prefix_cache": hwcost.estimate(
+                "bit_shifting", perf + cache_avoid).energy_uj,
             "energy_uj_if_scaling_factor": hwcost.estimate(
                 "scaling_factor", perf + avoid).energy_uj,
         }
+        cache = None
+        if self.pool.cache is not None:
+            cs = self.pool.cache.stats
+            cache = {
+                "hits": cs.hits,
+                "misses": cs.misses,
+                "hit_rate": round(cs.hit_rate, 4),
+                "hit_tokens": cs.hit_tokens,
+                "lookup_tokens": cs.lookup_tokens,
+                "token_hit_rate": round(cs.token_hit_rate, 4),
+                "cached_prefill_tokens": self.cache_hit_prefill_tokens,
+                "cow_copies": cs.cow_copies,
+                "published_blocks": cs.published,
+                "cache_evictions": cs.evictions,
+                "resident_cached_blocks": self.pool.n_cached,
+                "quant_ops_avoided": cache_avoid,
+            }
         return {
             "n_requests": len(done) + len(self.sched.waiting)
             + len(self.sched.active()),
@@ -364,7 +454,15 @@ class ServingEngine:
                 "peak_utilization": round(
                     self.pool.stats.peak_live
                     / max(self.pool.num_blocks - 1, 1), 3),
+                "utilization": round(self.pool.utilization, 3),
+                "residency": round(self.pool.residency, 3),
+                "allocs": self.pool.stats.allocs,
+                "frees": self.pool.stats.frees,
                 "evictions": self.pool.stats.evictions,
+                "seq_evictions": self.pool.stats.seq_evictions,
+                "cache_evictions": self.pool.stats.cache_evictions,
+                "alloc_failures": self.pool.stats.alloc_failures,
             },
+            "prefix_cache": cache,
             "hwcost": hw,
         }

@@ -1,31 +1,50 @@
-"""Host-side allocator for the paged KV block pool (DESIGN §9).
+"""Host-side allocator for the paged KV block pool (DESIGN §9, §10).
 
 The device arrays live in ``models.model.init_paged_cache`` (one
 (L, NB, BS, KVH, D) arena per K and V); this module owns the *map*: which
-pool block belongs to which sequence, in which logical order, at which
-power-of-two scale exponent.  Everything here is plain Python/numpy — no
-jax — so the scheduler property tests run without a model.
+pool blocks back which sequence, in which logical order, at which
+power-of-two scale exponent, and — with the content-addressed prefix
+cache enabled — which blocks are SHARED between sequences.  Everything
+here is plain Python/numpy — no jax — so the scheduler property tests run
+without a model.
+
+Ownership model (DESIGN §10).  PR 3's one-owner rule is gone; every
+non-trash block is in exactly one of three states:
+
+* **free**    — refcount 0, no content key, on the LIFO free stack;
+* **cached**  — refcount 0 but published under a content key: it stays
+  resident (its int8 codes are reusable by any future sequence with the
+  same prefix) on an idle-LRU and is reclaimed only under allocation
+  pressure, oldest first;
+* **live**    — refcount >= 1: referenced by that many sequences.  A
+  block with refcount > 1 is necessarily published (sharing only ever
+  happens through cache hits), and published blocks are IMMUTABLE — their
+  key is their content — so writes must copy-on-write first
+  (:meth:`BlockPool.cow`).
 
 Invariants (checked by :meth:`BlockPool.check_invariants`, enforced by the
 tier-1 property tests):
 
-* block 0 is the TRASH block: never allocated, never freed — inactive
-  engine slots point their whole block table at it so their masked writes
-  land somewhere harmless.
-* every non-trash block is either on the free stack or owned by exactly
-  one sequence (no orphans, no double ownership).
-* freeing an unknown sequence (double free) raises — it never corrupts.
-* a live block's scale exponent never changes: codes are written once on
-  the Eq.-1 grid chosen at alloc time and never requantized while resident
-  (the paper's fewer-requant-ops thesis applied to serving).
+* block 0 is the TRASH block: never allocated, never freed, never cached.
+* free ∪ cached ∪ live partition the non-trash blocks (no orphans).
+* ``refcount[b]`` equals the number of sequences whose table contains b.
+* refcount > 1 implies published; writable means refcount == 1 AND
+  unpublished.
+* releasing an unknown sequence (double free) raises — it never corrupts.
+* a block's scale exponent never changes while live or cached: codes are
+  written once on the Eq.-1 grid chosen at alloc time and never
+  requantized while resident (the paper's fewer-requant-ops thesis).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import numpy as np
 
-__all__ = ["BlockPool", "BlockPoolError", "PoolStats"]
+from repro.serving.prefix_cache import PrefixCache
+
+__all__ = ["BlockPool", "BlockPoolError", "PoolStats", "AllocPlan"]
 
 TRASH_BLOCK = 0
 
@@ -36,18 +55,38 @@ class BlockPoolError(RuntimeError):
 
 @dataclasses.dataclass
 class PoolStats:
-    allocs: int = 0            # blocks handed out
-    frees: int = 0             # blocks returned
-    evictions: int = 0         # sequences evicted (preemption)
-    peak_live: int = 0         # max simultaneously-owned blocks
+    allocs: int = 0            # blocks handed out fresh (not cache hits)
+    frees: int = 0             # block references released
+    evictions: int = 0         # BLOCKS released by preemption
+    seq_evictions: int = 0     # sequences preempted
+    cache_evictions: int = 0   # idle cached blocks reclaimed (LRU)
+    peak_live: int = 0         # max simultaneously-live blocks
     alloc_failures: int = 0    # alloc/extend requests refused
 
 
+@dataclasses.dataclass
+class AllocPlan:
+    """Admission-time allocation plan: what a sequence's feed would hit in
+    the prefix cache and how many fresh blocks it still needs.  Planning
+    is a pure query (no pinning, no stats) so the scheduler can re-plan a
+    blocked head-of-line request every step without side effects."""
+    n_tokens: int
+    scale_exp: int
+    hit_blocks: list
+    hit_keys: list
+    hit_tokens: int
+    n_full_lookups: int
+    need_new: int
+    feasible: bool
+
+
 class BlockPool:
-    """Fixed-capacity pool of KV blocks with per-sequence block tables."""
+    """Fixed-capacity pool of KV blocks with per-sequence block tables,
+    per-block reference counts, and an optional content-addressed prefix
+    cache (``prefix_cache=True``) for cross-sequence block sharing."""
 
     def __init__(self, num_blocks: int, block_size: int, *,
-                 scale_exp: int = 0):
+                 scale_exp: int = 0, prefix_cache: bool = False):
         if num_blocks < 2:
             raise ValueError("pool needs >= 2 blocks (block 0 is trash)")
         if block_size < 1:
@@ -59,9 +98,14 @@ class BlockPool:
         # pool rows are hot).  Block 0 (trash) is never on it.
         self._free: list[int] = list(range(num_blocks - 1, 0, -1))
         self._seqs: dict[int, list[int]] = {}       # seq id -> blocks, order
-        self._owner: dict[int, int] = {}            # block -> seq id
+        # per-block owner count; sharing happens only via cache hits
+        self.refcount = np.zeros((num_blocks,), np.int32)
+        # refcount-0 published blocks, insertion order == LRU order
+        self._idle: "OrderedDict[int, None]" = OrderedDict()
+        self.cache: PrefixCache | None = \
+            PrefixCache(block_size) if prefix_cache else None
         # per-block po2 scale exponent (Eq.-1 fractional bit) — written at
-        # alloc, immutable while live.  One int8 per block of metadata.
+        # alloc, immutable while resident.  One int per block of metadata.
         self.scale_exp = np.full((num_blocks,), scale_exp, np.int32)
         self.stats = PoolStats()
 
@@ -73,42 +117,114 @@ class BlockPool:
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: truly free + idle cached (reclaimable)."""
+        return len(self._free) + len(self._idle)
+
+    @property
+    def n_cached(self) -> int:
+        """Idle cached blocks (resident, refcount 0, reclaimable LRU)."""
+        return len(self._idle)
 
     @property
     def n_live(self) -> int:
-        return (self.num_blocks - 1) - len(self._free)
+        """Blocks referenced by at least one sequence."""
+        return (self.num_blocks - 1) - len(self._free) - len(self._idle)
 
     @property
     def utilization(self) -> float:
         return self.n_live / max(self.num_blocks - 1, 1)
 
+    @property
+    def residency(self) -> float:
+        """Fraction of the pool holding useful codes (live + cached)."""
+        return (self.n_live + self.n_cached) / max(self.num_blocks - 1, 1)
+
     def can_alloc(self, n_blocks: int) -> bool:
-        return n_blocks <= len(self._free)
+        return n_blocks <= self.n_free
 
     def live_seqs(self) -> list[int]:
         return list(self._seqs)
 
+    def seq_ids(self):
+        return self._seqs.keys()
+
+    def seq_blocks(self, seq_id: int) -> list[int]:
+        """The sequence's blocks in logical order (read-only view)."""
+        if seq_id not in self._seqs:
+            raise BlockPoolError(f"unknown sequence {seq_id}")
+        return self._seqs[seq_id]
+
     def n_blocks_of(self, seq_id: int) -> int:
         return len(self._seqs.get(seq_id, ()))
 
+    # -- planning ---------------------------------------------------------
+
+    def plan_seq(self, n_tokens: int, *, token_ids=None,
+                 scale_exp: int | None = None) -> AllocPlan:
+        """Plan an allocation: cache-hit chain + fresh blocks needed.
+
+        A fully-cached feed reserves ONE extra block: the engine must
+        re-feed the last token to get logits to sample from, and that
+        write lands in the last (shared, immutable) hit block — which
+        copy-on-writes into a fresh private block.
+        """
+        exp = self.default_scale_exp if scale_exp is None else scale_exp
+        hits: list[int] = []
+        keys: list[int] = []
+        n_full = 0
+        if self.cache is not None and token_ids is not None:
+            n_full = len(token_ids) // self.block_size
+            hits, keys = self.cache.lookup(token_ids, exp)
+        hit_tokens = len(hits) * self.block_size
+        need = self.blocks_for(n_tokens) - len(hits)
+        if hits and hit_tokens >= n_tokens:
+            need += 1                       # COW of the last hit block
+        # hit blocks get pinned before any fresh block is taken, so idle
+        # hits are NOT available for LRU reclaim by this allocation
+        avail = len(self._free) + len(self._idle) \
+            - sum(1 for b in hits if self.refcount[b] == 0)
+        return AllocPlan(n_tokens=n_tokens, scale_exp=exp, hit_blocks=hits,
+                         hit_keys=keys, hit_tokens=hit_tokens,
+                         n_full_lookups=n_full, need_new=need,
+                         feasible=need <= avail)
+
     # -- alloc / extend / free -------------------------------------------
 
-    def alloc_seq(self, seq_id: int, n_tokens: int, *,
-                  scale_exp: int | None = None) -> list[int]:
-        """Allocate the blocks for a new sequence of ``n_tokens`` rows."""
+    def alloc_seq(self, seq_id: int, n_tokens: int, *, token_ids=None,
+                  scale_exp: int | None = None,
+                  plan: AllocPlan | None = None) -> list[int]:
+        """Allocate the blocks for a new sequence of ``n_tokens`` rows.
+
+        With the prefix cache enabled and ``token_ids`` (or a ``plan``)
+        given, the longest cached full-block chain is ATTACHED (refcount
+        bumped, zero quantization ops) and only the uncached tail is
+        allocated fresh; ``plan.hit_tokens`` tells the scheduler where
+        prefill may start.
+        """
         if seq_id in self._seqs:
             raise BlockPoolError(f"sequence {seq_id} already allocated")
-        need = self.blocks_for(n_tokens)
-        if not self.can_alloc(need):
+        if plan is None:
+            plan = self.plan_seq(n_tokens, token_ids=token_ids,
+                                 scale_exp=scale_exp)
+        if not plan.feasible:
             self.stats.alloc_failures += 1
             raise BlockPoolError(
-                f"pool exhausted: need {need} blocks, {self.n_free} free")
-        exp = self.default_scale_exp if scale_exp is None else scale_exp
-        blocks = [self._take(exp) for _ in range(need)]
+                f"pool exhausted: need {plan.need_new} blocks, "
+                f"{self.n_free} allocatable")
+        # pin hits FIRST so the fresh-block takes below cannot LRU-reclaim
+        # the very blocks this sequence is attaching to
+        for blk, key in zip(plan.hit_blocks, plan.hit_keys):
+            if self.cache is None or self.cache.key_of(blk) != key:
+                raise BlockPoolError(
+                    f"stale plan: block {blk} no longer holds key {key:x}")
+            self._acquire(blk)
+        fresh_goal = self.blocks_for(n_tokens) - len(plan.hit_blocks)
+        new = [self._take(plan.scale_exp) for _ in range(max(fresh_goal, 0))]
+        blocks = list(plan.hit_blocks) + new
         self._seqs[seq_id] = blocks
-        for blk in blocks:
-            self._owner[blk] = seq_id
+        if self.cache is not None:
+            self.cache.on_alloc(seq_id, plan.hit_keys, plan.n_full_lookups,
+                                plan.scale_exp)
         return list(blocks)  # copy: callers must not mutate the pool's map
 
     def extend(self, seq_id: int, n_tokens_total: int) -> list[int]:
@@ -128,33 +244,122 @@ class BlockPool:
             else self.default_scale_exp
         new = [self._take(exp) for _ in range(need)]
         blocks.extend(new)
-        for blk in new:
-            self._owner[blk] = seq_id
         return new
 
     def free_seq(self, seq_id: int) -> int:
-        """Return all of ``seq_id``'s blocks; raises on double free."""
+        """Release all of ``seq_id``'s block references; raises on double
+        free.  Published blocks whose refcount drops to 0 stay CACHED
+        (idle-LRU) instead of returning to the free stack."""
         if seq_id not in self._seqs:
             raise BlockPoolError(f"double free: unknown sequence {seq_id}")
-        blocks = self._seqs.pop(seq_id)
-        for blk in blocks:
-            del self._owner[blk]
-            self._free.append(blk)
-        self.stats.frees += len(blocks)
-        return len(blocks)
+        return self._release_seq(seq_id)
 
     def evict(self, seq_id: int) -> int:
-        """Preemption path: free + count the eviction."""
-        n = self.free_seq(seq_id)
-        self.stats.evictions += 1
+        """Preemption path: release references + count the eviction
+        (block-granular: ``stats.evictions`` counts blocks, the preempted
+        sequence itself counts once in ``stats.seq_evictions``).  The
+        sequence's published blocks survive in the cache, so a recompute
+        resume can re-attach instead of requantizing."""
+        if seq_id not in self._seqs:
+            raise BlockPoolError(f"double free: unknown sequence {seq_id}")
+        n = self._release_seq(seq_id)
+        self.stats.evictions += n
+        self.stats.seq_evictions += 1
         return n
 
+    def _release_seq(self, seq_id: int) -> int:
+        blocks = self._seqs.pop(seq_id)
+        for blk in blocks:
+            self._release(blk)
+        self.stats.frees += len(blocks)
+        if self.cache is not None:
+            self.cache.release(seq_id)
+        return len(blocks)
+
+    def _release(self, blk: int) -> None:
+        self.refcount[blk] -= 1
+        assert self.refcount[blk] >= 0, f"refcount underflow on block {blk}"
+        if self.refcount[blk] == 0:
+            if self.cache is not None and self.cache.is_published(blk):
+                self._idle[blk] = None          # most-recently released
+            else:
+                self._free.append(blk)
+
+    def _acquire(self, blk: int) -> None:
+        """Attach to a published block (cache hit)."""
+        self.refcount[blk] += 1
+        if self.refcount[blk] == 1:
+            del self._idle[blk]                 # was idle-cached
+        self.stats.peak_live = max(self.stats.peak_live, self.n_live)
+
     def _take(self, scale_exp: int) -> int:
-        blk = self._free.pop()
+        """Hand out a fresh private block, reclaiming the LRU idle cached
+        block if the free stack is empty."""
+        if self._free:
+            blk = self._free.pop()
+        elif self._idle:
+            blk, _ = self._idle.popitem(last=False)     # oldest first
+            self.cache.forget(blk)
+            self.stats.cache_evictions += 1
+        else:
+            raise BlockPoolError("pool exhausted: no free or cached blocks")
         self.scale_exp[blk] = scale_exp
+        self.refcount[blk] = 1
         self.stats.allocs += 1
         self.stats.peak_live = max(self.stats.peak_live, self.n_live)
         return blk
+
+    # -- copy-on-write ----------------------------------------------------
+
+    def block_writable(self, seq_id: int, logical_idx: int) -> bool:
+        """May ``seq_id`` write KV rows into its ``logical_idx``-th block?
+        Only private, never-published blocks are writable: a published
+        block's key IS its content, and refcount > 1 means another
+        sequence is reading it."""
+        blk = self.seq_blocks(seq_id)[logical_idx]
+        if self.refcount[blk] != 1:
+            return False
+        return self.cache is None or not self.cache.is_published(blk)
+
+    def cow(self, seq_id: int, logical_idx: int) -> tuple[int, int]:
+        """Copy-on-write: replace the (shared/published) block at
+        ``logical_idx`` in ``seq_id``'s table with a fresh private block.
+        Returns (src, dst); the CALLER must copy the device rows src->dst
+        (the pool only moves the map).  Raises BlockPoolError under
+        allocation pressure — the scheduler preempts and retries."""
+        blocks = self.seq_blocks(seq_id)
+        src = blocks[logical_idx]
+        if self.block_writable(seq_id, logical_idx):
+            raise BlockPoolError(
+                f"COW of a writable block {src} (seq {seq_id} idx "
+                f"{logical_idx}) — caller should write in place")
+        dst = self._take(int(self.scale_exp[src]))
+        blocks[logical_idx] = dst
+        self._release(src)
+        if self.cache is not None:
+            self.cache.stats.cow_copies += 1
+        return src, dst
+
+    # -- cache plumbing ---------------------------------------------------
+
+    def commit(self, seq_id: int, start: int, token_ids) -> None:
+        """Record that KV rows for ``token_ids`` at absolute positions
+        ``start..`` are now device-resident; full blocks this completes
+        become content-addressable.  No-op without the prefix cache."""
+        if self.cache is not None:
+            self.cache.commit(self, seq_id, start, token_ids)
+
+    def flush_cache(self) -> int:
+        """Drop all cached (idle) blocks back to the free stack and every
+        content key.  Requires no live sequences."""
+        if self.cache is None:
+            return 0
+        assert not self._seqs, "flush_cache with live sequences"
+        n = self.cache.flush()
+        while self._idle:
+            blk, _ = self._idle.popitem(last=True)
+            self._free.append(blk)
+        return n
 
     # -- views ------------------------------------------------------------
 
@@ -166,9 +371,7 @@ class BlockPool:
         fast, never corrupt silently; INACTIVE slots get their all-trash
         rows from the engine's ``np.full(TRASH_BLOCK)`` default, not from
         here."""
-        if seq_id not in self._seqs:
-            raise BlockPoolError(f"unknown sequence {seq_id}")
-        blocks = self._seqs[seq_id]
+        blocks = self.seq_blocks(seq_id)
         if len(blocks) > width:
             raise BlockPoolError(
                 f"sequence {seq_id} has {len(blocks)} blocks > table "
@@ -178,7 +381,9 @@ class BlockPool:
         return row
 
     def seq_scale_exp(self, seq_id: int) -> int:
-        """The (uniform) Eq.-1 exponent of a live sequence's blocks."""
+        """The (uniform) Eq.-1 exponent of a live sequence's blocks.
+        Shared blocks necessarily share exponents — the exponent is part
+        of the content key (and a per-shard kernel constant, DESIGN §8)."""
         blocks = self._seqs.get(seq_id)
         if not blocks:
             raise BlockPoolError(f"unknown sequence {seq_id}")
@@ -194,19 +399,42 @@ class BlockPool:
     def check_invariants(self) -> None:
         """Raises AssertionError on any broken pool invariant."""
         free = set(self._free)
+        idle = set(self._idle)
         assert len(free) == len(self._free), "duplicate blocks on free list"
-        assert TRASH_BLOCK not in free, "trash block on the free list"
-        assert TRASH_BLOCK not in self._owner, "trash block owned"
-        owned: set[int] = set()
+        assert TRASH_BLOCK not in free and TRASH_BLOCK not in idle, \
+            "trash block free or cached"
+        assert not (free & idle), "block both free and idle-cached"
+        # refcount == number of owning sequences, per block
+        counts = np.zeros_like(self.refcount)
+        live: set[int] = set()
         for sid, blocks in self._seqs.items():
             bset = set(blocks)
             assert len(bset) == len(blocks), f"seq {sid} repeats a block"
-            assert not (bset & owned), f"seq {sid} shares blocks"
+            assert TRASH_BLOCK not in bset, f"seq {sid} owns the trash block"
             for blk in blocks:
-                assert self._owner.get(blk) == sid, \
-                    f"owner map out of sync for block {blk}"
-            owned |= bset
-        assert not (owned & free), "block both free and owned"
-        assert owned | free == set(range(1, self.num_blocks)), \
-            "orphan blocks (neither free nor owned)"
+                counts[blk] += 1
+            live |= bset
+        assert (counts == self.refcount).all(), \
+            "refcount out of sync with sequence ownership"
+        assert not (live & free) and not (live & idle), \
+            "live block also free or idle-cached"
+        assert live | free | idle == set(range(1, self.num_blocks)), \
+            "orphan blocks (neither free, cached, nor live)"
+        if self.cache is not None:
+            self.cache.check_invariants(self)
+            for blk in idle:
+                assert self.cache.is_published(blk), \
+                    f"idle block {blk} has no content key"
+            for blk in free:
+                assert not self.cache.is_published(blk), \
+                    f"free block {blk} still published"
+            shared = np.flatnonzero(self.refcount > 1)
+            for blk in shared:
+                assert self.cache.is_published(int(blk)), \
+                    f"block {blk} shared (refcount {self.refcount[blk]}) " \
+                    f"but never published"
+        else:
+            assert not idle, "idle-cached blocks without a prefix cache"
+            assert (self.refcount <= 1).all(), \
+                "shared block without a prefix cache"
         assert self.stats.peak_live <= self.num_blocks - 1

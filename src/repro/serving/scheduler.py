@@ -20,12 +20,21 @@ Scheduling policy:
   per-engine-step token budget, so admitting a long prompt never stalls
   the decode batch for more than one chunk.
 * **Recompute preemption, youngest first**: when a decode step cannot get
-  a block, the most recently *admitted* request is evicted (its blocks
-  freed, its prompt+generated tokens re-queued for re-prefill).  The
-  oldest running request is only ever preempted when it is the sole
-  runner, so the oldest request always makes progress — no livelock, no
-  starvation.  Generated tokens survive preemption: the re-prefill feed is
-  ``prompt + generated`` and decoding resumes where it left off.
+  a block, the most recently *admitted* request is evicted (its block
+  references released, its prompt+generated tokens re-queued for
+  re-prefill).  The oldest running request is only ever preempted when it
+  is the sole runner, so the oldest request always makes progress — no
+  livelock, no starvation.  Generated tokens survive preemption: the
+  re-prefill feed is ``prompt + generated`` and decoding resumes where it
+  left off.
+* **Prefix-cache admission** (DESIGN §10): with the pool's
+  content-addressed cache enabled, admission plans the feed against the
+  cache, ATTACHES the longest cached full-block chain (shared, read-only,
+  zero quantization ops) and starts chunked prefill at the first uncached
+  token.  A fully-cached feed still re-feeds its last token (logits are
+  needed to sample), which copy-on-writes the last shared block; a
+  preempted request releases references instead of freeing, so its
+  published blocks survive for the resume to re-attach.
 """
 from __future__ import annotations
 
@@ -76,8 +85,9 @@ class Request:
     slot: Optional[int] = None
     generated: list = dataclasses.field(default_factory=list)
     feed: Optional[np.ndarray] = None     # tokens to (re-)prefill
-    n_prefilled: int = 0                  # feed tokens whose KV is written
+    n_prefilled: int = 0                  # feed tokens whose KV is resident
     n_ctx: int = 0                        # KV rows live in the pool
+    cached_tokens: int = 0                # prefill tokens skipped via cache
     preemptions: int = 0
     t_admit: Optional[float] = None
     t_first: Optional[float] = None       # first token sampled (TTFT)
@@ -162,14 +172,22 @@ class Scheduler:
             req.feed = np.concatenate(
                 [req.prompt, np.asarray(req.generated, np.int32)]) \
                 if req.generated else req.prompt
-            if not self.pool.can_alloc(self.pool.blocks_for(len(req.feed))):
+            plan = self.pool.plan_seq(len(req.feed), token_ids=req.feed)
+            if not plan.feasible:
                 break                         # head blocks the line: FCFS
             self.waiting.pop(0)
-            self.pool.alloc_seq(req.rid, len(req.feed))
+            self.pool.alloc_seq(req.rid, len(req.feed), plan=plan)
             req.state = RequestState.PREFILL
             req.slot = slot
-            req.n_prefilled = 0
-            req.n_ctx = 0
+            # cached-prefix fast path (DESIGN §10): KV rows for the hit
+            # chain are already resident — chunked prefill starts at the
+            # first uncached token.  A fully-cached feed re-feeds its last
+            # token (the engine needs its logits row to sample), COWing
+            # the last shared block before the write.
+            hit = min(plan.hit_tokens, len(req.feed) - 1)
+            req.n_prefilled = hit
+            req.n_ctx = hit
+            req.cached_tokens += hit
             req.t_admit = now if req.t_admit is None else req.t_admit
             self.slots[slot] = req
             self.admission_log.append(req.rid)
@@ -207,10 +225,28 @@ class Scheduler:
                 if victim is req:
                     return False
 
+    def cow_for_prefill(self, req: Request, logical_idx: int,
+                        now: float):
+        """Copy-on-write the shared block at ``logical_idx`` before the
+        engine writes KV rows into it, with the same youngest-first
+        preemption retry as decode growth.  Returns the (src, dst) block
+        pair — the ENGINE must copy the device rows — or None iff ``req``
+        itself was preempted (skip its prefill this step)."""
+        while True:
+            try:
+                return self.pool.cow(req.rid, logical_idx)
+            except BlockPoolError:
+                victim = max(self.active(),
+                             key=lambda r: (r.t_admit, r.rid))
+                self.preempt(victim, now)
+                if victim is req:
+                    return None
+
     def preempt(self, req: Request, now: float) -> None:
-        """Recompute preemption: free blocks, requeue (arrival order keeps
-        its place near the front), keep generated tokens for the resume
-        feed."""
+        """Recompute preemption: release block references (the request's
+        PUBLISHED blocks stay cached for the resume to re-attach), requeue
+        (arrival order keeps its place near the front), keep generated
+        tokens for the resume feed."""
         del now
         self.pool.evict(req.rid)
         self.slots[req.slot] = None

@@ -1,10 +1,12 @@
 """Property tests for the serving engine's KV block pool (DESIGN §9).
 
-Invariants under random alloc/extend/free/evict traces: the non-trash
-blocks always partition into {free} ∪ {owned-by-exactly-one-sequence},
-double frees raise instead of corrupting, the trash block is never handed
-out, utilization accounting matches ownership, and a live block's Eq.-1
-scale exponent never changes (codes are never requantized while resident).
+Invariants under random alloc/extend/free/evict traces WITHOUT the prefix
+cache (the refcounted sharing/COW paths live in tests/test_prefix_cache.py):
+the non-trash blocks always partition into {free} ∪ {owned-by-exactly-one
+-sequence}, double frees raise instead of corrupting, the trash block is
+never handed out, utilization accounting matches ownership, and a live
+block's Eq.-1 scale exponent never changes (codes are never requantized
+while resident).
 """
 import numpy as np
 import pytest
@@ -124,3 +126,20 @@ def test_exhaustion_counts_failures():
     with pytest.raises(BlockPoolError, match="exhausted"):
         pool.extend(0, 12)
     assert pool.stats.alloc_failures == 2
+
+
+def test_evictions_counted_block_granular():
+    """Regression (ISSUE 4 small fix): ``PoolStats.evictions`` counts
+    evicted BLOCKS as documented (it used to count sequences); the
+    per-sequence count and cache reclaims get their own counters."""
+    pool = BlockPool(num_blocks=8, block_size=4)
+    pool.alloc_seq(0, 12)                          # 3 blocks
+    pool.alloc_seq(1, 4)                           # 1 block
+    assert pool.evict(0) == 3
+    assert pool.stats.evictions == 3               # blocks, not sequences
+    assert pool.stats.seq_evictions == 1
+    assert pool.evict(1) == 1
+    assert pool.stats.evictions == 4
+    assert pool.stats.seq_evictions == 2
+    assert pool.stats.cache_evictions == 0         # no prefix cache here
+    pool.check_invariants()

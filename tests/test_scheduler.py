@@ -33,8 +33,11 @@ def _mk_requests(rng, n, max_len=MAX_LEN):
 
 
 def _drive(sched: Scheduler, requests, max_iters=10_000):
-    """Fake-model engine loop mirroring ServingEngine.step's structure."""
+    """Fake-model engine loop mirroring ServingEngine.step's structure
+    (including the §10 prefix-cache paths: COW before a chunk writes into
+    a shared block, commits that publish completed blocks)."""
     pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    pool = sched.pool
     clock = 0.0
     iters = 0
     while pending or not sched.idle:
@@ -50,9 +53,22 @@ def _drive(sched: Scheduler, requests, max_iters=10_000):
         budget = sched.prefill_token_budget
         for req in sched.prefill_jobs():
             while budget > 0 and req.state is RequestState.PREFILL:
-                c = min(sched.chunk, len(req.feed) - req.n_prefilled, budget)
+                start = req.n_prefilled
+                c = min(sched.chunk, len(req.feed) - start, budget)
+                bs = pool.block_size
+                preempted = False
+                for idx in range(start // bs, -(-(start + c) // bs)):
+                    if idx >= pool.n_blocks_of(req.rid):
+                        break
+                    if not pool.block_writable(req.rid, idx):
+                        if sched.cow_for_prefill(req, idx, clock) is None:
+                            preempted = True     # req itself evicted
+                            break
+                if preempted:
+                    break
                 req.n_prefilled += c
                 req.n_ctx = req.n_prefilled
+                pool.commit(req.rid, start, req.feed[start:start + c])
                 budget -= c
                 if req.n_prefilled == len(req.feed):
                     tok = 1                      # fake first sampled token
@@ -70,6 +86,7 @@ def _drive(sched: Scheduler, requests, max_iters=10_000):
                 continue                         # preempted this iteration
             if not sched.grow_for_decode(req, clock):
                 continue
+            pool.commit(req.rid, req.n_ctx, [req.generated[-1]])
             req.n_ctx += 1
             tok = 1
             done = req.finished_by(tok, sched.max_model_len)
@@ -129,6 +146,65 @@ def test_tight_pool_preempts_youngest_and_completes():
     youngest_preempted = max(r.preemptions for r in reqs)
     assert youngest_preempted > 0 and oldest.preemptions == 0
     assert pool.n_live == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100_000), slots=st.integers(1, 4),
+       blocks=st.integers(10, 24))
+def test_shared_prefix_traces_complete_with_cache(seed, slots, blocks):
+    """Same completeness/FCFS/invariant guarantees with the prefix cache
+    ON and a workload dominated by a shared system prompt: requests
+    re-attach each other's published blocks (cached_tokens > 0 once the
+    prefix is published), duplicates exercise the full-feed COW path, and
+    preemption/resume still yields exactly max_new_tokens per request."""
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(num_blocks=blocks, block_size=4, prefix_cache=True)
+    sched = Scheduler(pool, n_slots=slots, chunk=8, max_model_len=MAX_LEN)
+    shared = rng.integers(0, 100, size=12).astype(np.int32)
+    reqs, t = [], 0.0
+    for i in range(int(rng.integers(4, 10))):
+        t += float(rng.exponential(0.1))
+        if rng.random() < 0.3:
+            prompt = shared.copy()               # exact repeat: COW path
+        else:
+            tail = rng.integers(0, 100, size=int(rng.integers(1, 6)))
+            prompt = np.concatenate([shared, tail.astype(np.int32)])
+        reqs.append(Request(
+            rid=i, prompt=prompt,
+            max_new_tokens=int(rng.integers(1, MAX_LEN - len(prompt) + 1)),
+            arrival=t))
+    _drive(sched, reqs)
+    assert len(sched.done) == len(reqs)
+    for r in reqs:
+        assert len(r.generated) == r.max_new_tokens
+    assert pool.n_live == 0
+    pool.check_invariants()
+
+
+def test_cached_admission_skips_prefill_and_cows_full_hits():
+    """Deterministic cache behavior on a single slot (strictly sequential
+    service): the second request attaches the published 3-block prefix
+    (cached_tokens == 12), and an exact repeat of the prompt is a
+    FULL-feed hit — prefill shrinks to the one re-fed token (cached 11)
+    whose write copy-on-writes the last shared block."""
+    pool = BlockPool(num_blocks=24, block_size=4, prefix_cache=True)
+    sched = Scheduler(pool, n_slots=1, chunk=8, max_model_len=32)
+    shared = np.arange(12, dtype=np.int32)
+    reqs = [
+        Request(rid=0, prompt=shared.copy(), max_new_tokens=2, arrival=0.0),
+        Request(rid=1, prompt=np.concatenate(
+            [shared, np.asarray([77, 78], np.int32)]),
+            max_new_tokens=2, arrival=0.1),
+        Request(rid=2, prompt=shared.copy(), max_new_tokens=2, arrival=0.2),
+    ]
+    _drive(sched, reqs)
+    assert len(sched.done) == 3
+    assert reqs[0].cached_tokens == 0              # cold
+    assert reqs[1].cached_tokens == 12             # 3 full blocks attached
+    assert reqs[2].cached_tokens == 11             # full hit, last token re-fed
+    assert pool.cache.stats.cow_copies == 1
+    assert pool.cache.stats.hits == 6
+    pool.check_invariants()
 
 
 def test_big_early_request_not_starved_by_small_late_ones():

@@ -14,7 +14,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core.qmodel import QuantContext, QuantMode
 from repro.models import model as M
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, RequestState, ServingEngine
 
 CTX = QuantContext(mode=QuantMode.FP)
 
@@ -105,6 +105,112 @@ def test_preemption_roundtrip_matches_oracle():
     eng.pool.check_invariants()
     assert eng.pool.n_live == 0
     _check_vs_oracle(cfg, params, reqs, eng.outputs())
+
+
+def test_shared_prefix_blocks_physically_shared_and_token_exact():
+    """CI `serving` gate for the prefix cache (DESIGN §10): requests
+    sharing a prefix must physically share pool blocks (asserted on block
+    ids mid-run), a repeated prompt must take the COW path, the report
+    must show hit-rate > 0 and >= 1 COW event, and every request decodes
+    token-exactly vs the dense-cache oracle through the divergence."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(21)
+    shared = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    tail = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    r0 = Request(rid=0, prompt=shared.copy(), max_new_tokens=8)
+    r1 = Request(rid=1, prompt=np.concatenate([shared, tail]),
+                 max_new_tokens=6)
+    r2 = Request(rid=2, prompt=shared.copy(), max_new_tokens=4)  # repeat
+    eng = ServingEngine(cfg, params, CTX, n_slots=3, block_size=8,
+                        max_model_len=40, chunk=8)
+    eng.submit(r0)
+    for _ in range(30):
+        eng.step()
+        if r0.state is RequestState.DECODE:
+            break
+    assert r0.state is RequestState.DECODE         # prefix published
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.step()
+    b0 = eng.pool.seq_blocks(0)
+    b1 = eng.pool.seq_blocks(1)
+    b2 = eng.pool.seq_blocks(2)
+    # ACCEPTANCE: the same physical pool blocks back the shared prefix
+    assert b1[:2] == b0[:2]
+    assert (eng.pool.refcount[b0[:2]] >= 2).all()
+    # the exact repeat is a FULL-feed hit: first block shared, last block
+    # copy-on-written so the re-fed token's write stays private
+    assert b2[0] == b0[0] and b2[1] != b0[1]
+    while not eng.sched.idle:
+        eng.step()
+    rep = eng.report()
+    assert rep["completed"] == 3
+    pc = rep["prefix_cache"]
+    assert pc["hit_rate"] > 0 and pc["hits"] >= 4
+    assert pc["cow_copies"] >= 1
+    # r1 attached 16 prefix tokens, r2 skipped 15 (full hit, one re-fed)
+    assert pc["cached_prefill_tokens"] == 31
+    assert rep["hwcost"]["requant_ops_avoided_prefix_cache"] > 0
+    eng.pool.check_invariants()
+    assert eng.pool.n_live == 0 and eng.pool.n_cached > 0
+    # token-exactness through sharing + COW divergence
+    _check_vs_oracle(cfg, params, [r0, r1, r2], eng.outputs())
+
+
+def test_shared_prefix_preemption_roundtrip_matches_oracle():
+    """Cache + pressure: an undersized pool forces recompute preemption
+    while requests share a prefix (and one repeats it exactly).  Resumes
+    re-attach whatever published blocks survived, and every request still
+    decodes token-exactly vs the dense oracle."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    shared = rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
+    reqs = []
+    for i in range(4):
+        tail = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                            max_new_tokens=10))
+    reqs[2].prompt = reqs[0].prompt.copy()         # exact duplicate
+    # 5 usable blocks x 8 = 40 rows < 2 slots x 26 rows each
+    eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                        max_model_len=32, num_blocks=6, chunk=8)
+    rep = eng.run(reqs)
+    assert rep["completed"] == 4
+    assert rep["preemptions"] > 0 and rep["pool"]["evictions"] > 0
+    eng.pool.check_invariants()
+    assert eng.pool.n_live == 0
+    _check_vs_oracle(cfg, params, reqs, eng.outputs())
+
+
+def test_prefix_cache_off_matches_cached_engine_greedy():
+    """A/B at equal pool size: the cache changes WHAT work runs, never
+    the tokens — prefix_cache=False produces identical greedy outputs."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    shared = rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+
+    def workload():
+        return [Request(rid=i, prompt=np.concatenate(
+            [shared, rng2.integers(0, cfg.vocab_size, size=3 + i)
+             .astype(np.int32)]), max_new_tokens=5) for i in range(3)]
+
+    rng2 = np.random.default_rng(19)
+    reqs_a = workload()
+    rng2 = np.random.default_rng(19)
+    reqs_b = workload()
+    on = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                       max_model_len=32, chunk=8, prefix_cache=True)
+    on.run(reqs_a)
+    off = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                        max_model_len=32, chunk=8, prefix_cache=False)
+    off.run(reqs_b)
+    assert off.pool.cache is None
+    for rid in range(3):
+        assert on.outputs()[rid].tolist() == off.outputs()[rid].tolist()
+    assert on.pool.cache.stats.hits > 0            # the cache did engage
 
 
 def test_stop_token_and_max_len():
