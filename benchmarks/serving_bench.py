@@ -19,6 +19,15 @@ cache is primed once (the system prompt quantized exactly once), then the
 measured passes report hit-rate, TTFT, prefill chunks, quant-ops-avoided
 (Table-5 accounting) and pool residency.
 
+Part 3 is SPECULATIVE DECODING (DESIGN §11) on a repetitive workload
+(tiled-pattern prompts — greedy decode locks into cycles the n-gram
+self-drafter predicts): the engine with ``spec_k`` drafts verified per
+step vs the same engine without, at equal pool size.  Gates: greedy
+speculative decode must be TOKEN-IDENTICAL to the plain engine,
+acceptance rate > 0.5, tokens per (slot, verify-step) > 1.3, and the
+structural step-count win must hold (fewer total decode-phase steps for
+the same tokens).
+
 Both runners execute the workload once UNTIMED first (jit warm-up: CPU
 smoke compilation dwarfs compute and its jitter would swamp the signal),
 then once timed — the reported tokens/s are steady-state wall-clock.
@@ -89,6 +98,18 @@ SP_PREFIX = 256
 SP_TAILS = (8, 16, 24, 32)
 SP_GENS = (4, 8)
 SP_REQUESTS = 16
+
+# -- speculative decoding workload (DESIGN §11) -----------------------------
+# repetitive prompts (a short random pattern tiled) push greedy decode of
+# the smoke model into short cycles — exactly the continuation shape the
+# model-free n-gram self-drafter predicts.  Long generations let the
+# cycle establish; measured acceptance ~0.57 and ~1.85 tokens per
+# (slot, verify step) at spec_k=4 clear the gates with margin.
+SPEC_K = 4
+SPEC_PAT_LEN = 4
+SPEC_PAT_REPS = 8
+SPEC_GEN = 48
+SPEC_REQUESTS = 8
 
 
 class StaticRunner:
@@ -317,6 +338,101 @@ def bench_shared_prefix(*, seed: int = 0) -> dict:
     }
 
 
+def bench_spec_decode(*, seed: int = 0) -> dict:
+    """Speculative vs plain decode on the repetitive self-drafting
+    workload at equal pool size (DESIGN §11).  Greedy, so the comparison
+    is deterministic: the spec engine must emit EXACTLY the plain
+    engine's tokens, and the structural numbers (acceptance, tokens per
+    slot-step, verify/decode step counts, retracted blocks, wasted quant
+    ops) are timer-independent; wall clock rides along best-of-N."""
+    from repro.serving import Request
+
+    max_need = SPEC_PAT_LEN * SPEC_PAT_REPS + SPEC_GEN
+    max_model_len = -(-max_need // BLOCK_SIZE) * BLOCK_SIZE
+
+    def workload():
+        rng = np.random.default_rng(seed)
+        reqs = []
+        for i in range(SPEC_REQUESTS):
+            pat = rng.integers(0, get_smoke_config(ARCH).vocab_size,
+                               size=SPEC_PAT_LEN).astype(np.int32)
+            reqs.append(Request(rid=i, prompt=np.tile(pat, SPEC_PAT_REPS),
+                                max_new_tokens=SPEC_GEN))
+        return reqs
+
+    def build(spec_k: int):
+        return serve_engine(
+            ARCH, requests=workload(), n_slots=N_SLOTS,
+            block_size=BLOCK_SIZE, chunk=CHUNK,
+            max_model_len=max_model_len, mode="fp", calibrate=False,
+            seed=seed, spec_k=spec_k,
+            cfg_overrides=dict(BENCH_SCALE, kv_cache_bits=8))["engine"]
+
+    spec = build(SPEC_K)          # warm-up run included in serve_engine
+    plain = build(0)
+    parity = all(
+        np.array_equal(spec.outputs()[r.rid], plain.outputs()[r.rid])
+        for r in workload())
+
+    srep = prep = None
+    s_walls, p_walls = [], []
+    for _ in range(N_PASSES):
+        spec.reset_metrics()
+        srep = spec.run(workload())
+        s_walls.append(srep["wall_s"])
+        plain.reset_metrics()
+        prep = plain.run(workload())
+        p_walls.append(prep["wall_s"])
+
+    sp = srep["speculative"]
+    return {
+        "workload": {"n_requests": SPEC_REQUESTS,
+                     "prompt": f"{SPEC_PAT_LEN}-token pattern x "
+                               f"{SPEC_PAT_REPS}",
+                     "gen": SPEC_GEN, "spec_k": SPEC_K,
+                     "n_slots": N_SLOTS, "block_size": BLOCK_SIZE,
+                     "chunk": CHUNK, "seed": seed, "passes": N_PASSES},
+        "note": "token_parity compares greedy outputs spec vs plain on "
+                "the identical workload/pool; wall_s_best is best of the "
+                "alternating passes, structural numbers the LAST pass",
+        "token_parity": parity,
+        "acceptance_rate": sp["acceptance_rate"],
+        "tokens_per_step": sp["tokens_per_step"],
+        "verify_steps": sp["verify_steps"],
+        "retracts": sp["retracts"],
+        "retracted_blocks": sp["retracted_blocks"],
+        "requant_ops_wasted": sp["requant_ops_wasted"],
+        # total decode-phase steps each engine needed for the SAME tokens
+        "decode_phase_steps": {
+            "spec": srep["spec_steps"] + srep["decode_steps"],
+            "plain": prep["decode_steps"]},
+        "wall_s_best": {"spec": min(s_walls), "plain": min(p_walls)},
+        "wall_s_passes": {"spec": s_walls, "plain": p_walls},
+        "speculative": sp,
+    }
+
+
+def check_spec_decode(sd: dict) -> None:
+    """Acceptance gates for the speculative-decoding section (ISSUE 5)."""
+    if not sd["token_parity"]:
+        raise SystemExit(
+            "greedy speculative decode is NOT token-identical to the "
+            "plain engine on the same workload")
+    if not sd["acceptance_rate"] or sd["acceptance_rate"] <= 0.5:
+        raise SystemExit(
+            f"draft acceptance rate {sd['acceptance_rate']} <= 0.5 on "
+            f"the repetitive self-drafting workload")
+    if not sd["tokens_per_step"] or sd["tokens_per_step"] <= 1.3:
+        raise SystemExit(
+            f"speculative tokens/step {sd['tokens_per_step']} <= 1.3 on "
+            f"the repetitive self-drafting workload")
+    steps = sd["decode_phase_steps"]
+    if steps["spec"] >= steps["plain"]:
+        raise SystemExit(
+            f"speculation needed {steps['spec']} decode-phase steps vs "
+            f"the plain engine's {steps['plain']} — no structural win")
+
+
 def check_shared_prefix(sp: dict) -> None:
     """Acceptance gates for the shared-prefix section (ISSUE 4)."""
     if sp["hit_rate"] <= 0.9:
@@ -349,6 +465,7 @@ def main() -> None:
     args = ap.parse_args()
     out = bench_serving(n_requests=args.requests, seed=args.seed)
     out["shared_prefix"] = bench_shared_prefix(seed=args.seed)
+    out["spec_decode"] = bench_spec_decode(seed=args.seed)
     with open(args.json, "w") as f:
         json.dump(out, f, indent=2)
     c, s = out["continuous"], out["static"]
@@ -371,8 +488,18 @@ def main() -> None:
           f"prefill chunks {sp['prefill_chunks']['cached']} vs "
           f"{sp['prefill_chunks']['no_cache']}, "
           f"{sp['quant_ops_avoided']} quant ops avoided")
+    sd = out["spec_decode"]
+    print(f"spec decode (K={sd['workload']['spec_k']}): "
+          f"parity={'OK' if sd['token_parity'] else 'FAIL'}, "
+          f"acceptance {sd['acceptance_rate']:.1%}, "
+          f"{sd['tokens_per_step']} tok/slot-step, decode-phase steps "
+          f"{sd['decode_phase_steps']['spec']} vs "
+          f"{sd['decode_phase_steps']['plain']} plain, "
+          f"{sd['retracted_blocks']} blocks retracted, "
+          f"{sd['requant_ops_wasted']} quant ops on rejected drafts")
     if args.check:
         check_shared_prefix(sp)
+        check_spec_decode(sd)
         # the deterministic gate is the structural one — continuous must
         # need strictly fewer decode steps for the same useful tokens;
         # wall clock only fails on a GROSS regression, because shared CI

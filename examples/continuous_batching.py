@@ -15,6 +15,15 @@ prompt to every request: the content-addressed prefix cache (DESIGN §10)
 quantizes it once and serves every later request from the SAME physical
 blocks — the demo prints the hit rate and the quantization ops that
 sharing deleted.  ``--shared-prefix 0`` turns the demo off.
+
+``--spec-k K`` (default 0 = off) turns on speculative decoding
+(DESIGN §11): the model-free n-gram self-drafter proposes up to K
+continuation tokens per slot, one paged verify step scores them all,
+accepted tokens commit to the pool and the rejected tail's blocks are
+RETRACTED before they can publish — the demo prints the acceptance
+rate, tokens per step, and the quantization ops spent on rejected
+drafts (the waste the paper's write-once dataflow makes visible).
+Greedy outputs are token-identical with speculation on or off.
 """
 import argparse
 
@@ -29,6 +38,10 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=48,
                     help="N-token system prompt shared by every request "
                          "(0 disables the prefix-cache demo)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft up to K tokens per "
+                         "slot and verify them in one paged step "
+                         "(0 disables)")
     args = ap.parse_args()
 
     import jax
@@ -39,7 +52,8 @@ def main():
     out = serve_engine(args.arch, n_requests=args.requests, rate=50.0,
                        n_slots=4, block_size=16, chunk=16, mode="fp",
                        calibrate=False, temperature=args.temperature,
-                       shared_prefix=args.shared_prefix)
+                       shared_prefix=args.shared_prefix,
+                       spec_k=args.spec_k)
     rep = out["report"]
     print(f"[{args.arch}] {rep['completed']}/{rep['n_requests']} requests, "
           f"{rep['gen_tokens']} tokens in {rep['wall_s']}s "
@@ -66,6 +80,15 @@ def main():
               f"ran, {pc['cow_copies']} COW copies, "
               f"{pc['resident_cached_blocks']} blocks still resident for "
               f"the next request")
+    sp = rep.get("speculative")
+    if sp is not None:
+        print(f"speculative (K={sp['spec_k']}, {sp['drafter']}): "
+              f"acceptance {sp['acceptance_rate']}, "
+              f"{sp['tokens_per_step']} tokens/step over "
+              f"{sp['verify_steps']} verify steps; "
+              f"{sp['retracted_blocks']} rejected-tail blocks retracted, "
+              f"{sp['requant_ops_wasted']} quant ops spent on rejected "
+              f"drafts (never published)")
     for rid, toks in sorted(out["outputs"].items())[:4]:
         print(f"  req {rid}: {toks[:12].tolist()}")
 

@@ -186,7 +186,14 @@ def shift_requant(acc: jax.Array, shift: jax.Array | int, bits: int = 8,
             -((-rounded) >> jnp.maximum(s_, 0)),
         )
 
-    shifted = jnp.where(s >= 0, right_shift(acc, s), acc << jnp.maximum(-s, 0))
+    # negative shift = LEFT shift: saturate BEFORE shifting — int32 <<
+    # wraps silently, so an accumulator past 2^31 / 2^|shift| would
+    # sign-flip straight through the clip below (kernel-identical fix in
+    # kernels/int8_matmul.py::_shift_requant_i32)
+    ls = jnp.maximum(-s, 0)
+    bound = jnp.int32(2**31 - 1) >> ls
+    left = jnp.clip(acc, -bound, bound) << ls
+    shifted = jnp.where(s >= 0, right_shift(acc, s), left)
     out = jnp.clip(shifted, lo, hi)
     if dtype is None:
         dtype = QuantParams(0, bits, unsigned).storage_dtype()

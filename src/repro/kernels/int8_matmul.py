@@ -35,7 +35,14 @@ def _shift_requant_i32(acc: jax.Array, shift: int, lo: int, hi: int) -> jax.Arra
         acc = jnp.where(acc >= 0, (acc + half) >> shift,
                         -(((-acc) + half) >> shift))
     elif shift < 0:
-        acc = acc << (-shift)
+        # negative shift = LEFT shift: saturate BEFORE shifting.  int32 <<
+        # wraps silently, so an accumulator past 2^31 / 2^|shift| would
+        # sign-flip straight through the clip below; clamping to the
+        # largest magnitude that shifts exactly keeps the result on the
+        # saturating side (the clamped value already maps >= hi / <= lo
+        # for any sub-int32 output window).
+        bound = (2**31 - 1) >> (-shift)
+        acc = jnp.clip(acc, -bound, bound) << (-shift)
     return jnp.clip(acc, lo, hi)
 
 

@@ -173,13 +173,19 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                  mesh_shape: tuple[int, int] | None = None,
                  prompt_lens=(8, 16, 24, 32), gen_lens=(4, 8, 16, 24),
                  requests=None, cfg_overrides: dict | None = None,
-                 shared_prefix: int = 0, prefix_cache: bool = True) -> dict:
+                 shared_prefix: int = 0, prefix_cache: bool = True,
+                 spec_k: int = 0, drafter="ngram") -> dict:
     """Continuous-batching serving on the paged int8-KV block pool
     (DESIGN §9/§10).  Returns {"report", "outputs", "requests", "engine"}.
 
     ``shared_prefix`` prepends an N-token system prompt to every request
     (see :func:`poisson_workload`); ``prefix_cache=False`` disables the
-    content-addressed cache for A/B comparison at equal pool size."""
+    content-addressed cache for A/B comparison at equal pool size.
+    ``spec_k > 0`` turns on speculative decoding (DESIGN §11): up to K
+    tokens per slot are drafted (``drafter``: 'ngram' prompt-lookup
+    self-drafting, or any object with draft(history, k)) and verified in
+    one paged step, with rollback-safe publishing — rejected drafts
+    never reach the prefix cache."""
     from repro.serving import ServingEngine
     overrides = dict(cfg_overrides or {})
     if kv_bits is not None:
@@ -212,7 +218,8 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                            block_size=block_size, chunk=chunk,
                            max_model_len=max_model_len,
                            num_blocks=num_blocks, top_k=top_k, mesh=mesh,
-                           seed=seed, prefix_cache=prefix_cache)
+                           seed=seed, prefix_cache=prefix_cache,
+                           spec_k=spec_k, drafter=drafter)
     report = engine.run(requests)
     return {"report": report, "outputs": engine.outputs(),
             "requests": requests, "engine": engine}
@@ -261,6 +268,17 @@ def main(argv=None):
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="[--engine] disable the prefix cache (baseline "
                          "for A/B at equal pool size)")
+    ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                    help="[--engine] speculative decoding (DESIGN §11): "
+                         "draft up to K tokens per slot and verify them "
+                         "in ONE paged step; accepted tokens commit, the "
+                         "rejected tail's blocks retract so they never "
+                         "publish to the prefix cache (0 = off)")
+    ap.add_argument("--drafter", default="ngram", choices=["ngram"],
+                    help="[--engine --spec-k] draft proposer: 'ngram' is "
+                         "the model-free prompt-lookup self-drafter "
+                         "(small-draft-model hooks plug in via the "
+                         "serve_engine(drafter=...) API)")
     args = ap.parse_args(argv)
     mesh_shape = None
     if args.mesh is not None:
@@ -278,7 +296,8 @@ def main(argv=None):
                            temperature=args.temperature, top_k=args.top_k,
                            mesh_shape=mesh_shape,
                            shared_prefix=args.shared_prefix,
-                           prefix_cache=not args.no_prefix_cache)
+                           prefix_cache=not args.no_prefix_cache,
+                           spec_k=args.spec_k, drafter=args.drafter)
         print(json.dumps(out["report"], indent=2))
         pc = out["report"].get("prefix_cache")
         if pc is not None:
@@ -287,6 +306,15 @@ def main(argv=None):
                   f"lookups), {pc['cached_prefill_tokens']} prefill "
                   f"tokens served from cache, {pc['cow_copies']} COW "
                   f"copies, {pc['cache_evictions']} LRU evictions")
+        sp = out["report"].get("speculative")
+        if sp is not None:
+            print(f"speculative (K={sp['spec_k']}, {sp['drafter']}): "
+                  f"acceptance {sp['acceptance_rate']}, "
+                  f"{sp['tokens_per_step']} tokens/step over "
+                  f"{sp['verify_steps']} verify steps, "
+                  f"{sp['retracted_blocks']} blocks retracted "
+                  f"({sp['requant_ops_wasted']} quant ops spent on "
+                  f"rejected drafts)")
         return
     out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 gen=args.gen, mode=args.mode,

@@ -19,11 +19,19 @@ Three layers (DESIGN §9):
   (parent key, block token ids, scale exponent), shared read-only across
   sequences with per-block refcounts, copy-on-write on divergence, and
   LRU eviction of idle cached blocks only under allocation pressure.
+* :mod:`repro.serving.spec`      — speculative decoding (DESIGN §11):
+  model-free n-gram/prompt-lookup self-drafting (plus a pluggable
+  draft-model hook) and the fused rejection-sampling verifier; the
+  engine verifies K drafts in one (n_slots, K+1) paged step, commits
+  only accepted tokens and retracts the rejected tail's blocks, so a
+  rejected speculative row can never publish to the prefix cache.
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_pool import BlockPool, BlockPoolError
 from repro.serving.prefix_cache import CacheStats, PrefixCache
 from repro.serving.scheduler import Request, RequestState, Scheduler
+from repro.serving.spec import CallableDrafter, NgramDrafter
 
 __all__ = ["ServingEngine", "BlockPool", "BlockPoolError", "CacheStats",
-           "PrefixCache", "Request", "RequestState", "Scheduler"]
+           "PrefixCache", "Request", "RequestState", "Scheduler",
+           "CallableDrafter", "NgramDrafter"]

@@ -9,9 +9,13 @@ The engine owns the device state (params + the block-pool cache from
   requests, so the batch never drains (continuous batching).
 * chunked prefill: (1, C) for C in the scheduler's bucket set — prompts
   are fed ``chunk`` tokens at a time under a per-step token budget.
+* speculative verify: (n_slots, K+1) when drafting is on (DESIGN §11) —
+  each live slot's last token plus up to K drafted tokens are scored in
+  ONE step, with Leviathan/Chen rejection sampling fused into the jit;
+  only accepted tokens commit to the pool, the rejected tail retracts.
 
-jit therefore compiles a BOUNDED set of executables:
-1 (decode) + |buckets| (prefill) — bucketing is what keeps that true.
+jit therefore compiles a BOUNDED set of executables: 1 (decode)
++ |buckets| (prefill) + 1 (verify) — bucketing is what keeps that true.
 
 KV codes are written once on the Eq.-1 power-of-two grid and stay
 int8-resident in the pool until the request leaves; attention consumes
@@ -37,29 +41,31 @@ from repro.models import model as M
 from repro.serving.kv_pool import TRASH_BLOCK, BlockPool
 from repro.serving.scheduler import (Request, RequestState, Scheduler,
                                      chunk_bucket)
+from repro.serving.spec import apply_top_k, resolve_drafter, verify_tokens
 
 __all__ = ["ServingEngine", "sample_tokens", "summarize_step_times"]
 
 
 def sample_tokens(logits: jax.Array, key: jax.Array,
                   temperatures: jax.Array,
-                  top_k: Optional[jax.Array] = None) -> jax.Array:
+                  top_k: Optional[jax.Array] = None,
+                  k_cap: Optional[int] = None) -> jax.Array:
     """Greedy + temperature/top-k sampling hook.
 
     logits (B, V); temperatures (B,) — 0 selects greedy for that row;
     top_k (B,) int32 — 0 keeps the full vocabulary for that row.  Both
     are PER-ROW traced values, so one fixed-shape call serves a batch
     mixing greedy, full-vocab and top-k requests (continuous batching
-    cannot afford a recompile per sampling config)."""
+    cannot afford a recompile per sampling config).  ``k_cap`` is a
+    STATIC bound on the batch's largest top-k (the engine passes the
+    host-known max): the cutoff comes from an O(V log k_cap)
+    ``lax.top_k`` instead of a full-vocab sort in the decode hot loop,
+    and ties at the threshold break by index so the candidate set is
+    EXACTLY k (the old ``logits < kth`` kept every tied token)."""
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1)
     if top_k is not None:
-        v = logits.shape[-1]
-        srt = jnp.sort(logits, axis=-1)                    # ascending
-        kth_idx = jnp.clip(v - jnp.maximum(top_k, 1), 0, v - 1)
-        kth = jnp.take_along_axis(srt, kth_idx[:, None], axis=-1)
-        logits = jnp.where((top_k[:, None] > 0) & (logits < kth),
-                           -jnp.inf, logits)
+        logits = apply_top_k(logits, top_k, k_cap)
     scaled = logits / jnp.maximum(temperatures, 1e-6)[:, None]
     sampled = jax.random.categorical(key, scaled, axis=-1)
     return jnp.where(temperatures > 0, sampled, greedy).astype(jnp.int32)
@@ -94,7 +100,8 @@ class ServingEngine:
                  num_blocks: Optional[int] = None, chunk: int = 16,
                  prefill_token_budget: Optional[int] = None,
                  top_k: int = 0, mesh=None, seed: int = 0,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, spec_k: int = 0,
+                 drafter="ngram"):
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
@@ -121,18 +128,40 @@ class ServingEngine:
         base_key = jax.random.PRNGKey(seed)
 
         def sampled_step(params, tokens, cache, positions, bt, temps, topks,
-                         last_idx, step_idx):
+                         last_idx, step_idx, k_cap):
             logits, cache = base_step(params, tokens, cache, positions, bt)
             row = jax.lax.dynamic_index_in_dim(logits, last_idx, axis=1,
                                                keepdims=False)     # (B, V)
             key = jax.random.fold_in(base_key, step_idx)
-            return sample_tokens(row, key, temps, topks), cache
+            return sample_tokens(row, key, temps, topks, k_cap=k_cap), cache
 
         # donate the pool: the per-token scatter then updates the arena in
         # place — without donation XLA copies the whole multi-MB pool
         # every step, which is exactly the write-amplification the paged
-        # design exists to avoid
-        self._step_fn = jax.jit(sampled_step, donate_argnums=(2,))
+        # design exists to avoid.  k_cap is static (the host-known max
+        # top-k of the batch): one extra executable per distinct cap, and
+        # the sampler's cutoff stays an O(V log k) partial sort.
+        self._step_fn = jax.jit(sampled_step, donate_argnums=(2,),
+                                static_argnums=(9,))
+
+        # speculative verify step (DESIGN §11): score the (B, K+1) chunk
+        # and resolve draft acceptance in ONE dispatch — rejection
+        # sampling is fused into the jit, and only (out tokens, accepted
+        # counts) ever cross to the host
+        def spec_verify_step(params, tokens, cache, positions, bt, temps,
+                             topks, n_drafts, step_idx, k_cap):
+            logits, cache = base_step(params, tokens, cache, positions, bt)
+            key = jax.random.fold_in(base_key, step_idx)
+            out, n_acc = verify_tokens(logits, tokens, n_drafts, key,
+                                       temps, topks, k_cap=k_cap)
+            return out, n_acc, cache
+
+        self._spec_fn = jax.jit(spec_verify_step, donate_argnums=(2,),
+                                static_argnums=(9,))
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        self.spec_k = spec_k
+        self.drafter = resolve_drafter(drafter)
 
         # COW device copy (DESIGN §10): duplicate one pool block's rows
         # (all layers, K and V) into a fresh private block before a write
@@ -155,9 +184,18 @@ class ServingEngine:
         # quant ops the PREFIX CACHE deleted outright: cached-prefix tokens
         # are never quantized at all for the hitting request (Table 5)
         self.requant_ops_avoided_cache = 0
+        # quant ops SPENT on rejected drafts: performed, then rolled back —
+        # exactly the waste the paper's write-once scheme minimizes
+        # elsewhere, reported honestly instead of hidden (Table 5)
+        self.requant_ops_wasted_spec = 0
         self.cache_hit_prefill_tokens = 0
         self.decode_steps = 0
         self.prefill_chunks = 0
+        self.spec_steps = 0
+        self.spec_slot_steps = 0    # (live slot, verify step) pairs
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
         self._step_times: dict[tuple, list] = {}    # (B, C) -> wall seconds
         self._t0 = time.perf_counter()
         self._skip = 0.0
@@ -198,9 +236,15 @@ class ServingEngine:
         self.requant_ops_performed = 0
         self.requant_ops_avoided = 0
         self.requant_ops_avoided_cache = 0
+        self.requant_ops_wasted_spec = 0
         self.cache_hit_prefill_tokens = 0
         self.decode_steps = 0
         self.prefill_chunks = 0
+        self.spec_steps = 0
+        self.spec_slot_steps = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
         self._step_times.clear()
         self._wall_s = 0.0
 
@@ -222,7 +266,9 @@ class ServingEngine:
         return self.report()
 
     def step(self) -> None:
-        """One engine iteration: admit → chunked prefill → decode."""
+        """One engine iteration: admit → chunked prefill → decode (a
+        speculative verify step when drafting is on and produced drafts,
+        the plain (B, 1) decode otherwise)."""
         for req in self.sched.admit(self._now()):
             # cached-prefix hit: those tokens' KV is already resident, so
             # their quantization ops simply never happen for this request
@@ -230,7 +276,8 @@ class ServingEngine:
             self.requant_ops_avoided_cache += \
                 req.n_prefilled * self._elems_per_token
         self._run_prefills()
-        self._run_decode()
+        if not (self.spec_k and self._run_spec_decode()):
+            self._run_decode()
 
     # -- prefill ----------------------------------------------------------
 
@@ -239,8 +286,24 @@ class ServingEngine:
         # costs the decode batch at most `budget` tokens of extra latency
         budget = self.sched.prefill_token_budget
         for req in self.sched.prefill_jobs():
+            zero_streak = 0
             while budget > 0 and req.state is RequestState.PREFILL:
-                budget -= self._prefill_chunk(req, budget)
+                fed = self._prefill_chunk(req, budget)
+                budget -= fed
+                # progress guard: the only legitimate zero-token return is
+                # the CoW-failure path, whose preemption side-effect flips
+                # req.state and exits this loop.  If the state is STILL
+                # PREFILL after two consecutive zero-token iterations,
+                # something broke that contract — fail fast instead of
+                # spinning the engine forever.
+                zero_streak = zero_streak + 1 if fed == 0 else 0
+                if zero_streak >= 2:
+                    raise RuntimeError(
+                        f"prefill of request {req.rid} made no progress "
+                        f"twice in a row (state {req.state}, "
+                        f"{req.n_prefilled}/{len(req.feed)} fed, budget "
+                        f"{budget}) — zero-progress CoW retry without "
+                        f"preemption")
 
     def _prefill_chunk(self, req: Request, budget: int) -> int:
         start = req.n_prefilled
@@ -335,6 +398,125 @@ class ServingEngine:
             if done:
                 self.sched.finish(req, now)
 
+    # -- speculative decode (DESIGN §11) ---------------------------------
+
+    def _spec_budget(self, req: Request) -> int:
+        """How many tokens are worth drafting for ``req`` this step: each
+        verify step emits at least one token, so drafting past the
+        request's remaining generation (or the model length) only burns
+        quantization ops on rows that can never be kept."""
+        return max(0, min(self.spec_k,
+                          req.max_new_tokens - req.n_generated - 1,
+                          self.max_model_len - 1 - req.n_ctx))
+
+    def _run_spec_decode(self) -> bool:
+        """One speculative verify step at (n_slots, K+1): draft, grow the
+        pool for the speculative tail (degrading the tail under pressure
+        before preempting peers), COW any shared block the tail would
+        land in, verify all slots in one fused dispatch, then COMMIT only
+        accepted tokens and RETRACT the rejected tail's blocks.  Returns
+        False when no slot produced a draft — the caller then runs the
+        plain (B, 1) decode step instead of paying for a K+1-wide one."""
+        now = self._now()
+        proposals = {}
+        for req in self.sched.decode_reqs():
+            budget = self._spec_budget(req)
+            if budget > 0:
+                d = np.asarray(self.drafter.draft(
+                    np.concatenate([req.prompt, np.asarray(
+                        req.generated, np.int32)]), budget), np.int32)
+                proposals[req.rid] = d[:budget]
+        if not any(len(d) for d in proposals.values()):
+            return False
+
+        plans: dict[int, np.ndarray] = {}
+        for req in list(self.sched.decode_reqs()):
+            if req.slot is None or req.state is not RequestState.DECODE:
+                continue
+            drafts = proposals.get(req.rid, np.empty(0, np.int32))
+            granted = self.sched.grow_for_spec(req, now, len(drafts))
+            if granted is None:
+                continue                    # req itself was preempted
+            drafts = drafts[:granted]
+            # the speculative tail must only write private blocks: COW
+            # any shared/published block overlapping [n_ctx, n_ctx + k]
+            if not self._cow_for_range(req, req.n_ctx,
+                                       req.n_ctx + 1 + len(drafts)):
+                continue                    # req itself was preempted
+            plans[req.rid] = drafts
+        # growth/COW for a later slot may have preempted an earlier one —
+        # only requests still resident in a slot join the verify batch
+        reqs = [r for r in self.sched.decode_reqs() if r.rid in plans]
+        if not reqs:
+            return bool(plans)
+
+        kp1 = self.spec_k + 1
+        bs = self.pool.block_size
+        # one guaranteed-TRASH table column past nbmax: padded draft
+        # positions point there, so their scatter lands in the trash
+        # block even for a full-length sequence (a clamped lookup would
+        # alias its last LIVE block)
+        width = self.sched.nbmax + 1
+        pad_pos = self.sched.nbmax * bs
+        tokens = np.zeros((self.n_slots, kp1), np.int32)
+        positions = np.full((self.n_slots, kp1), pad_pos, np.int32)
+        bt = np.full((self.n_slots, width), TRASH_BLOCK, np.int32)
+        temps = np.zeros((self.n_slots,), np.float32)
+        topks = np.zeros((self.n_slots,), np.int32)
+        n_drafts = np.zeros((self.n_slots,), np.int32)
+        for req in reqs:
+            s, d = req.slot, plans[req.rid]
+            tokens[s, 0] = req.generated[-1]
+            tokens[s, 1:1 + len(d)] = d
+            positions[s, :1 + len(d)] = req.n_ctx + np.arange(
+                1 + len(d), dtype=np.int32)
+            bt[s, :self.sched.nbmax] = self.pool.table_row(
+                req.rid, self.sched.nbmax)
+            temps[s] = req.temperature
+            topks[s] = self._req_top_k(req)
+            n_drafts[s] = len(d)
+        out, n_acc = self._timed_spec_step(tokens, positions, bt, temps,
+                                           topks, n_drafts)
+        self.spec_steps += 1
+        self.spec_slot_steps += len(reqs)
+        now = self._now()
+        for req in reqs:
+            d = plans[req.rid]
+            acc = int(n_acc[req.slot])
+            emitted = out[req.slot, :acc + 1].tolist()
+            kept_drafts = 0
+            done = False
+            for i, tok in enumerate(emitted):
+                done = req.finished_by(int(tok), self.max_model_len)
+                req.generated.append(int(tok))
+                self.spec_emitted += 1
+                if i < acc:
+                    kept_drafts += 1    # this draft's KV row is resident
+                if done:
+                    break
+            # publish ONLY accepted tokens (the fed token + the kept
+            # draft prefix); the rejected tail's rows never reach the
+            # prefix cache, and retract frees any block they alone held
+            self.pool.commit(req.rid, req.n_ctx,
+                             [int(tokens[req.slot, 0])]
+                             + d[:kept_drafts].tolist())
+            self.requant_ops_performed += \
+                (1 + len(d)) * self._elems_per_token
+            self.requant_ops_wasted_spec += \
+                (len(d) - kept_drafts) * self._elems_per_token
+            self.spec_drafted += len(d)
+            self.spec_accepted += acc
+            req.n_ctx += 1 + kept_drafts
+            if done:
+                self.sched.finish(req, now)
+            else:
+                self.pool.retract(req.rid, req.n_ctx)
+            # the counterfactual a dequantize-per-step dataflow pays: the
+            # slot's whole live cache re-requantized once per VERIFY step
+            # (speculation amortizes it over up to K+1 emitted tokens)
+            self.requant_ops_avoided += req.n_ctx * self._elems_per_token
+        return True
+
     # -- shared step plumbing --------------------------------------------
 
     def _cow_for_range(self, req: Request, start: int, end: int) -> bool:
@@ -361,24 +543,45 @@ class ServingEngine:
     def _req_top_k(self, req: Request) -> int:
         return req.top_k if req.top_k > 0 else self.default_top_k
 
-    def _timed_step(self, tokens, positions, bt, temps, topks, last_idx):
+    def _dispatch(self, step_fn, tokens, positions, bt, temps, topks,
+                  mode_arg):
+        """Shared plumbing for the jitted decode/prefill and verify
+        steps: step counter, the top-k fast path, timing, host sync.
+
+        all-zero top-k (the greedy/full-vocab default) drops to the
+        sampler's None fast path: no top-k cutoff ever enters the hot
+        executable.  Otherwise the batch's max top-k rides along as the
+        STATIC k_cap (an O(V log k) lax.top_k, one extra jit variant per
+        distinct cap — bounded by the workload's top-k settings).
+        ``mode_arg`` is the per-step int payload: the last real row index
+        for sampled steps, the per-slot draft counts for verify steps.
+        """
         t0 = time.perf_counter()
         self._step_counter += 1
-        # all-zero top-k (the greedy/full-vocab default) drops to the
-        # sampler's None fast path: the per-step full-vocab jnp.sort never
-        # enters the hot executable.  Costs at most one extra jit variant
-        # per shape.
         topks = np.asarray(topks)
+        cap = int(topks.max()) if topks.any() else None
         topks_arg = jnp.asarray(topks) if topks.any() else None
-        toks, self.cache = self._step_fn(
+        out = step_fn(
             self.params, jnp.asarray(tokens), self.cache,
             jnp.asarray(positions), jnp.asarray(bt), jnp.asarray(temps),
-            topks_arg, jnp.asarray(last_idx, jnp.int32),
-            jnp.asarray(self._step_counter, jnp.uint32))
-        toks = np.asarray(toks)                  # host sync
+            topks_arg, jnp.asarray(mode_arg, jnp.int32),
+            jnp.asarray(self._step_counter, jnp.uint32), cap)
+        *out, self.cache = out
+        out = [np.asarray(o) for o in out]       # host sync
         self._step_times.setdefault(tuple(tokens.shape), []).append(
             time.perf_counter() - t0)
+        return out
+
+    def _timed_step(self, tokens, positions, bt, temps, topks, last_idx):
+        toks, = self._dispatch(self._step_fn, tokens, positions, bt,
+                               temps, topks, last_idx)
         return toks
+
+    def _timed_spec_step(self, tokens, positions, bt, temps, topks,
+                         n_drafts):
+        out, n_acc = self._dispatch(self._spec_fn, tokens, positions, bt,
+                                    temps, topks, n_drafts)
+        return out, n_acc
 
     # -- report -----------------------------------------------------------
 
@@ -406,6 +609,11 @@ class ServingEngine:
             # the prefix cache served from resident blocks (Table 5's
             # strongest case: quantized zero times instead of once)
             "requant_ops_avoided_prefix_cache": cache_avoid,
+            # ops spent quantizing speculative rows that were REJECTED —
+            # performed (they are inside requant_ops_performed), then
+            # rolled back before they could publish.  The price paid for
+            # the per-step amortization, reported instead of hidden.
+            "requant_ops_wasted_speculation": self.requant_ops_wasted_spec,
             "energy_uj_bit_shift": hwcost.estimate(
                 "bit_shifting", perf).energy_uj,
             "energy_uj_if_requant_per_step": hwcost.estimate(
@@ -432,6 +640,30 @@ class ServingEngine:
                 "resident_cached_blocks": self.pool.n_cached,
                 "quant_ops_avoided": cache_avoid,
             }
+        spec = None
+        if self.spec_k:
+            drafted, acc = self.spec_drafted, self.spec_accepted
+            spec = {
+                "spec_k": self.spec_k,
+                "drafter": type(self.drafter).__name__,
+                "verify_steps": self.spec_steps,
+                "fallback_decode_steps": self.decode_steps,
+                "drafted_tokens": drafted,
+                "accepted_tokens": acc,
+                "acceptance_rate": round(acc / drafted, 4) if drafted
+                else None,
+                "emitted_tokens": self.spec_emitted,
+                # emitted per (slot, verify step) pair — the amortization
+                # speculation buys a sequence (1.0 == plain decode;
+                # K+1 == every draft accepted).  Normalized per SLOT so
+                # batching can't inflate it past K+1.
+                "tokens_per_step": round(
+                    self.spec_emitted / self.spec_slot_steps, 4)
+                if self.spec_slot_steps else None,
+                "retracts": self.pool.stats.retracts,
+                "retracted_blocks": self.pool.stats.retracted_blocks,
+                "requant_ops_wasted": self.requant_ops_wasted_spec,
+            }
         return {
             "n_requests": len(done) + len(self.sched.waiting)
             + len(self.sched.active()),
@@ -442,7 +674,9 @@ class ServingEngine:
             "wall_s": round(wall, 4),
             "tokens_per_s": round(gen_tokens / wall, 2) if wall else None,
             "decode_steps": self.decode_steps,
+            "spec_steps": self.spec_steps,
             "prefill_chunks": self.prefill_chunks,
+            "speculative": spec,
             "ttft_s": {"p50": _pct(ttft, 50), "p99": _pct(ttft, 99)},
             "tpot_s": {"p50": _pct(tpot, 50), "p99": _pct(tpot, 99)},
             "e2e_s": {"p50": _pct(e2e, 50), "p99": _pct(e2e, 99)},
@@ -461,6 +695,8 @@ class ServingEngine:
                 "evictions": self.pool.stats.evictions,
                 "seq_evictions": self.pool.stats.seq_evictions,
                 "cache_evictions": self.pool.stats.cache_evictions,
+                "retracts": self.pool.stats.retracts,
+                "retracted_blocks": self.pool.stats.retracted_blocks,
                 "alloc_failures": self.pool.stats.alloc_failures,
             },
             "prefix_cache": cache,

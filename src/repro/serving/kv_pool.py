@@ -34,6 +34,10 @@ tier-1 property tests):
 * a block's scale exponent never changes while live or cached: codes are
   written once on the Eq.-1 grid chosen at alloc time and never
   requantized while resident (the paper's fewer-requant-ops thesis).
+* speculative rollback (:meth:`BlockPool.retract`, DESIGN §11) only ever
+  frees private, unpublished tail blocks: commit never covers rejected
+  drafts, so their rows can neither publish nor be shared — retracting
+  a published/shared or committed-into block raises.
 """
 from __future__ import annotations
 
@@ -60,6 +64,8 @@ class PoolStats:
     evictions: int = 0         # BLOCKS released by preemption
     seq_evictions: int = 0     # sequences preempted
     cache_evictions: int = 0   # idle cached blocks reclaimed (LRU)
+    retracts: int = 0          # speculative rollbacks that freed blocks
+    retracted_blocks: int = 0  # blocks freed by rollback (rejected rows)
     peak_live: int = 0         # max simultaneously-live blocks
     alloc_failures: int = 0    # alloc/extend requests refused
 
@@ -245,6 +251,48 @@ class BlockPool:
         new = [self._take(exp) for _ in range(need)]
         blocks.extend(new)
         return new
+
+    def retract(self, seq_id: int, n_tokens_keep: int) -> int:
+        """Speculative rollback (DESIGN §11): shrink ``seq_id``'s table to
+        the blocks covering its first ``n_tokens_keep`` rows, freeing the
+        tail blocks that held only retracted (rejected-draft) rows.
+        Returns the number of blocks freed.
+
+        The freed tail is by construction private and unpublished:
+        ``commit`` never covers speculative rows, publishing happens only
+        through commit, and sharing only through published keys — so a
+        rollback can never pull a block out from under another reader.  A
+        published or shared tail block means the caller committed rows it
+        is now trying to retract, and raises instead of corrupting; with
+        the prefix cache on, the sequence's committed chain position is
+        cross-checked too (:meth:`PrefixCache.assert_retractable`).
+        """
+        blocks = self.seq_blocks(seq_id)
+        keep = self.blocks_for(n_tokens_keep)
+        if keep > len(blocks):
+            raise BlockPoolError(
+                f"retract of seq {seq_id} to {n_tokens_keep} rows needs "
+                f"{keep} blocks but it holds {len(blocks)}")
+        tail = blocks[keep:]
+        if not tail:
+            return 0
+        for blk in tail:
+            if self.refcount[blk] != 1 or (
+                    self.cache is not None
+                    and self.cache.is_published(blk)):
+                raise BlockPoolError(
+                    f"retract would free shared/published block {blk} "
+                    f"(seq {seq_id}) — committed rows cannot be rolled "
+                    f"back")
+        if self.cache is not None:
+            self.cache.assert_retractable(seq_id, n_tokens_keep)
+        del blocks[keep:]
+        for blk in tail:
+            self._release(blk)
+        self.stats.frees += len(tail)
+        self.stats.retracts += 1
+        self.stats.retracted_blocks += len(tail)
+        return len(tail)
 
     def free_seq(self, seq_id: int) -> int:
         """Release all of ``seq_id``'s block references; raises on double

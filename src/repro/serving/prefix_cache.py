@@ -187,6 +187,17 @@ class PrefixCache:
             st.parent_key = key
             st.n_chained += 1
 
+    def assert_retractable(self, seq_id: int, n_tokens_keep: int) -> None:
+        """Rollback safety (DESIGN §11): a sequence may only retract rows
+        it never committed — the publish chain must not extend past the
+        keep point, or a rejected speculative token could already have
+        leaked into a content key."""
+        st = self._seq.get(seq_id)
+        if st is not None and st.pos > n_tokens_keep:
+            raise AssertionError(
+                f"seq {seq_id}: retract to {n_tokens_keep} rows but "
+                f"{st.pos} tokens already committed")
+
     def release(self, seq_id: int) -> None:
         """Drop the sequence's chain state (its published blocks keep
         their keys — that is the whole point)."""

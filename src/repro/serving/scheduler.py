@@ -209,14 +209,17 @@ class Scheduler:
         return [r for r in self.slots
                 if r is not None and r.state is RequestState.DECODE]
 
-    def grow_for_decode(self, req: Request, now: float) -> bool:
-        """Ensure ``req`` owns a block for KV row ``n_ctx`` (the incoming
-        token's position).  On pool pressure, evict the youngest-admitted
-        running request and retry; returns False iff ``req`` itself was
-        the youngest and got preempted (skip its decode this step)."""
+    def grow_for_decode(self, req: Request, now: float,
+                        n_tokens: int = 1) -> bool:
+        """Ensure ``req`` owns blocks for KV rows ``n_ctx .. n_ctx +
+        n_tokens - 1`` (the incoming token's position, plus the
+        speculative tail when ``n_tokens > 1``).  On pool pressure, evict
+        the youngest-admitted running request and retry; returns False
+        iff ``req`` itself was the youngest and got preempted (skip its
+        decode this step)."""
         while True:
             try:
-                self.pool.extend(req.rid, req.n_ctx + 1)
+                self.pool.extend(req.rid, req.n_ctx + n_tokens)
                 return True
             except BlockPoolError:
                 victim = max(self.active(),
@@ -224,6 +227,23 @@ class Scheduler:
                 self.preempt(victim, now)
                 if victim is req:
                     return False
+
+    def grow_for_spec(self, req: Request, now: float,
+                      n_draft: int) -> Optional[int]:
+        """Variable tokens-per-step growth for a speculative verify step
+        writing ``1 + n_draft`` KV rows (DESIGN §11).  The speculative
+        tail is OPTIONAL: under pool pressure the draft count degrades
+        (fewer tokens verified this step) before any peer is preempted —
+        only the mandatory single-token growth falls back to the §9
+        youngest-first preemption retry.  Returns the granted draft
+        count, or None iff ``req`` itself ended up preempted."""
+        bs = self.pool.block_size
+        have = self.pool.n_blocks_of(req.rid) * bs
+        spare = have + self.pool.n_free * bs - (req.n_ctx + 1)
+        k = max(min(n_draft, spare), 0)
+        if not self.grow_for_decode(req, now, n_tokens=1 + k):
+            return None
+        return k
 
     def cow_for_prefill(self, req: Request, logical_idx: int,
                         now: float):

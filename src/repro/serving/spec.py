@@ -1,0 +1,218 @@
+"""Speculative decoding over the write-once int8-KV pool (DESIGN §11).
+
+Verifying K drafted tokens in ONE paged step amortizes the per-step
+launch and weight-read cost that dominates decode — but it forces the
+paper's fewer-requant-ops dataflow to answer a question it never had:
+what happens to KV codes that were quantized *tentatively* and then
+rejected?  This module owns the two model-independent halves of the
+answer; the rollback-safe pool semantics (``BlockPool.retract``, commit
+publishing only accepted tokens) live in :mod:`repro.serving.kv_pool`.
+
+* **Drafters** (host-side, plain numpy).  The deterministic default is
+  :class:`NgramDrafter` — prompt-lookup/self-speculation: find the most
+  recent earlier occurrence of the longest current suffix n-gram in the
+  request's own token history and propose the tokens that followed it.
+  Model-free, zero extra forward passes, and exact on the repetitive
+  continuations greedy decoding converges to.  :class:`CallableDrafter`
+  is the pluggable small-draft-model hook.
+
+* **Verification** (:func:`verify_tokens`, pure jnp — fused into the
+  engine's jitted verify step so one dispatch both scores the (B, K+1)
+  chunk and resolves acceptance on device).  Greedy rows accept the
+  longest draft prefix that matches the running argmax chain and emit
+  the argmax correction at the first mismatch — token-identical to
+  non-speculative greedy decode by construction.  Sampled rows run
+  Leviathan/Chen-style rejection sampling: accept draft ``d_j`` with
+  probability ``min(1, p_j(d_j)/q_j(d_j))``; on the first rejection,
+  resample from the residual ``norm(max(p_j - q_j, 0))``; if every
+  draft survives, sample one bonus token from the last position.  The
+  self-drafter's q is a delta, for which the residual is exactly p with
+  the rejected token masked out — the target distribution is preserved.
+  (A non-delta draft model plugged through :class:`CallableDrafter`
+  gets the same masked-residual resample, the standard approximation
+  when only draft token ids — not full q distributions — cross the
+  host boundary.)
+
+Requant accounting stays honest (paper Table 5): every drafted row IS
+quantized when the verify chunk scatters into the pool, so rejected
+tokens' quantization ops count as *performed* — they are exactly the
+waste the paper's scheme minimizes elsewhere, and the engine reports
+them separately as ``requant_ops_wasted_speculation``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["NgramDrafter", "CallableDrafter", "resolve_drafter",
+           "apply_top_k", "verify_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# drafters (host-side)
+# ---------------------------------------------------------------------------
+
+class NgramDrafter:
+    """Model-free n-gram / prompt-lookup self-drafter (deterministic).
+
+    Proposes the ``k`` tokens that followed the most recent earlier
+    occurrence of the longest matching suffix n-gram (``max_ngram`` down
+    to ``min_ngram``) of the request's own history (prompt + generated).
+    No extra forward passes, no state: determinism is what makes greedy
+    speculative decode reproducible run to run.
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= max_ngram, got "
+                f"[{min_ngram}, {max_ngram}]")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def draft(self, history, k: int) -> np.ndarray:
+        """Up to ``k`` proposed continuation tokens ([] when no n-gram of
+        the history's suffix recurs earlier in the history)."""
+        h = np.asarray(history, np.int32)
+        n_hist = len(h)
+        if k < 1 or n_hist < self.min_ngram + 1:
+            return np.empty(0, np.int32)
+        for n in range(min(self.max_ngram, n_hist - 1),
+                       self.min_ngram - 1, -1):
+            suffix = h[n_hist - n:]
+            # windows over h[:-1]: candidate starts 0..n_hist-1-n, which
+            # excludes the suffix itself and guarantees a continuation
+            win = np.lib.stride_tricks.sliding_window_view(h[:-1], n)
+            hits = np.flatnonzero((win == suffix).all(axis=1))
+            if len(hits):
+                i = int(hits[-1])              # most recent occurrence
+                return h[i + n:i + n + k].copy()
+        return np.empty(0, np.int32)
+
+
+class CallableDrafter:
+    """Pluggable small-draft-model hook: wraps ``fn(history, k)`` -> token
+    ids.  The callable may run an actual draft model (or an oracle in
+    tests); whatever it proposes is truncated to ``k`` and verified by
+    the target model — the engine's rollback machinery guarantees wrong
+    drafts never publish to the prefix cache or corrupt the pool."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def draft(self, history, k: int) -> np.ndarray:
+        out = np.asarray(self.fn(history, k), np.int32).reshape(-1)
+        return out[:k]
+
+
+def resolve_drafter(spec) -> object:
+    """'ngram' | any object with a ``draft(history, k)`` method."""
+    if isinstance(spec, str):
+        if spec == "ngram":
+            return NgramDrafter()
+        raise ValueError(
+            f"unknown drafter {spec!r} (have 'ngram'; or pass an object "
+            f"with a draft(history, k) method, e.g. CallableDrafter)")
+    if not callable(getattr(spec, "draft", None)):
+        raise TypeError(f"drafter {spec!r} has no draft(history, k) method")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# device-side verification (pure jnp, fused into the engine's jit)
+# ---------------------------------------------------------------------------
+
+def apply_top_k(logits: jax.Array, top_k: jax.Array,
+                k_cap: Optional[int] = None) -> jax.Array:
+    """Mask logits outside each row's top-k (top_k == 0 keeps the row's
+    full vocabulary).  ``top_k`` broadcasts over ``logits.shape[:-1]``.
+
+    Exactly-k semantics: ties at the k-th value break by lax.top_k's
+    lowest-index-first order, so the candidate set never exceeds k (the
+    old ``logits < kth`` comparison kept EVERY token tied at the
+    threshold).  ``k_cap`` is a STATIC host-known bound on per-row k, so
+    the partial sort is O(V log k_cap) instead of the full-vocab
+    O(V log V) sort in the decode hot loop; it must dominate every
+    per-row ``top_k`` (rows above it are effectively capped).
+    """
+    v = logits.shape[-1]
+    cap = v if k_cap is None else max(min(int(k_cap), v), 1)
+    flat = logits.reshape(-1, v)
+    tk = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32),
+                          logits.shape[:-1]).reshape(-1)
+    _, idx = jax.lax.top_k(flat, cap)                      # (R, cap)
+    keep = jnp.arange(cap)[None, :] < tk[:, None]          # exactly k cols
+    mask = jnp.zeros(flat.shape, bool).at[
+        jnp.arange(flat.shape[0])[:, None], idx].set(keep)
+    out = jnp.where(mask | (tk <= 0)[:, None], flat, -jnp.inf)
+    return out.reshape(logits.shape)
+
+
+def verify_tokens(logits: jax.Array, tokens: jax.Array, n_drafts: jax.Array,
+                  key: jax.Array, temperatures: jax.Array,
+                  top_k: Optional[jax.Array] = None,
+                  k_cap: Optional[int] = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Resolve one speculative verify chunk on device.
+
+    logits (B, K+1, V) from feeding ``tokens`` (B, K+1) — row layout
+    ``[last committed token, d_1, ..., d_K]`` (positions past
+    ``n_drafts[b]`` are padding and ignored); n_drafts (B,) int32;
+    temperatures (B,) — 0 selects the greedy argmax chain for that row;
+    top_k (B,) with static ``k_cap`` as in :func:`apply_top_k`.
+
+    Returns ``(out_tokens (B, K+1), n_accepted (B,))``: row ``b`` emits
+    ``out_tokens[b, :n_accepted[b] + 1]`` — the accepted draft prefix
+    plus one correction (first rejection) or bonus (all accepted) token.
+    Greedy rows reproduce non-speculative greedy decode token for token.
+    """
+    b, kp1, v = logits.shape
+    k = kp1 - 1
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)                   # (B, K+1)
+    drafts = tokens[:, 1:]                                 # (B, K)
+    proc = apply_top_k(logits, top_k[:, None], k_cap) \
+        if top_k is not None else logits
+    scaled = proc / jnp.maximum(temperatures, 1e-6)[:, None, None]
+    logp = jax.nn.log_softmax(scaled, axis=-1)             # (B, K+1, V)
+    ku, kr, kb = jax.random.split(key, 3)
+
+    valid = jnp.arange(k)[None, :] < n_drafts[:, None]     # (B, K)
+    p_draft = jnp.exp(jnp.take_along_axis(
+        logp[:, :k], drafts[..., None], axis=-1))[..., 0]  # (B, K)
+    accept = jnp.where((temperatures <= 0)[:, None],
+                       drafts == greedy[:, :k],
+                       jax.random.uniform(ku, (b, k)) < p_draft)
+    ok = (accept & valid).astype(jnp.int32)
+    n_acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)       # (B,)
+
+    # residual resample per draft position (delta-q: p minus the rejected
+    # token, renormalized) and a bonus draw per position; the one draw
+    # the row actually needs is selected below — fixed shapes keep this
+    # a single fused executable
+    res_logp = jnp.where(jax.nn.one_hot(drafts, v, dtype=bool),
+                         -jnp.inf, logp[:, :k])
+    resample = jax.random.categorical(
+        kr, res_logp.reshape(b * k, v)).reshape(b, k) if k else \
+        jnp.zeros((b, 0), jnp.int32)
+    bonus = jax.random.categorical(
+        kb, scaled.reshape(b * kp1, v)).reshape(b, kp1)
+
+    rows = jnp.arange(b)
+    rejected = n_acc < n_drafts
+    rep_sample = jnp.where(
+        rejected & (k > 0),
+        resample[rows, jnp.minimum(n_acc, max(k - 1, 0))],
+        bonus[rows, n_acc])
+    rep = jnp.where(temperatures <= 0, greedy[rows, n_acc],
+                    rep_sample).astype(jnp.int32)
+
+    j = jnp.arange(kp1)[None, :]
+    d_pad = jnp.concatenate([drafts, jnp.zeros((b, 1), drafts.dtype)],
+                            axis=1)
+    out = jnp.where(j < n_acc[:, None], d_pad,
+                    jnp.where(j == n_acc[:, None], rep[:, None], 0))
+    return out.astype(jnp.int32), n_acc.astype(jnp.int32)

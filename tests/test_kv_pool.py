@@ -143,3 +143,78 @@ def test_evictions_counted_block_granular():
     assert pool.stats.seq_evictions == 2
     assert pool.stats.cache_evictions == 0         # no prefix cache here
     pool.check_invariants()
+
+
+def test_retract_frees_speculative_tail():
+    """DESIGN §11 rollback: retract shrinks the table to the committed
+    rows, returns the rejected tail to the free stack, and is a counted,
+    idempotent no-op once the tail is gone."""
+    pool = BlockPool(num_blocks=10, block_size=4)
+    pool.alloc_seq(0, 6)                   # 2 blocks of committed rows
+    pool.extend(0, 14)                     # +2 speculative tail blocks
+    free_before = pool.n_free
+    assert pool.retract(0, 7) == 2         # keep 7 rows -> 2 blocks
+    assert pool.n_blocks_of(0) == 2
+    assert pool.n_free == free_before + 2
+    assert pool.stats.retracts == 1 and pool.stats.retracted_blocks == 2
+    pool.check_invariants()
+    assert pool.retract(0, 7) == 0         # nothing left to roll back
+    assert pool.stats.retracts == 1        # no-ops are not counted
+    with pytest.raises(BlockPoolError, match="needs"):
+        pool.retract(0, 99)                # cannot retract UP
+    with pytest.raises(BlockPoolError, match="unknown"):
+        pool.retract(5, 0)
+    pool.free_seq(0)
+    pool.check_invariants()
+
+
+def test_random_trace_with_retract_invariants():
+    """Interleaved alloc/extend/retract/free/evict traces: rollback must
+    never break the free/live partition or the refcounts (cache-less
+    pool; the publish-interaction traces live in test_prefix_cache)."""
+    for seed in range(12):
+        rng = np.random.default_rng(seed)
+        pool = BlockPool(num_blocks=int(rng.integers(4, 20)),
+                         block_size=int(rng.integers(1, 6)), scale_exp=4)
+        live: dict[int, int] = {}          # sid -> committed rows
+        spec: dict[int, int] = {}          # sid -> grown (spec) rows
+        next_sid = 0
+        for _ in range(80):
+            op = int(rng.integers(5))
+            if op == 0:
+                sid, next_sid = next_sid, next_sid + 1
+                ntok = int(rng.integers(1, 24))
+                if pool.can_alloc(pool.blocks_for(ntok)):
+                    pool.alloc_seq(sid, ntok)
+                    live[sid] = ntok
+                    spec[sid] = ntok
+            elif op == 1 and live:         # speculative growth
+                sid = int(rng.choice(list(live)))
+                want = spec[sid] + int(rng.integers(1, 8))
+                try:
+                    pool.extend(sid, want)
+                    spec[sid] = max(spec[sid], want)
+                except BlockPoolError:
+                    pass
+            elif op == 2 and live:         # rollback to committed rows
+                sid = int(rng.choice(list(live)))
+                keep = int(rng.integers(live[sid], spec[sid] + 1))
+                freed = pool.retract(sid, keep)
+                assert pool.n_blocks_of(sid) == pool.blocks_for(
+                    max(keep, 1)) or keep == 0
+                assert freed >= 0
+                spec[sid] = max(keep, live[sid])
+                live[sid] = min(live[sid], max(keep, 1))
+            elif op == 3 and live:
+                sid = int(rng.choice(list(live)))
+                pool.free_seq(sid)
+                del live[sid], spec[sid]
+            elif op == 4 and live:
+                sid = int(rng.choice(list(live)))
+                pool.evict(sid)
+                del live[sid], spec[sid]
+            pool.check_invariants()
+        for sid in list(live):
+            pool.free_seq(sid)
+        pool.check_invariants()
+        assert pool.n_live == 0

@@ -280,3 +280,136 @@ def test_concurrent_identical_prompts_publish_once():
     plan = pool.plan_seq(len(feed), token_ids=feed)
     assert plan.hit_blocks == a                    # hits the first copy
     pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# speculative rollback (DESIGN §11)
+# ---------------------------------------------------------------------------
+
+def test_retracted_speculative_rows_never_publish():
+    """The §11 rollback contract: speculative tail blocks carry no
+    content key (commit never covered them), retract returns them to the
+    FREE stack — not the idle cache — and the cache's key maps never see
+    a rejected token."""
+    pool = _pool()
+    feed = np.arange(2 * BS, dtype=np.int32)
+    _alloc_committed(pool, 0, feed)                # 2 published blocks
+    published_before = len(pool.cache)
+    # speculative growth: 2 extra blocks' worth of drafted rows, written
+    # but NEVER committed
+    tail = pool.extend(0, 4 * BS)
+    assert len(tail) == 2
+    for blk in tail:
+        assert not pool.cache.is_published(blk)
+    freed = pool.retract(0, 2 * BS)                # reject everything
+    assert freed == 2
+    assert len(pool.cache) == published_before     # no new keys, ever
+    assert all(not pool.cache.is_published(b) for b in tail)
+    assert all(b in pool._free for b in tail)      # free, not idle-cached
+    pool.check_invariants()
+    pool.free_seq(0)
+    pool.check_invariants()
+
+
+def test_retract_refuses_committed_and_shared_rows():
+    """Rollback must never touch committed state: retracting past the
+    commit point trips the chain-state cross-check, and a shared
+    (published, refcount > 1) tail block refuses block-level."""
+    pool = _pool()
+    feed = np.arange(3 * BS, dtype=np.int32)
+    _alloc_committed(pool, 0, feed)                # 3 committed blocks
+    # published-block guard: the full committed tail block refuses
+    with pytest.raises(BlockPoolError, match="shared/published"):
+        pool.retract(0, 2 * BS)
+    # chain-state guard: a PARTIAL tail block is unpublished, so only the
+    # commit-position cross-check can catch rows already committed there
+    feed9 = np.arange(100, 100 + 2 * BS + 2, dtype=np.int32)
+    _alloc_committed(pool, 9, feed9)
+    with pytest.raises(AssertionError, match="already committed"):
+        pool.retract(9, 2 * BS)
+    pool.free_seq(9)
+    # shared-block guard: seq 1 attaches the published chain, then tries
+    # to retract INTO it (simulating a caller bug) — the block-level
+    # refcount/published check refuses before anything mutates
+    plan = pool.plan_seq(len(feed), token_ids=feed)
+    pool.alloc_seq(1, len(feed), plan=plan)
+    assert plan.hit_tokens > 0
+    with pytest.raises(BlockPoolError, match="shared/published"):
+        pool.retract(1, 0)
+    pool.check_invariants()
+    pool.free_seq(0)
+    pool.free_seq(1)
+    pool.check_invariants()
+
+
+def test_interleaved_commit_retract_traces_keep_invariants():
+    """Speculate -> commit the accepted prefix -> retract the rejected
+    tail, interleaved with sharing and eviction: refcounts stay exact,
+    published keys always re-derive from committed tokens only, and idle
+    parking/LRU reclaim never sees a speculative block."""
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        pool = _pool(num_blocks=int(rng.integers(12, 30)))
+        shared = rng.integers(0, 40, size=4 * BS).astype(np.int32)
+        live: dict[int, dict] = {}
+        streams: list[dict] = []       # every seq ever admitted (kept
+        next_sid = 0                   # after free: its keys may survive)
+        for _ in range(70):
+            op = int(rng.integers(4))
+            if op == 0:                    # admit (maybe shared prefix)
+                sid, next_sid = next_sid, next_sid + 1
+                pfx = int(rng.integers(0, len(shared) + 1))
+                tail = rng.integers(40, 80, size=int(
+                    rng.integers(1, 8))).astype(np.int32)
+                feed = np.concatenate([shared[:pfx], tail])
+                plan = pool.plan_seq(len(feed), token_ids=feed)
+                if plan.feasible:
+                    pool.alloc_seq(sid, len(feed), plan=plan)
+                    hit = min(plan.hit_tokens, len(feed) - 1)
+                    live[sid] = {"feed": list(feed), "written": hit}
+                    streams.append(live[sid])
+            elif op == 1 and live:         # prefill a chunk (commits)
+                sid = int(rng.choice(list(live)))
+                s = live[sid]
+                if s["written"] < len(s["feed"]):
+                    s["written"] = _prefill(
+                        pool, sid, np.asarray(s["feed"], np.int32),
+                        s["written"], int(rng.integers(1, 9)))
+            elif op == 2 and live:         # speculative verify round
+                sid = int(rng.choice(list(live)))
+                s = live[sid]
+                if s["written"] < len(s["feed"]):
+                    continue               # still prefilling
+                k = int(rng.integers(1, 6))
+                try:
+                    pool.extend(sid, len(s["feed"]) + k)
+                except BlockPoolError:
+                    continue               # pressure: engine degrades k
+                acc = int(rng.integers(0, k + 1))   # accepted drafts
+                toks = [int(t) for t in rng.integers(40, 80, size=acc)]
+                pool.commit(sid, len(s["feed"]), toks)
+                s["feed"].extend(toks)
+                s["written"] += acc
+                pool.retract(sid, len(s["feed"]))
+            elif op == 3 and live:         # finish or preempt
+                sid = int(rng.choice(list(live)))
+                (pool.free_seq if rng.integers(2) else pool.evict)(sid)
+                del live[sid]
+            pool.check_invariants()
+        # every published key must re-derive from some sequence's
+        # committed token stream prefix — never from a rejected draft
+        legal = set()
+        for s in streams:
+            parent = ROOT_KEY
+            toks = np.asarray(s["feed"], np.int32)
+            for b in range(s["written"] // BS):
+                parent = block_key(parent, toks[b * BS:(b + 1) * BS], 4)
+                legal.add(parent)
+        for key in pool.cache._by_key:
+            assert key in legal, \
+                "published key not derivable from any COMMITTED token " \
+                "stream — a rejected speculative row leaked into the cache"
+        for sid in list(live):
+            pool.free_seq(sid)
+        pool.check_invariants()
+        assert pool.n_live == 0

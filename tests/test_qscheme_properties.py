@@ -94,3 +94,32 @@ def test_int8_matmul_bias_shift_sign_property(n_b, relu, seed):
     got = ops.int8_matmul(x, w, b, spec, relu=relu)
     ref = int_linear(x, w, b, spec, apply_relu=relu)
     assert jnp.array_equal(got, ref), f"bias_shift={spec.bias_shift}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(shift=st.integers(-8, -1), seed=st.integers(0, 2**16))
+def test_shift_requant_negative_saturates_instead_of_wrapping(shift, seed):
+    """ISSUE 5 regression: an accumulator near 2^31 / 2^|shift| must
+    SATURATE through the negative-shift (left-shift) path.  The old
+    ``acc << -shift`` wrapped int32 BEFORE the clip, so a large positive
+    accumulator came out as -128 (sign-flipped codes) instead of 127 —
+    both the jnp reference and the Pallas epilogue helper are covered."""
+    from repro.kernels.int8_matmul import _shift_requant_i32
+    s = -shift
+    edge = (2**31 - 1) >> s             # largest magnitude that shifts exact
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(np.concatenate([
+        rng.integers(edge - 4, 2**31 - 1, size=64),     # wrap zone
+        -rng.integers(edge - 4, 2**31 - 1, size=64),
+        rng.integers(-(1 << 12), 1 << 12, size=64),     # exact zone
+    ]), jnp.int32)
+    ref = jnp.clip(
+        jnp.round(acc.astype(jnp.float64) * 2.0 ** s), -128, 127
+    ).astype(jnp.int8)
+    got = Q.shift_requant(acc, shift)
+    assert jnp.array_equal(got, ref), f"shift={shift}"
+    got_k = _shift_requant_i32(acc, shift, -128, 127).astype(jnp.int8)
+    assert jnp.array_equal(got_k, ref), f"kernel helper, shift={shift}"
+    # the old bug, pinned: the largest positive accumulators must map to
+    # +127, never to the negative rail
+    assert int(got[0]) == 127 and int(got[64]) == -128

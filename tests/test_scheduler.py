@@ -249,3 +249,116 @@ def test_chunk_bucket_bounded_pow2():
             seen.add(b)
         assert len(seen) <= chunk.bit_length()     # bounded compile set
         assert chunk_bucket(5 * chunk, chunk) == chunk
+
+
+def test_grow_for_spec_degrades_before_preempting():
+    """DESIGN §11 variable growth: the speculative tail is optional — a
+    draft count the pool cannot hold shrinks to what fits, WITHOUT
+    preempting a peer; only the mandatory single-token growth may."""
+    pool = BlockPool(num_blocks=9, block_size=4)   # 8 usable = 32 rows
+    sched = Scheduler(pool, n_slots=2, chunk=16, max_model_len=32)
+    pool.alloc_seq(0, 13)     # 4 blocks, 3 spare rows in the last
+    pool.alloc_seq(1, 13)     # 4 blocks -> 8 live, 0 free
+    ra = Request(rid=0, prompt=np.arange(12, dtype=np.int32),
+                 max_new_tokens=8)
+    rb = Request(rid=1, prompt=np.arange(12, dtype=np.int32),
+                 max_new_tokens=8)
+    for req, slot, t in ((ra, 0, 0.0), (rb, 1, 0.1)):
+        req.state = RequestState.DECODE
+        req.slot = slot
+        req.n_ctx = 13
+        req.t_admit = t
+        sched.slots[slot] = req
+    # seq 0 wants 6 drafts; its own last block has 3 spare rows (one of
+    # which the mandatory fed token takes) and the pool has no free
+    # blocks -> degrade to 2 drafts, NO eviction
+    granted = sched.grow_for_spec(ra, 1.0, 6)
+    assert granted == 2
+    assert pool.stats.seq_evictions == 0
+    assert sched.slots[1] is rb                    # peer untouched
+    assert pool.n_blocks_of(0) == 4                # no new block needed
+    pool.check_invariants()
+
+
+def test_grow_for_spec_mandatory_row_preempts_youngest():
+    """When even the non-speculative +1 row needs a block, grow_for_spec
+    falls back to the §9 youngest-first preemption retry."""
+    pool = BlockPool(num_blocks=5, block_size=4)   # 4 usable = 16 rows
+    sched = Scheduler(pool, n_slots=2, chunk=16, max_model_len=16)
+    pool.alloc_seq(0, 8)      # 2 blocks
+    pool.alloc_seq(1, 8)      # 2 blocks -> pool exhausted
+    old = Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                  max_new_tokens=8)
+    young = Request(rid=1, prompt=np.arange(8, dtype=np.int32),
+                    max_new_tokens=8)
+    for req, slot, t in ((old, 0, 0.0), (young, 1, 0.5)):
+        req.state = RequestState.DECODE
+        req.slot = slot
+        req.n_ctx = 8
+        req.t_admit = t
+        sched.slots[slot] = req
+    granted = sched.grow_for_spec(old, 1.0, 3)
+    # the youngest was evicted to make room for the OLD request's row;
+    # the draft count was computed under pressure (0 spare pre-eviction)
+    assert granted == 0
+    assert young.state is RequestState.WAITING
+    assert young.preemptions == 1
+    assert pool.n_blocks_of(0) == 3
+    pool.check_invariants()
+
+
+def test_cow_failure_retry_under_pool_pressure():
+    """ISSUE 5 satellite: the CoW-failure retry path.  A COW that cannot
+    get a destination block under pool pressure preempts the youngest
+    runner and retries; when the writer itself is youngest, it returns
+    None (the engine's zero-progress contract) and its state flips —
+    which is exactly what the engine's prefill progress guard relies on."""
+    # 6 usable blocks, BS=4.  Seq 0 publishes a 3-block prefix; seq 1
+    # attaches all 3 shared blocks (fully-cached feed) and must COW the
+    # last one to re-feed — after fillers exhaust the free list.
+    pool = BlockPool(num_blocks=7, block_size=4, prefix_cache=True)
+    sched = Scheduler(pool, n_slots=2, chunk=16, max_model_len=24)
+    feed = np.arange(12, dtype=np.int32)
+    pool.alloc_seq(0, 12)
+    pool.commit(0, 0, feed)                        # 3 published blocks
+    pool.alloc_seq(99, 8)                          # filler: 2 blocks
+    plan = pool.plan_seq(len(feed), token_ids=feed)
+    assert plan.feasible and len(plan.hit_blocks) == 3
+    pool.alloc_seq(1, 12, plan=plan)               # pure attach: no alloc
+    pool.alloc_seq(98, 4)                          # filler: last free block
+    assert pool.n_free == 0
+    owner = Request(rid=0, prompt=feed.copy(), max_new_tokens=4)
+    writer = Request(rid=1, prompt=feed.copy(), max_new_tokens=4)
+    for req, slot, t, state in ((owner, 0, 0.0, RequestState.DECODE),
+                                (writer, 1, 0.2, RequestState.PREFILL)):
+        req.state = state
+        req.slot = slot
+        req.n_ctx = 12 if req is owner else 11
+        req.t_admit = t
+        sched.slots[slot] = req
+    # the writer is the YOUNGEST active: the CoW retry must preempt the
+    # writer ITSELF and report None — never loop forever
+    assert not pool.block_writable(1, 2)
+    out = sched.cow_for_prefill(writer, 2, 1.0)
+    assert out is None
+    assert writer.state is RequestState.WAITING
+    assert writer.preemptions == 1
+    assert owner.slot == 0                         # older peer survived
+    pool.check_invariants()
+    # with pressure relieved, the SAME shared-attach + COW succeeds and
+    # yields a fresh private destination (the source keeps its key)
+    pool.free_seq(99)                              # 2 blocks back
+    plan = pool.plan_seq(len(feed), token_ids=feed)
+    pool.alloc_seq(2, 12, plan=plan)
+    re_writer = Request(rid=2, prompt=feed.copy(), max_new_tokens=4)
+    re_writer.state = RequestState.PREFILL
+    re_writer.slot = 1
+    re_writer.n_ctx = 11
+    re_writer.t_admit = 2.0
+    sched.slots[1] = re_writer
+    pair = sched.cow_for_prefill(re_writer, 2, 2.0)
+    assert pair is not None
+    src_blk, dst_blk = pair
+    assert src_blk != dst_blk and pool.block_writable(2, 2)
+    assert pool.cache.is_published(src_blk)
+    pool.check_invariants()

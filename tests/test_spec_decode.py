@@ -1,0 +1,378 @@
+"""Speculative decoding over the write-once int8-KV pool (DESIGN §11).
+
+The load-bearing guarantee, held end-to-end: GREEDY speculative decode is
+TOKEN-IDENTICAL to the non-speculative engine on the same pool/workload —
+including through recompute preemption and prefix-cache sharing — and a
+rejected draft's KV rows never publish to the prefix cache (commit covers
+only accepted tokens; ``BlockPool.retract`` frees the rejected tail).
+Plus: drafter units, the fused verifier's acceptance semantics, seed
+reproducibility with sampling on, the ISSUE-5 top-k tie regression, and
+the prefill zero-progress guard.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.qmodel import QuantContext, QuantMode
+from repro.models import model as M
+from repro.serving import CallableDrafter, NgramDrafter, Request, \
+    ServingEngine
+from repro.serving.engine import sample_tokens
+from repro.serving.spec import apply_top_k, resolve_drafter, verify_tokens
+
+CTX = QuantContext(mode=QuantMode.FP)
+
+
+def _cfg(**kw):
+    cfg = get_smoke_config("qwen3_1_7b").scaled(dtype="float32")
+    return dataclasses.replace(cfg, kv_cache_bits=8, **kw)
+
+
+def _params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _workload(rng, n, vocab, *, p_lo=5, p_hi=20, g_lo=4, g_hi=14):
+    return [Request(
+        rid=i, prompt=rng.integers(0, vocab, size=int(
+            rng.integers(p_lo, p_hi))).astype(np.int32),
+        max_new_tokens=int(rng.integers(g_lo, g_hi))) for i in range(n)]
+
+
+def _outputs_equal(a: dict, b: dict):
+    assert a.keys() == b.keys()
+    for rid in a:
+        assert np.array_equal(a[rid], b[rid]), \
+            f"req {rid}: {a[rid].tolist()} vs {b[rid].tolist()}"
+
+
+# -- drafters ---------------------------------------------------------------
+
+def test_ngram_drafter_prompt_lookup():
+    d = NgramDrafter(max_ngram=3, min_ngram=1)
+    # history ends in [7, 8]; the earlier [7, 8] was followed by [9, 1, 2]
+    hist = np.asarray([7, 8, 9, 1, 2, 7, 8], np.int32)
+    assert d.draft(hist, 3).tolist() == [9, 1, 2]
+    # a longer ask keeps following the matched continuation (which here
+    # walks back into the repeated suffix itself)
+    assert d.draft(hist, 5).tolist() == [9, 1, 2, 7, 8]
+    # most RECENT occurrence wins: the later [5] is followed by 6
+    hist = np.asarray([5, 4, 5, 6, 5], np.int32)
+    assert d.draft(hist, 1).tolist() == [6]
+    # no recurring suffix -> no draft
+    assert d.draft(np.asarray([1, 2, 3], np.int32), 4).size == 0
+    assert d.draft(np.asarray([1], np.int32), 4).size == 0
+    assert d.draft(hist, 0).size == 0
+
+
+def test_ngram_drafter_prefers_longest_ngram():
+    # suffix [2, 3]: the 2-gram match (followed by 9) must beat the more
+    # recent 1-gram match of [3] (followed by 7)
+    hist = np.asarray([2, 3, 9, 3, 7, 2, 3], np.int32)
+    assert NgramDrafter(max_ngram=3).draft(hist, 1).tolist() == [9]
+    assert NgramDrafter(max_ngram=1).draft(hist, 1).tolist() == [7]
+
+
+def test_resolve_drafter():
+    assert isinstance(resolve_drafter("ngram"), NgramDrafter)
+    hook = CallableDrafter(lambda h, k: [1, 2, 3, 4])
+    assert resolve_drafter(hook) is hook
+    assert hook.draft([0], 2).tolist() == [1, 2]
+    with pytest.raises(ValueError, match="unknown drafter"):
+        resolve_drafter("beam")
+    with pytest.raises(TypeError, match="draft"):
+        resolve_drafter(object())
+
+
+# -- fused verifier ---------------------------------------------------------
+
+def _logits_for(chain, v=16, peak=8.0):
+    """(len(chain), V) logits whose argmax at position j is chain[j]."""
+    out = np.zeros((len(chain), v), np.float32)
+    for j, t in enumerate(chain):
+        out[j, t] = peak
+    return out
+
+
+def test_verify_tokens_greedy_accepts_matching_prefix():
+    v = 16
+    # target chain after each fed token: 3, 5, 7, 2, 9
+    logits = jnp.asarray(_logits_for([3, 5, 7, 2, 9], v))[None]
+    key = jax.random.PRNGKey(0)
+    temps = jnp.zeros((1,))
+    # drafts [3, 5, 1, 4]: first two match, 1 != 7 -> n_acc = 2, the
+    # correction is the argmax at the mismatch position (7)
+    tokens = jnp.asarray([[0, 3, 5, 1, 4]], jnp.int32)
+    out, n_acc = verify_tokens(logits, tokens, jnp.asarray([4]), key, temps)
+    assert int(n_acc[0]) == 2
+    assert out[0, :3].tolist() == [3, 5, 7]
+    # all four accepted -> bonus token from the last position (9)
+    tokens = jnp.asarray([[0, 3, 5, 7, 2]], jnp.int32)
+    out, n_acc = verify_tokens(logits, tokens, jnp.asarray([4]), key, temps)
+    assert int(n_acc[0]) == 4
+    assert out[0, :5].tolist() == [3, 5, 7, 2, 9]
+    # immediate mismatch -> plain-decode behavior (1 emitted)
+    tokens = jnp.asarray([[0, 1, 5, 7, 2]], jnp.int32)
+    out, n_acc = verify_tokens(logits, tokens, jnp.asarray([4]), key, temps)
+    assert int(n_acc[0]) == 0 and out[0, 0] == 3
+    # n_drafts caps acceptance even when later drafts would match
+    tokens = jnp.asarray([[0, 3, 5, 7, 2]], jnp.int32)
+    out, n_acc = verify_tokens(logits, tokens, jnp.asarray([1]), key, temps)
+    assert int(n_acc[0]) == 1 and out[0, :2].tolist() == [3, 5]
+
+
+def test_verify_tokens_sampling_rejects_outside_support():
+    """With temperature on, a draft with ~zero target probability must be
+    rejected and the resample must come from the remaining support."""
+    v = 8
+    logits = np.full((1, 3, v), -30.0, np.float32)
+    logits[0, :, 2] = 5.0                   # nearly all mass on token 2
+    logits[0, :, 3] = 4.0                   # the rest on token 3
+    temps = jnp.ones((1,))
+    for seed in range(8):
+        out, n_acc = verify_tokens(
+            jnp.asarray(logits), jnp.asarray([[0, 6, 6]], jnp.int32),
+            jnp.asarray([2]), jax.random.PRNGKey(seed), temps)
+        assert int(n_acc[0]) == 0           # p(6) ~ 0 -> rejected
+        assert int(out[0, 0]) in (2, 3)     # residual: support minus draft
+    # a draft ON the dominant token is accepted almost surely
+    acc = [int(verify_tokens(
+        jnp.asarray(logits), jnp.asarray([[0, 2, 2]], jnp.int32),
+        jnp.asarray([2]), jax.random.PRNGKey(s), temps)[1][0])
+        for s in range(8)]
+    assert np.mean(acc) > 1.5
+
+
+# -- sampler regression (ISSUE 5 satellite) ---------------------------------
+
+def test_top_k_tie_semantics_exactly_k():
+    """Tied logits at the top-k threshold: the candidate set must hold
+    EXACTLY k tokens (the old ``logits < kth`` comparison kept every tied
+    token, so k=2 over [1, 1, 1, 0] sampled from three candidates)."""
+    logits = jnp.asarray([[1.0, 1.0, 1.0, 0.0]])
+    masked = apply_top_k(logits, jnp.asarray([2]), k_cap=2)
+    assert int(jnp.sum(jnp.isfinite(masked))) == 2
+    seen = set()
+    for s in range(40):
+        tok = sample_tokens(logits, jax.random.PRNGKey(s),
+                            jnp.asarray([1.0]), top_k=jnp.asarray([2]),
+                            k_cap=2)
+        seen.add(int(tok[0]))
+    assert seen == {0, 1}                   # lowest-index ties win
+    # k_cap=None (direct callers) still enforces exactly-k
+    masked = apply_top_k(logits, jnp.asarray([2]))
+    assert int(jnp.sum(jnp.isfinite(masked))) == 2
+
+
+def test_top_k_zero_keeps_full_vocab_and_greedy_rows_unaffected():
+    logits = jnp.asarray([[0.3, 0.1, 0.9, 0.2], [5.0, 1.0, 0.0, 0.0]])
+    masked = apply_top_k(logits, jnp.asarray([0, 1]), k_cap=1)
+    assert bool(jnp.all(jnp.isfinite(masked[0])))
+    assert int(jnp.sum(jnp.isfinite(masked[1]))) == 1
+    tok = sample_tokens(logits, jax.random.PRNGKey(0),
+                        jnp.asarray([0.0, 0.0]), top_k=jnp.asarray([0, 1]),
+                        k_cap=1)
+    assert tok.tolist() == [2, 0]           # greedy rows ignore the mask
+
+
+# -- engine end-to-end: the token-identity guarantee ------------------------
+
+def test_spec_greedy_token_identical_to_plain_engine():
+    cfg = _cfg()
+    params = _params(cfg)
+    mk = lambda: _workload(np.random.default_rng(0), 6, cfg.vocab_size)
+    plain = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                          max_model_len=48, chunk=8)
+    plain.run(mk())
+    spec = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                         max_model_len=48, chunk=8, spec_k=4)
+    rep = spec.run(mk())
+    _outputs_equal(plain.outputs(), spec.outputs())
+    spec.pool.check_invariants()
+    assert spec.pool.n_live == 0
+    s = rep["speculative"]
+    assert s["verify_steps"] > 0 and s["drafted_tokens"] > 0
+    assert s["emitted_tokens"] > 0
+    # wasted ops = whole rejected rows, never more than what was drafted
+    elems = cfg.n_layers * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+    assert s["requant_ops_wasted"] % elems == 0
+    assert s["requant_ops_wasted"] <= s["drafted_tokens"] * elems
+    # rejected-draft accounting is visible and consistent
+    assert rep["hwcost"]["requant_ops_wasted_speculation"] == \
+        s["requant_ops_wasted"]
+    assert s["requant_ops_wasted"] <= rep["hwcost"]["requant_ops_performed"]
+
+
+def test_spec_oracle_drafter_accepts_everything():
+    """A CallableDrafter that proposes the plain engine's own future
+    tokens must be accepted wholesale: acceptance rate 1.0, tokens/step
+    > 1, and STILL token-identical output."""
+    cfg = _cfg()
+    params = _params(cfg)
+    prompt = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, size=9).astype(np.int32)
+    mk = lambda: [Request(rid=0, prompt=prompt.copy(), max_new_tokens=16)]
+    plain = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                          max_model_len=32, chunk=8)
+    plain.run(mk())
+    future = plain.outputs()[0]
+
+    def oracle(history, k):
+        n_gen = len(history) - len(prompt)
+        return future[n_gen:n_gen + k]
+
+    spec = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                         max_model_len=32, chunk=8, spec_k=4,
+                         drafter=CallableDrafter(oracle))
+    rep = spec.run(mk())
+    _outputs_equal(plain.outputs(), spec.outputs())
+    s = rep["speculative"]
+    assert s["acceptance_rate"] == 1.0
+    assert s["tokens_per_step"] > 2.0
+    # one request, all drafts accepted: far fewer steps than tokens
+    assert rep["spec_steps"] + rep["decode_steps"] < len(future)
+
+
+def test_spec_parity_through_preemption():
+    """Undersized pool: speculation must survive mid-speculation
+    preemption (uncommitted speculative rows die with the released
+    blocks, committed published blocks survive for the resume) and still
+    emit exactly the plain engine's tokens."""
+    cfg = _cfg()
+    params = _params(cfg)
+
+    def mk():
+        rng = np.random.default_rng(3)
+        return [Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=14).astype(np.int32),
+            max_new_tokens=12) for i in range(4)]
+
+    w_plain, w_spec = mk(), mk()
+    plain = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                          max_model_len=32, num_blocks=6, chunk=8)
+    plain.run(w_plain)
+    spec = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                         max_model_len=32, num_blocks=6, chunk=8, spec_k=4)
+    rep = spec.run(w_spec)
+    assert rep["completed"] == 4
+    assert rep["preemptions"] > 0
+    _outputs_equal(plain.outputs(), spec.outputs())
+    spec.pool.check_invariants()
+    assert spec.pool.n_live == 0
+
+
+def test_spec_parity_with_prefix_sharing_and_no_rejected_publish():
+    """Prefix-cache sharing + speculation: shared-prompt requests decode
+    token-identically with spec on, and every published block's key
+    re-derives from COMMITTED tokens only — a rejected draft never leaks
+    into a content key."""
+    cfg = _cfg()
+    params = _params(cfg)
+    rng = np.random.default_rng(21)
+    shared = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+
+    def mk():
+        rng2 = np.random.default_rng(5)
+        reqs = []
+        for i in range(4):
+            tail = rng2.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+            reqs.append(Request(
+                rid=i, prompt=np.concatenate([shared, tail]),
+                max_new_tokens=10, arrival=0.01 * i))
+        return reqs
+
+    w_plain, w_spec = mk(), mk()
+    plain = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                          max_model_len=48, chunk=8)
+    plain.run(w_plain)
+    spec = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                         max_model_len=48, chunk=8, spec_k=4)
+    rep = spec.run(w_spec)
+    _outputs_equal(plain.outputs(), spec.outputs())
+    assert rep["prefix_cache"]["hits"] > 0          # sharing happened
+    spec.pool.check_invariants()
+    # every surviving content key must re-derive from a chain of
+    # COMMITTED token ids of some completed request: walk each request's
+    # final (prompt + generated) stream and collect the reachable keys
+    from repro.serving.prefix_cache import ROOT_KEY, block_key
+    legal = set()
+    for r in w_spec:
+        toks = np.concatenate([r.prompt, spec.outputs()[r.rid]])
+        parent = ROOT_KEY
+        bs = spec.pool.block_size
+        for b in range(len(toks) // bs):
+            parent = block_key(parent, toks[b * bs:(b + 1) * bs],
+                               spec.pool.default_scale_exp)
+            legal.add(parent)
+    cache = spec.pool.cache
+    for blk in range(spec.pool.num_blocks):
+        key = cache.key_of(blk)
+        assert key is None or key in legal, \
+            f"block {blk} published under a key not derivable from any " \
+            f"committed token stream (speculative leak)"
+
+
+def test_spec_seed_reproducible_with_sampling():
+    """Same seed + workload -> identical tokens across passes, with
+    speculation on and off (each mode is its own deterministic stream)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    mk = lambda s: [Request(
+        rid=i, prompt=np.random.default_rng(s + i).integers(
+            0, cfg.vocab_size, size=8).astype(np.int32),
+        max_new_tokens=10, temperature=0.8) for i in range(3)]
+    for spec_k in (0, 3):
+        eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                            max_model_len=32, chunk=8, seed=11,
+                            spec_k=spec_k)
+        eng.run(mk(0))
+        first = eng.outputs()
+        eng.reset_metrics()
+        eng.run(mk(0))
+        _outputs_equal(first, eng.outputs())
+
+
+def test_spec_with_stop_token_discards_overshoot():
+    """A stop token accepted mid-chunk must finish the request and drop
+    the rest of the verified chunk — never emit past the stop."""
+    cfg = _cfg()
+    params = _params(cfg)
+    prompt = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, size=8).astype(np.int32)
+    plain = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                          max_model_len=48, chunk=8)
+    plain.run([Request(rid=0, prompt=prompt.copy(), max_new_tokens=24)])
+    ref = plain.outputs()[0]
+    stop = int(ref[len(ref) // 2])          # a token the model WILL emit
+    mk = lambda: [Request(rid=0, prompt=prompt.copy(), max_new_tokens=24,
+                          stop_token=stop)]
+    plain2 = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                           max_model_len=48, chunk=8)
+    plain2.run(mk())
+    spec = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                         max_model_len=48, chunk=8, spec_k=4)
+    spec.run(mk())
+    _outputs_equal(plain2.outputs(), spec.outputs())
+    got = spec.outputs()[0]
+    assert int(got[-1]) == stop and stop not in got[:-1]
+
+
+# -- prefill zero-progress guard (ISSUE 5 satellite) ------------------------
+
+def test_prefill_zero_progress_guard_raises():
+    """If a prefill chunk reports zero progress twice without the
+    CoW-failure preemption flipping the request's state, the engine must
+    fail fast instead of spinning forever."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
+                        max_model_len=32, chunk=8)
+    eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=2))
+    eng._prefill_chunk = lambda req, budget: 0      # broken contract
+    with pytest.raises(RuntimeError, match="no progress"):
+        eng.step()
