@@ -28,7 +28,19 @@ acceptance rate > 0.5, tokens per (slot, verify-step) > 1.3, and the
 structural step-count win must hold (fewer total decode-phase steps for
 the same tokens).
 
-Both runners execute the workload once UNTIMED first (jit warm-up: CPU
+Part 4 is the UNIFIED RAGGED DISPATCH (DESIGN §12) on MIXED TRAFFIC:
+prefill-heavy requests (long prompt, short generation) and decode-heavy
+requests (short prompt, long generation) interleaved on one Poisson
+clock, so most steps carry prefill chunks AND decode rows AND would have
+needed several per-shape dispatches.  The ragged engine (one work-list,
+one executable) vs the legacy per-shape trio at equal pool size.  Gates:
+greedy token parity, jit-compile count (distinct ragged step shapes)
+<= 4, strictly fewer padded tokens AND fewer dispatches than the
+bucketed baseline, tokens/s no worse (gross-regression bound, CI timers
+being what they are), and decode TPOT p99 no worse with concurrent
+prefill in the same steps.
+
+All runners execute the workload once UNTIMED first (jit warm-up: CPU
 smoke compilation dwarfs compute and its jitter would swamp the signal),
 then once timed — the reported tokens/s are steady-state wall-clock.
 
@@ -110,6 +122,21 @@ SPEC_PAT_LEN = 4
 SPEC_PAT_REPS = 8
 SPEC_GEN = 48
 SPEC_REQUESTS = 8
+
+# -- mixed-traffic ragged workload (DESIGN §12) -----------------------------
+# alternating prefill-heavy (long prompt, 2-4 gen) and decode-heavy
+# (short prompt, 32-48 gen) requests on one Poisson clock: decode-heavy
+# requests occupy slots for the whole run, so nearly every prefill chunk
+# lands in a step that ALSO carries live decode rows — the legacy engine
+# pays one dispatch per phase per step plus pow2 bucket padding, the
+# ragged engine packs the same rows into one work-list.  Prompt lengths
+# are deliberately NOT bucket-aligned (21/27/5/9-token prompts): real
+# traffic isn't, and per-phase pow2 bucketing pays for it twice (prefill
+# chunk bucket + decode slot padding) where the ragged stream rounds the
+# one combined total
+RAGGED_REQUESTS = 16
+RAGGED_PF = ((21, 27), (2, 4))         # prefill-heavy (prompts, gens)
+RAGGED_DC = ((5, 9), (32, 48))         # decode-heavy  (prompts, gens)
 
 
 class StaticRunner:
@@ -412,6 +439,133 @@ def bench_spec_decode(*, seed: int = 0) -> dict:
     }
 
 
+def bench_ragged_mixed(*, seed: int = 0) -> dict:
+    """Unified ragged dispatch vs the legacy per-shape trio on mixed
+    traffic at equal pool size (DESIGN §12).  Greedy, so token parity is
+    deterministic, as are the structural numbers the gates lean on:
+    distinct compiled step shapes, dispatched/padded tokens, and total
+    dispatch count.  Wall clock and TPOT ride along best-of-N."""
+    from repro.serving import Request
+
+    vocab = get_smoke_config(ARCH).vocab_size
+    max_need = max(max(RAGGED_PF[0]) + max(RAGGED_PF[1]),
+                   max(RAGGED_DC[0]) + max(RAGGED_DC[1]))
+    max_model_len = -(-max_need // BLOCK_SIZE) * BLOCK_SIZE
+
+    def workload():
+        rng = np.random.default_rng(seed)
+        t, reqs = 0.0, []
+        for i in range(RAGGED_REQUESTS):
+            t += float(rng.exponential(1.0 / RATE))
+            prompts, gens = RAGGED_PF if i % 2 == 0 else RAGGED_DC
+            reqs.append(Request(
+                rid=i,
+                prompt=rng.integers(0, vocab, size=int(rng.choice(prompts))
+                                    ).astype(np.int32),
+                max_new_tokens=int(rng.choice(gens)), arrival=t))
+        return reqs
+
+    def build(ragged: bool):
+        return serve_engine(
+            ARCH, requests=workload(), n_slots=N_SLOTS,
+            block_size=BLOCK_SIZE, chunk=CHUNK,
+            max_model_len=max_model_len, mode="fp", calibrate=False,
+            seed=seed, ragged=ragged,
+            cfg_overrides=dict(BENCH_SCALE, kv_cache_bits=8))["engine"]
+
+    rag = build(True)             # warm-up run included in serve_engine
+    leg = build(False)
+    parity = all(
+        np.array_equal(rag.outputs()[r.rid], leg.outputs()[r.rid])
+        for r in workload())
+
+    rrep = lrep = None
+    r_walls, l_walls = [], []
+    r_tpot, l_tpot = [], []
+    for _ in range(N_PASSES):
+        rag.reset_metrics()
+        rrep = rag.run(workload())
+        r_walls.append(rrep["wall_s"])
+        r_tpot.append(rrep["tpot_s"]["p99"])
+        leg.reset_metrics()
+        lrep = leg.run(workload())
+        l_walls.append(lrep["wall_s"])
+        l_tpot.append(lrep["tpot_s"]["p99"])
+
+    ragged_shapes = [k for k in rrep["step_shapes"]
+                     if k.startswith("ragged_")]
+    legacy_dispatches = (lrep["prefill_chunks"] + lrep["decode_steps"]
+                         + lrep["spec_steps"])
+    return {
+        "workload": {"n_requests": RAGGED_REQUESTS,
+                     "prefill_heavy": RAGGED_PF, "decode_heavy": RAGGED_DC,
+                     "n_slots": N_SLOTS, "block_size": BLOCK_SIZE,
+                     "chunk": CHUNK, "rate_req_s": RATE, "seed": seed,
+                     "passes": N_PASSES},
+        "note": "token_parity compares greedy outputs ragged vs legacy "
+                "per-shape on the identical workload/pool; tokens_per_s "
+                "and tpot_p99_best are best of the alternating passes, "
+                "structural numbers the LAST pass",
+        "token_parity": parity,
+        "compiled_step_shapes": len(ragged_shapes),
+        "ragged_step_shapes": sorted(ragged_shapes),
+        "dispatches": {"ragged": rrep["ragged_steps"],
+                       "legacy": legacy_dispatches},
+        "dispatched_tokens": {"ragged": rrep["dispatched_tokens"],
+                              "legacy": lrep["dispatched_tokens"]},
+        "padded_tokens": {"ragged": rrep["padded_tokens"],
+                          "legacy": lrep["padded_tokens"]},
+        "padding_frac": {"ragged": rrep["padding_frac"],
+                         "legacy": lrep["padding_frac"]},
+        "tokens_per_s_best": {
+            "ragged": round(rrep["gen_tokens"] / min(r_walls), 2),
+            "legacy": round(lrep["gen_tokens"] / min(l_walls), 2)},
+        "tpot_p99_best": {"ragged": min(r_tpot), "legacy": min(l_tpot)},
+        "wall_s_passes": {"ragged": r_walls, "legacy": l_walls},
+        "ragged": rrep,
+        "legacy": lrep,
+    }
+
+
+def check_ragged_mixed(rm: dict) -> None:
+    """Acceptance gates for the unified ragged dispatch (ISSUE 6)."""
+    if not rm["token_parity"]:
+        raise SystemExit(
+            "ragged engine is NOT token-identical to the per-shape "
+            "engine on the mixed-traffic workload")
+    if rm["compiled_step_shapes"] > 4:
+        raise SystemExit(
+            f"ragged engine compiled {rm['compiled_step_shapes']} step "
+            f"shapes {rm['ragged_step_shapes']} > 4 — the pow2 token "
+            f"bucketing is leaking shapes")
+    # deterministic structural wins: the whole point of the work-list
+    if rm["padded_tokens"]["ragged"] >= rm["padded_tokens"]["legacy"]:
+        raise SystemExit(
+            f"ragged dispatched {rm['padded_tokens']['ragged']} padded "
+            f"tokens vs legacy's {rm['padded_tokens']['legacy']} — no "
+            f"padding win on mixed traffic")
+    if rm["dispatches"]["ragged"] >= rm["dispatches"]["legacy"]:
+        raise SystemExit(
+            f"ragged needed {rm['dispatches']['ragged']} dispatches vs "
+            f"legacy's {rm['dispatches']['legacy']} — no fusion win")
+    # wall-clock gates with the same gross-regression philosophy as the
+    # continuous-vs-static gate: CI timers spike, structure doesn't
+    tps = rm["tokens_per_s_best"]
+    if tps["ragged"] < 0.9 * tps["legacy"]:
+        raise SystemExit(
+            f"ragged tokens/s {tps['ragged']} grossly below the "
+            f"per-shape engine's {tps['legacy']}")
+    if tps["ragged"] < tps["legacy"]:
+        print("WARNING: ragged tokens/s below per-shape despite the "
+              "dispatch/padding advantage — likely CI timer noise")
+    tpot = rm["tpot_p99_best"]
+    if tpot["ragged"] > 1.25 * tpot["legacy"]:
+        raise SystemExit(
+            f"ragged decode TPOT p99 {tpot['ragged']:.4f}s grossly "
+            f"worse than per-shape {tpot['legacy']:.4f}s under "
+            f"concurrent prefill")
+
+
 def check_spec_decode(sd: dict) -> None:
     """Acceptance gates for the speculative-decoding section (ISSUE 5)."""
     if not sd["token_parity"]:
@@ -466,6 +620,7 @@ def main() -> None:
     out = bench_serving(n_requests=args.requests, seed=args.seed)
     out["shared_prefix"] = bench_shared_prefix(seed=args.seed)
     out["spec_decode"] = bench_spec_decode(seed=args.seed)
+    out["ragged_mixed"] = bench_ragged_mixed(seed=args.seed)
     with open(args.json, "w") as f:
         json.dump(out, f, indent=2)
     c, s = out["continuous"], out["static"]
@@ -497,9 +652,23 @@ def main() -> None:
           f"{sd['decode_phase_steps']['plain']} plain, "
           f"{sd['retracted_blocks']} blocks retracted, "
           f"{sd['requant_ops_wasted']} quant ops on rejected drafts")
+    rm = out["ragged_mixed"]
+    print(f"ragged mixed-traffic: "
+          f"parity={'OK' if rm['token_parity'] else 'FAIL'}, "
+          f"{rm['compiled_step_shapes']} compiled shapes "
+          f"{rm['ragged_step_shapes']}, dispatches "
+          f"{rm['dispatches']['ragged']} vs "
+          f"{rm['dispatches']['legacy']} legacy, padded tokens "
+          f"{rm['padded_tokens']['ragged']} vs "
+          f"{rm['padded_tokens']['legacy']}, "
+          f"{rm['tokens_per_s_best']['ragged']} vs "
+          f"{rm['tokens_per_s_best']['legacy']} tok/s, tpot p99 "
+          f"{rm['tpot_p99_best']['ragged']:.4f}s vs "
+          f"{rm['tpot_p99_best']['legacy']:.4f}s")
     if args.check:
         check_shared_prefix(sp)
         check_spec_decode(sd)
+        check_ragged_mixed(rm)
         # the deterministic gate is the structural one — continuous must
         # need strictly fewer decode steps for the same useful tokens;
         # wall clock only fails on a GROSS regression, because shared CI

@@ -24,6 +24,13 @@ RETRACTED before they can publish — the demo prints the acceptance
 rate, tokens per step, and the quantization ops spent on rejected
 drafts (the waste the paper's write-once dataflow makes visible).
 Greedy outputs are token-identical with speculation on or off.
+
+By default every step is ONE unified ragged dispatch (DESIGN §12):
+prefill chunks, decode rows, and speculative tails ride a single
+flattened work-list instead of per-shape phase dispatches.  ``--ragged``
+(the default) additionally replays the same workload through the legacy
+per-shape engine and prints dispatch counts and padding waste side by
+side; ``--no-ragged`` serves with the legacy engine only.
 """
 import argparse
 
@@ -42,6 +49,12 @@ def main():
                     help="speculative decoding: draft up to K tokens per "
                          "slot and verify them in one paged step "
                          "(0 disables)")
+    ap.add_argument("--ragged", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="--ragged (default): unified ragged work-list "
+                         "dispatch, with a legacy per-shape replay for "
+                         "the A/B numbers; --no-ragged: legacy per-shape "
+                         "engine only")
     args = ap.parse_args()
 
     import jax
@@ -49,11 +62,14 @@ def main():
     from repro.launch.serve import serve_engine
     from repro.models import model as M
 
-    out = serve_engine(args.arch, n_requests=args.requests, rate=50.0,
-                       n_slots=4, block_size=16, chunk=16, mode="fp",
-                       calibrate=False, temperature=args.temperature,
-                       shared_prefix=args.shared_prefix,
-                       spec_k=args.spec_k)
+    def run(ragged):
+        return serve_engine(args.arch, n_requests=args.requests, rate=50.0,
+                            n_slots=4, block_size=16, chunk=16, mode="fp",
+                            calibrate=False, temperature=args.temperature,
+                            shared_prefix=args.shared_prefix,
+                            spec_k=args.spec_k, ragged=ragged)
+
+    out = run(args.ragged)
     rep = out["report"]
     print(f"[{args.arch}] {rep['completed']}/{rep['n_requests']} requests, "
           f"{rep['gen_tokens']} tokens in {rep['wall_s']}s "
@@ -91,6 +107,31 @@ def main():
               f"drafts (never published)")
     for rid, toks in sorted(out["outputs"].items())[:4]:
         print(f"  req {rid}: {toks[:12].tolist()}")
+
+    if args.ragged:
+        # A/B: the SAME workload through the legacy per-shape engine —
+        # dispatch counts and padding waste side by side (DESIGN §12)
+        leg = run(False)
+        lrep = leg["report"]
+        r_disp = rep["ragged_steps"]
+        l_disp = (lrep["prefill_chunks"] + lrep["decode_steps"]
+                  + lrep["spec_steps"])
+        print("ragged vs per-shape (same workload):")
+        print(f"  dispatches:   {r_disp} unified ragged steps vs "
+              f"{l_disp} legacy ({lrep['prefill_chunks']} prefill + "
+              f"{lrep['decode_steps']} decode + {lrep['spec_steps']} "
+              f"verify)")
+        print(f"  padding:      {rep['padded_tokens']}/"
+              f"{rep['dispatched_tokens']} tokens padded "
+              f"({rep['padding_frac']:.1%}) vs {lrep['padded_tokens']}/"
+              f"{lrep['dispatched_tokens']} ({lrep['padding_frac']:.1%}) "
+              f"legacy")
+        if args.temperature == 0.0:
+            same = all(np.array_equal(out["outputs"][r.rid],
+                                      leg["outputs"][r.rid])
+                       for r in out["requests"])
+            print(f"  greedy tokens: "
+                  f"{'identical' if same else 'MISMATCH'}")
 
     if args.temperature == 0.0:
         # token-exactness spot check: replay request 0 through the DENSE

@@ -30,12 +30,13 @@ from repro.kernels.flash_attention import (make_flash_decode,
                                            make_paged_flash_decode)
 from repro.kernels.int8_matmul import make_int8_matmul
 from repro.kernels.quantize import make_quantize
+from repro.kernels.ragged_flash import make_ragged_paged_flash
 from repro.kernels.residual_requant import make_residual_requant
 
 __all__ = ["int8_matmul", "quantize_act", "residual_requant",
            "flash_attention", "flash_decode", "paged_attention",
-           "attention_kv_bytes", "attn_shard_size", "use_interpret",
-           "DEFAULT_BLOCKS", "FLASH_BLOCKS"]
+           "ragged_attention", "attention_kv_bytes", "attn_shard_size",
+           "use_interpret", "DEFAULT_BLOCKS", "FLASH_BLOCKS"]
 
 DEFAULT_BLOCKS = (128, 512, 512)  # (bm, bk, bn)
 FLASH_BLOCKS = (256, 512)         # (bq, bk) — q tile x kv tile
@@ -471,6 +472,99 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     pos = jnp.asarray(q_positions[:, 0], jnp.int32)
     out = call(pos, jnp.asarray(block_tables, jnp.int32), q4, k_pool, v_pool)
     return out[:, :, :groups].reshape(b, 1, h, dv)
+
+
+@functools.lru_cache(maxsize=64)
+def _make_sharded_ragged(mesh: Mesh, head_entry, kv_frac_bits, scale,
+                         tq_max):
+    """shard_map'd ragged attention: the pool stays resident head-sharded
+    (like paged decode); the packed (T, H, D) stream is head-sharded on
+    its head axis and the descriptors are replicated.  The token axis is
+    NOT partitioned — a ragged stream has no slot-aligned batch dim for
+    the data axes to split, and T_pad is a few dozen rows, so replicating
+    it across data-parallel shards is the cheap and correct layout."""
+    from jax.experimental.shard_map import shard_map
+    qspec = P(None, head_entry, None)
+    pspec = P(None, None, head_entry, None)
+
+    def local(q, kp, vp, bt, qs, ql, kl):
+        return ragged_attention(q, kp, vp, bt, qs, ql, kl,
+                                kv_frac_bits=kv_frac_bits, scale=scale,
+                                tq_max=tq_max)
+
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(qspec, pspec, pspec, P(None, None), P(), P(), P()),
+        out_specs=qspec, check_rep=False))
+
+
+def ragged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     block_tables: jax.Array, q_start: jax.Array,
+                     q_len: jax.Array, kv_len: jax.Array, *,
+                     kv_frac_bits: Optional[int] = None,
+                     scale: Optional[float] = None,
+                     tq_max: Optional[int] = None,
+                     mesh: Optional[Mesh] = None,
+                     shard_axis: str = "model") -> jax.Array:
+    """Unified ragged-batch attention over the paged KV pool (DESIGN §12).
+
+    One call serves a MIXED serving step: q (T, H, Dk) is the flattened
+    token stream — prefill chunks, decode rows, and speculative tails
+    packed back to back — and the per-sequence descriptors ``q_start`` /
+    ``q_len`` / ``kv_len`` (S,) + ``block_tables`` (S, NBmax) say which
+    stream rows belong to which sequence and how much KV each one sees.
+    Descriptor contract (host-built): ``q_start`` nondecreasing, windows
+    disjoint, ``q_len <= kv_len``, padding slots all-zero with trash
+    tables.  Returns (T, H, Dv) with non-descriptor rows exactly zero.
+
+    MXU-aligned pools (bs/dk/dv lane multiples) launch the single
+    ``ragged_flash`` pallas_call — descriptors ride scalar prefetch, the
+    block walk happens in the DMA engine, int8 codes dequantize
+    in-register.  ``tq_max`` (static) bounds the per-sequence q_len so
+    the kernel's q window stays narrow; None means the whole stream
+    width.  Other shapes take the gather oracle
+    (``ref.ragged_attention_ref``), which is also the CPU engine path.
+    With a multi-device ``mesh``, KV heads shard over ``shard_axis``
+    (whole GQA groups — §8) and descriptors replicate.
+    """
+    t, h, dk = q.shape
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    dv = v_pool.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    nkv = _resolve_kv_frac_bits(k_pool, kv_frac_bits)
+    kernel_ok = bs % 128 == 0 and dk % 128 == 0 and dv % 128 == 0
+    bt = jnp.asarray(block_tables, jnp.int32)
+    qs = jnp.asarray(q_start, jnp.int32)
+    ql = jnp.asarray(q_len, jnp.int32)
+    kl = jnp.asarray(kv_len, jnp.int32)
+    if mesh is not None and mesh.size > 1:
+        tp = attn_shard_size(mesh, shard_axis)
+        _check_head_divisibility(kvh, tp, shard_axis)
+        if not kernel_ok:
+            # reference path is plain jnp — GSPMD partitions it directly
+            return ref.ragged_attention_ref(
+                q, k_pool, v_pool, bt, qs, ql, kl,
+                kv_frac_bits=kv_frac_bits, scale=scale)
+        call = _make_sharded_ragged(mesh, shard_axis if tp > 1 else None,
+                                    kv_frac_bits, scale, tq_max)
+        return call(q, k_pool, v_pool, bt, qs, ql, kl)
+    if not kernel_ok:
+        return ref.ragged_attention_ref(
+            q, k_pool, v_pool, bt, qs, ql, kl,
+            kv_frac_bits=kv_frac_bits, scale=scale)
+    t_pad = _round_up(t, 8)
+    tq = _round_up(min(tq_max, t) if tq_max else t, 8)
+    tq = min(tq, t_pad)
+    qp = _pad_to(q, 8, 0)
+    call = make_ragged_paged_flash(
+        bt.shape[0], h, kvh, bt.shape[1], bs, t_pad, tq, dk, dv,
+        score_scale=scale * 2.0 ** (-nkv), v_scale=2.0 ** (-nkv),
+        out_dtype=q.dtype, interpret=use_interpret())
+    out = call(qs, ql, kl, bt, qp, k_pool, v_pool)     # (T_pad, H, dv)
+    # rows covered by no descriptor were never written by the kernel —
+    # pin them to the contract's zero
+    _, valid, _ = ref.ragged_token_meta(qs, ql, kl, t)
+    return jnp.where(valid[:, None, None], out[:t], 0)
 
 
 def attention_kv_bytes(skv: int, kvh: int, dk: int, dv: int, *,

@@ -1,0 +1,191 @@
+"""Unified RAGGED paged flash attention: one pallas_call per mixed step.
+
+The serving engine's step traffic is inherently mixed — some slots are
+mid-prefill (a chunk of C tokens), some are decoding (1 token), some are
+verifying a speculative tail (1 + K tokens).  Dispatching each class at
+its own padded shape costs three executables per step, pow2 bucket
+padding, and serialized phases (DESIGN §9/§11).  This kernel serves the
+whole step in ONE dispatch over a FLATTENED token stream:
+
+    q:   (T_pad, H, Dk)      — all live tokens of every class, packed
+    out: (T_pad, H, Dv)
+    per-sequence descriptors, scalar-prefetched like the paged decode
+    kernel's (positions, block table):
+      q_start (S,)      first stream row of sequence s
+      q_len   (S,)      its token count this step (0 = padding slot)
+      kv_len  (S,)      its TOTAL visible KV rows after this step
+      block_tables (S, NBmax)  logical block -> pool block
+
+Grid (H, S, NBmax): the head axis is parallel; the sequence and
+block-table axes are sequential ("arbitrary") because every (s, ti)
+step revisits the same (T_pad, 1, Dv) output block — Pallas keeps it
+resident in VMEM for the whole sweep, and each sequence read-modify-
+writes only its own disjoint row window, so the packed stream is
+assembled in place.  The K/V index maps are the paged-decode gather
+(``bt_ref[s, ti]`` — the block walk happens in the DMA engine), and the
+int8 Eq.-1 codes dequantize in-register exactly as in
+``flash_attention.py``: K's power-of-two scale folds into the softmax
+scale, V's into the final normalization.
+
+Causal masking is derived PER ROW from the descriptors instead of from
+the operand shape: stream row ``q_start[s] + i`` is the token at
+absolute position ``kv_len[s] - q_len[s] + i``, so
+
+    mask[i, j] = (0 <= i < q_len[s]) and (kv_pos[j] <= position(i))
+
+covers all three traffic classes with one formula — a decode row
+(q_len=1) sees its whole context, a prefill chunk gets the staircase,
+a speculative tail gets the staircase rooted at the committed context.
+
+The q window per sequence is a STATIC ``tq`` rows wide (max per-sequence
+q_len, padded to the sublane size), dynamically positioned with
+``pl.ds`` and clamped to the stream end; rows of the window outside
+``[q_start, q_start + q_len)`` are fully masked and their output write
+is suppressed (read-modify-write keeps neighbouring sequences' rows).
+Stream rows not covered by ANY descriptor are never written — the ops
+wrapper zeroes them after the call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+from repro.kernels.flash_attention import _STATS_LANES, DEFAULT_MASK_VALUE
+
+__all__ = ["make_ragged_paged_flash"]
+
+
+def _ragged_paged_flash_kernel(qs_ref, ql_ref, kl_ref, bt_ref,
+                               q_ref, k_ref, v_ref, o_ref,
+                               m_scr, l_scr, acc_scr, *, score_scale: float,
+                               v_scale: float, bs: int, nbmax: int, tq: int,
+                               t_pad: int, out_dtype):
+    """Grid (head, seq, ti).  Blocks: q/o (T_pad, 1, d) — the whole packed
+    stream for one head, revisited across (seq, ti); k/v (1, bs, 1, d) —
+    the pool block named by ``bt_ref[s, ti]``."""
+    s_ = pl.program_id(1)
+    ti = pl.program_id(2)
+    qs = qs_ref[s_]
+    ql = ql_ref[s_]
+    kl = kl_ref[s_]
+    # static-width q window, clamped so it never runs past the stream;
+    # ``off`` is where the sequence's row 0 lands inside the window
+    start = jnp.minimum(qs, t_pad - tq)
+    off = qs - start
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, -jnp.inf, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    # skip table-tail trash blocks (ti*bs >= kv_len) and padding slots
+    @pl.when(jnp.logical_and(ti * bs < kl, ql > 0))
+    def _compute():
+        q = q_ref[pl.ds(start, tq), 0, :]              # (tq, dk)
+        k = k_ref[0, :, 0, :].astype(q.dtype)          # (bs, dk) pool block
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * score_scale
+
+        # descriptor-derived causal mask: window row i is the sequence's
+        # local token ``i - off`` at absolute position kv_len - q_len + local
+        local = jax.lax.broadcasted_iota(jnp.int32, (tq, bs), 0) - off
+        pos = kl - ql + local
+        valid = jnp.logical_and(local >= 0, local < ql)
+        kv_pos = ti * bs + jax.lax.broadcasted_iota(jnp.int32, (tq, bs), 1)
+        s = jnp.where(jnp.logical_and(valid, kv_pos <= pos), s,
+                      DEFAULT_MASK_VALUE)
+
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_curr = jnp.max(s, axis=1, keepdims=True)
+        m_next = jnp.maximum(m_prev, m_curr)
+        alpha = jnp.exp(m_prev - m_next)
+        p = jnp.exp(s - m_next)
+        l_scr[...] = jnp.broadcast_to(
+            l_prev * alpha + jnp.sum(p, axis=1, keepdims=True), l_scr.shape)
+        m_scr[...] = jnp.broadcast_to(m_next, m_scr.shape)
+
+        v = v_ref[0, :, 0, :].astype(q.dtype)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(q.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ti == nbmax - 1)
+    def _store():
+        l = l_scr[:, :1]
+        l_inv = jnp.where(l == 0.0, 1.0, 1.0 / l)
+        vals = (acc_scr[...] * l_inv * v_scale).astype(out_dtype)
+        local = jax.lax.broadcasted_iota(jnp.int32, (tq, 1), 0) - off
+        valid = jnp.logical_and(local >= 0, local < ql)
+        # masked read-modify-write: window rows of OTHER sequences (the
+        # windows of adjacent short sequences overlap) keep their values
+        cur = o_ref[pl.ds(start, tq), 0, :]
+        o_ref[pl.ds(start, tq), 0, :] = jnp.where(valid, vals, cur)
+
+
+def make_ragged_paged_flash(s: int, h: int, kvh: int, nbmax: int, bs: int,
+                            t_pad: int, tq: int, dk_p: int, dv_p: int, *,
+                            score_scale: float, v_scale: float, out_dtype,
+                            interpret: bool = False):
+    """Build the unified ragged pallas_call.
+
+    Operands: q_start/q_len/kv_len (S,) + block_tables (S, NBmax), all
+    int32 scalar-prefetch · q (T_pad, H, dk) · k/v POOL (NB, bs, KVH, d).
+    Output (T_pad, H, dv) — packed like q; rows covered by no descriptor
+    are left unwritten (the wrapper zeroes them).
+
+    Contract (callers build descriptors host-side): ``q_start`` is
+    nondecreasing with ``q_start + q_len <= t_pad`` per sequence, row
+    windows ``[q_start, q_start + q_len)`` are pairwise disjoint, every
+    ``q_len <= tq``, padding slots carry ``q_len == kv_len == 0`` with
+    trash-block tables.  ``h``/``kvh`` are PER-SHARD counts under the §8
+    shard_map wiring — whole GQA groups per shard, same as the other
+    flash kernels.
+    """
+    assert kvh >= 1 and h % kvh == 0, (
+        f"(per-shard) query heads ({h}) must be a positive multiple of "
+        f"(per-shard) KV heads ({kvh})")
+    assert 1 <= tq <= t_pad and tq % 8 == 0 and t_pad % 8 == 0, (
+        f"q window {tq} must be a sublane multiple within the padded "
+        f"stream {t_pad}")
+    groups = h // kvh
+    kernel = functools.partial(
+        _ragged_paged_flash_kernel, score_scale=score_scale,
+        v_scale=v_scale, bs=bs, nbmax=nbmax, tq=tq, t_pad=t_pad,
+        out_dtype=out_dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(h, s, nbmax),
+        in_specs=[
+            pl.BlockSpec((t_pad, 1, dk_p),
+                         lambda h_, s_, ti, qs, ql, kl, bt: (0, h_, 0)),
+            pl.BlockSpec((1, bs, 1, dk_p),
+                         lambda h_, s_, ti, qs, ql, kl, bt:
+                         (bt[s_, ti], 0, h_ // groups, 0)),
+            pl.BlockSpec((1, bs, 1, dv_p),
+                         lambda h_, s_, ti, qs, ql, kl, bt:
+                         (bt[s_, ti], 0, h_ // groups, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_pad, 1, dv_p),
+                               lambda h_, s_, ti, qs, ql, kl, bt: (0, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tq, _STATS_LANES), jnp.float32),   # running max m
+            pltpu.VMEM((tq, _STATS_LANES), jnp.float32),   # running sum l
+            pltpu.VMEM((tq, dv_p), jnp.float32),           # output acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t_pad, h, dv_p), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )

@@ -6,12 +6,14 @@ so a bug cannot cancel itself out; semantics mirror
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["int8_matmul_ref", "quantize_ref", "residual_requant_ref"]
+__all__ = ["int8_matmul_ref", "quantize_ref", "residual_requant_ref",
+           "ragged_attention_ref"]
 
 
 def _requant(acc: jax.Array, shift: int, lo: int, hi: int) -> jax.Array:
@@ -64,3 +66,70 @@ def residual_requant_ref(a_int: jax.Array, b_int: jax.Array, *, n_a: int,
                                                     (1 << (bits - 1)) - 1)
     out_dtype = jnp.uint8 if unsigned else jnp.int8
     return _requant(acc, n_hi - n_o, lo, hi).astype(out_dtype)
+
+
+def ragged_token_meta(q_start: jax.Array, q_len: jax.Array,
+                      kv_len: jax.Array, t: int):
+    """Per-TOKEN view of the ragged descriptors: (sid, valid, pos) for
+    each of the ``t`` stream rows.  ``q_start`` must be nondecreasing
+    (padding descriptors carry ``q_start >= t`` and capture nothing);
+    rows between one sequence's end and the next one's start are padding
+    (``valid`` False, ``pos`` -1 so every KV position is masked)."""
+    s = q_start.shape[0]
+    tok = jnp.arange(t, dtype=jnp.int32)
+    sid = jnp.clip(jnp.searchsorted(q_start, tok, side="right") - 1, 0, s - 1)
+    local = tok - q_start[sid]
+    valid = jnp.logical_and(local >= 0, local < q_len[sid])
+    pos = jnp.where(valid, kv_len[sid] - q_len[sid] + local, -1)
+    return sid, valid, pos
+
+
+def ragged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                         block_tables: jax.Array, q_start: jax.Array,
+                         q_len: jax.Array, kv_len: jax.Array, *,
+                         kv_frac_bits: Optional[int] = None,
+                         scale: Optional[float] = None) -> jax.Array:
+    """Gather-based oracle for the unified ragged paged kernel.
+
+    q (T, H, Dk) is the flattened mixed step stream; descriptors as in
+    ``kernels.ragged_flash``.  Every token gathers its OWN sequence's
+    table from the pool, dequantizes (the dataflow the kernel deletes),
+    and attends under the descriptor-derived causal mask
+    ``kv_pos <= kv_len - q_len + local``.  Rows covered by no descriptor
+    return exactly zero.  The math is laid out token-batched with C == 1
+    — the same contraction order as the per-shape paged reference, so
+    the ragged engine's logits match the per-shape engine's bit for bit
+    on the reference path.
+    """
+    from repro.core.qscheme import dequant
+    t, h, dk = q.shape
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    dv = v_pool.shape[-1]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    if k_pool.dtype == jnp.int8 and kv_frac_bits is None:
+        raise ValueError("int8 KV codes require kv_frac_bits (the "
+                         "cache's static Eq.-1 fractional bit)")
+    sid, valid, pos = ragged_token_meta(q_start, q_len, kv_len, t)
+    bt_tok = block_tables[sid]                         # (T, NBmax)
+    s_len = block_tables.shape[1] * bs
+    k = k_pool[bt_tok].reshape(t, s_len, kvh, dk)
+    v = v_pool[bt_tok].reshape(t, s_len, kvh, dv)
+    if k.dtype == jnp.int8:
+        k = dequant(k, int(kv_frac_bits), out_dtype=q.dtype)
+        v = dequant(v, int(kv_frac_bits), out_dtype=q.dtype)
+    else:
+        k, v = k.astype(q.dtype), v.astype(q.dtype)
+    qg = q.reshape(t, 1, kvh, g, dk)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    kv_pos = jnp.arange(s_len)
+    mask = kv_pos[None, None, :] <= pos[:, None, None]   # (T, 1, S)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(t, h, dv).astype(q.dtype)
+    # fully-masked padding rows came out of the softmax as NaN — they are
+    # no sequence's output, pin them to zero
+    return jnp.where(valid[:, None, None], out, 0)

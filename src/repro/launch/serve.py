@@ -174,7 +174,8 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                  prompt_lens=(8, 16, 24, 32), gen_lens=(4, 8, 16, 24),
                  requests=None, cfg_overrides: dict | None = None,
                  shared_prefix: int = 0, prefix_cache: bool = True,
-                 spec_k: int = 0, drafter="ngram") -> dict:
+                 spec_k: int = 0, drafter="ngram",
+                 ragged: bool = True) -> dict:
     """Continuous-batching serving on the paged int8-KV block pool
     (DESIGN §9/§10).  Returns {"report", "outputs", "requests", "engine"}.
 
@@ -185,7 +186,10 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
     tokens per slot are drafted (``drafter``: 'ngram' prompt-lookup
     self-drafting, or any object with draft(history, k)) and verified in
     one paged step, with rollback-safe publishing — rejected drafts
-    never reach the prefix cache."""
+    never reach the prefix cache.  ``ragged=False`` falls back to the
+    legacy per-shape step trio (bucketed prefill / decode / spec-verify
+    dispatches) instead of the unified ragged work-list (DESIGN §12) —
+    kept for A/B padding and throughput comparison."""
     from repro.serving import ServingEngine
     overrides = dict(cfg_overrides or {})
     if kv_bits is not None:
@@ -219,7 +223,7 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                            max_model_len=max_model_len,
                            num_blocks=num_blocks, top_k=top_k, mesh=mesh,
                            seed=seed, prefix_cache=prefix_cache,
-                           spec_k=spec_k, drafter=drafter)
+                           spec_k=spec_k, drafter=drafter, ragged=ragged)
     report = engine.run(requests)
     return {"report": report, "outputs": engine.outputs(),
             "requests": requests, "engine": engine}
@@ -279,6 +283,12 @@ def main(argv=None):
                          "the model-free prompt-lookup self-drafter "
                          "(small-draft-model hooks plug in via the "
                          "serve_engine(drafter=...) API)")
+    ap.add_argument("--no-ragged", action="store_true",
+                    help="[--engine] use the legacy per-shape step trio "
+                         "(bucketed prefill / decode / spec-verify) "
+                         "instead of the unified ragged work-list "
+                         "dispatch (DESIGN §12) — A/B baseline for "
+                         "padding waste and compile count")
     args = ap.parse_args(argv)
     mesh_shape = None
     if args.mesh is not None:
@@ -297,7 +307,8 @@ def main(argv=None):
                            mesh_shape=mesh_shape,
                            shared_prefix=args.shared_prefix,
                            prefix_cache=not args.no_prefix_cache,
-                           spec_k=args.spec_k, drafter=args.drafter)
+                           spec_k=args.spec_k, drafter=args.drafter,
+                           ragged=not args.no_ragged)
         print(json.dumps(out["report"], indent=2))
         pc = out["report"].get("prefix_cache")
         if pc is not None:

@@ -23,9 +23,9 @@ from repro.optim import adamw, adafactor, clip_by_global_norm
 from repro.optim.optimizers import Optimizer, OptState
 
 __all__ = ["pick_optimizer", "build_train_step", "build_prefill_step",
-           "build_serve_step", "build_paged_step", "input_specs",
-           "abstract_params", "abstract_opt_state", "abstract_cache",
-           "abstract_paged_cache", "param_count"]
+           "build_serve_step", "build_paged_step", "build_ragged_step",
+           "input_specs", "abstract_params", "abstract_opt_state",
+           "abstract_cache", "abstract_paged_cache", "param_count"]
 
 ADAFACTOR_THRESHOLD = 30e9  # params; above this AdamW state cannot fit v5e
 
@@ -251,6 +251,24 @@ def build_paged_step(cfg: ModelConfig, ctx: QuantContext,
                                 block_tables, cfg, ctx)
 
     return paged_step
+
+
+def build_ragged_step(cfg: ModelConfig, ctx: QuantContext,
+                      attn_kernel: Optional[str] = None,
+                      mesh: Optional[Mesh] = None):
+    """One UNIFIED serving step over the flattened mixed stream (DESIGN
+    §12): (params, tokens (T,), cache, positions (T,), ragged
+    RaggedBatch) -> (logits (T,V), cache).  Replaces the per-shape
+    paged_step dispatch trio — jit specializes per (T_pad, S_pad) only,
+    and the engine's T bucketing keeps that set O(few)."""
+    cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
+
+    def ragged_step(params, tokens, cache, positions, ragged):
+        with _mesh_scope(mesh):
+            return M.ragged_step(params, tokens, cache, positions, ragged,
+                                 cfg, ctx)
+
+    return ragged_step
 
 
 # ---------------------------------------------------------------------------

@@ -32,7 +32,7 @@ from repro.core.qmodel import QuantContext
 from repro.distributed.sharding import constrain, current_mesh
 from repro.models.common import apply_rope, linear, rmsnorm
 
-__all__ = ["KVCache", "MLACache", "PagedKVCache", "init_gqa",
+__all__ = ["KVCache", "MLACache", "PagedKVCache", "RaggedBatch", "init_gqa",
            "gqa_attention", "init_mla", "mla_attention", "chunked_attention"]
 
 
@@ -55,6 +55,26 @@ class PagedKVCache(NamedTuple):
     """
     k: jax.Array        # (NB, BS, KVH, D) — int8 codes or model dtype
     v: jax.Array        # (NB, BS, KVH, D)
+
+
+class RaggedBatch(NamedTuple):
+    """One MIXED serving step as a flattened token stream (DESIGN §12).
+
+    Prefill chunks, decode rows, and speculative tails of every live slot
+    are packed back to back into one (T,) stream; each sequence ``s``
+    owns stream rows ``[q_start[s], q_start[s] + q_len[s])`` and sees
+    ``kv_len[s]`` total KV rows.  ``dest`` is the host-precomputed
+    flattened pool row (``block * block_size + pos % block_size``) each
+    token's KV codes scatter to — padding rows point at the trash block.
+    All arrays are int32; descriptors follow the contract in
+    ``kernels.ragged_flash`` (q_start nondecreasing, windows disjoint,
+    padding slots zeroed with trash-block tables).
+    """
+    dest: jax.Array          # (T,)       flattened pool row per token
+    block_tables: jax.Array  # (S, NBmax) logical block -> pool block
+    q_start: jax.Array       # (S,)
+    q_len: jax.Array         # (S,)
+    kv_len: jax.Array        # (S,)
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +251,7 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
                   causal: bool = True, kv_x: Optional[jax.Array] = None,
                   use_rope: bool = True, kv_chunk: int = 1024,
                   block_tables: Optional[jax.Array] = None,
+                  ragged: Optional[RaggedBatch] = None,
                   name: str = "attn") -> tuple[jax.Array, Optional[KVCache]]:
     """GQA with optional qk_norm, KV cache (decode) and cross-attn (kv_x).
 
@@ -243,6 +264,12 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
     ``block_tables`` at per-token absolute positions ``cache_pos`` (shape
     (B, S) — continuous batching decodes every slot at its own position)
     and attention runs over the pool via ``ops.paged_attention``.
+
+    Unified ragged serving (DESIGN §12): with ``cache`` a
+    :class:`PagedKVCache` and ``ragged`` a :class:`RaggedBatch`, ``x`` is
+    the whole MIXED step as one (1, T, d) stream; codes scatter via the
+    precomputed ``ragged.dest`` rows and attention runs in ONE
+    ``ops.ragged_attention`` dispatch for every traffic class at once.
     """
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -265,6 +292,34 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
         q = apply_rope(q, positions, cfg.rope_theta)
         kv_positions = positions if kv_x is None else jnp.arange(src.shape[1])[None]
         k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    if isinstance(cache, PagedKVCache) and ragged is not None:
+        # unified ragged path (DESIGN §12): the batch IS one flattened
+        # (1, T) stream mixing prefill chunks, decode rows, and spec
+        # tails.  Quantize once, scatter each token's codes to its
+        # host-precomputed pool row (padding rows land in the trash
+        # block), then attend in ONE ragged dispatch.
+        assert b == 1, "ragged serving flattens the batch to (1, T)"
+        nb_pool, bs_blk = cache.k.shape[0], cache.k.shape[1]
+        kv_frac_bits = None
+        if cache.k.dtype == jnp.int8:
+            from repro.core.qscheme import quant
+            kv_frac_bits = cfg.kv_cache_frac_bits
+            k_c, v_c = quant(k, kv_frac_bits, 8), quant(v, kv_frac_bits, 8)
+        else:
+            k_c, v_c = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+        k_pool = cache.k.reshape(nb_pool * bs_blk, kvh, hd).at[
+            ragged.dest].set(k_c.reshape(-1, kvh, hd)).reshape(cache.k.shape)
+        v_pool = cache.v.reshape(nb_pool * bs_blk, kvh, hd).at[
+            ragged.dest].set(v_c.reshape(-1, kvh, hd)).reshape(cache.v.shape)
+        from repro.kernels import ops as kops
+        out = kops.ragged_attention(
+            q[0], k_pool, v_pool, ragged.block_tables, ragged.q_start,
+            ragged.q_len, ragged.kv_len, kv_frac_bits=kv_frac_bits,
+            mesh=current_mesh(), shard_axis=cfg.attn_shard_axis)[None]
+        out = constrain(out.reshape(b, s, h * hd), ("batch", None, "heads"))
+        return (linear(ctx, f"{name}/wo", out, p["wo"]),
+                PagedKVCache(k_pool, v_pool))
 
     if isinstance(cache, PagedKVCache):
         # serving-engine paged path (DESIGN §9): quantize ONCE, scatter the

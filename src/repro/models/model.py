@@ -25,7 +25,7 @@ from repro.models import transformer as tfm
 from repro.models.common import Initializer, embed, rmsnorm, unembed
 
 __all__ = ["init_params", "init_cache", "init_paged_cache", "forward",
-           "prefill", "decode_step", "paged_step", "loss_fn"]
+           "prefill", "decode_step", "paged_step", "ragged_step", "loss_fn"]
 
 
 def _dtype(cfg: ModelConfig):
@@ -447,6 +447,40 @@ def paged_step(params: dict, tokens: jax.Array, cache: Any,
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = unembed(ctx, x, head)
     return logits, {"paged_kv": kv}
+
+
+def ragged_step(params: dict, tokens: jax.Array, cache: Any,
+                positions: jax.Array, ragged: att.RaggedBatch,
+                cfg: ModelConfig, ctx: QuantContext) -> tuple[jax.Array, Any]:
+    """One UNIFIED serving step over a flattened mixed token stream.
+
+    ``tokens``/``positions`` are (T,) — every live token of the step
+    (prefill chunks, decode rows, speculative tails) packed back to
+    back; ``ragged`` carries the per-sequence descriptors and the
+    flattened pool destinations (DESIGN §12).  Returns (logits fp32
+    (T, V), new cache); the engine samples per sequence from the rows
+    its descriptor names.  Padding rows (covered by no descriptor)
+    produce garbage logits that no descriptor samples.
+    """
+    if cfg.family not in ("dense", "vlm") or cfg.mla is not None:
+        raise NotImplementedError(
+            f"ragged_step covers GQA dense/vlm families; got {cfg.family!r}")
+    dt = _dtype(cfg)
+    x = constrain(embed(params["embed"], tokens[None], dt),
+                  ("batch", None, None))
+
+    def body(x, inp):
+        p_l, c_l = inp
+        y, cl = tfm.dense_block(ctx, p_l, x, cfg, positions=positions[None],
+                                cache=c_l, cache_pos=positions[None],
+                                ragged=ragged)
+        return y, cl
+
+    x, kv = _scan(body, x, (params["blocks"], cache["paged_kv"]))
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(ctx, x, head)
+    return logits[0], {"paged_kv": kv}
 
 
 # ---------------------------------------------------------------------------

@@ -56,9 +56,9 @@ def init_dense_block(init: Initializer, cfg: ModelConfig) -> dict:
 
 
 def _attn_dispatch(ctx, p, x, cfg, positions, cache, cache_pos,
-                   use_rope=True, block_tables=None):
+                   use_rope=True, block_tables=None, ragged=None):
     if cfg.mla is not None:
-        if block_tables is not None:
+        if block_tables is not None or ragged is not None:
             raise NotImplementedError(
                 "paged serving covers GQA caches only; MLA's compressed "
                 "latent cache has no block-pool layout yet (DESIGN §9)")
@@ -66,15 +66,16 @@ def _attn_dispatch(ctx, p, x, cfg, positions, cache, cache_pos,
                                  cache=cache, cache_pos=cache_pos)
     return att.gqa_attention(ctx, p["attn"], x, cfg, positions=positions,
                              cache=cache, cache_pos=cache_pos,
-                             use_rope=use_rope, block_tables=block_tables)
+                             use_rope=use_rope, block_tables=block_tables,
+                             ragged=ragged)
 
 
 def dense_block(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
                 *, positions: jax.Array, cache=None, cache_pos=None,
-                use_rope: bool = True, block_tables=None):
+                use_rope: bool = True, block_tables=None, ragged=None):
     h, new_cache = _attn_dispatch(ctx, p, rmsnorm(x, p["ln1"], cfg.norm_eps),
                                   cfg, positions, cache, cache_pos, use_rope,
-                                  block_tables)
+                                  block_tables, ragged)
     x = constrain(x + h, ("batch", None, None))
     x = x + mlp_lib.mlp(ctx, p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps),
                         cfg.act)

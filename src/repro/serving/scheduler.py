@@ -209,6 +209,15 @@ class Scheduler:
         return [r for r in self.slots
                 if r is not None and r.state is RequestState.DECODE]
 
+    def mixed_work(self) -> list[Request]:
+        """One MIXED work-list for a unified ragged step (DESIGN §12):
+        every live request exactly once — PREFILL jobs first (admission
+        order, each contributing one chunk), then DECODE requests (each
+        contributing its fed token plus any speculative tail).  Replaces
+        the phase-ordered prefill-then-decode dispatch; a request is in
+        exactly one state, so the list length never exceeds n_slots."""
+        return self.prefill_jobs() + self.decode_reqs()
+
     def grow_for_decode(self, req: Request, now: float,
                         n_tokens: int = 1) -> bool:
         """Ensure ``req`` owns blocks for KV rows ``n_ctx .. n_ctx +

@@ -203,10 +203,12 @@ def verify_tokens(logits: jax.Array, tokens: jax.Array, n_drafts: jax.Array,
 
     rows = jnp.arange(b)
     rejected = n_acc < n_drafts
+    # K == 0 (the unified ragged step's spec-off shape): there is nothing
+    # to reject, so every row takes its bonus draw — indexing the
+    # zero-width resample would be ill-formed even under a False where
     rep_sample = jnp.where(
-        rejected & (k > 0),
-        resample[rows, jnp.minimum(n_acc, max(k - 1, 0))],
-        bonus[rows, n_acc])
+        rejected, resample[rows, jnp.minimum(n_acc, k - 1)],
+        bonus[rows, n_acc]) if k else bonus[rows, n_acc]
     rep = jnp.where(temperatures <= 0, greedy[rows, n_acc],
                     rep_sample).astype(jnp.int32)
 

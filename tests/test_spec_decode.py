@@ -366,11 +366,14 @@ def test_spec_with_stop_token_discards_overshoot():
 def test_prefill_zero_progress_guard_raises():
     """If a prefill chunk reports zero progress twice without the
     CoW-failure preemption flipping the request's state, the engine must
-    fail fast instead of spinning forever."""
+    fail fast instead of spinning forever.  (Legacy-path guard: the
+    ragged work-list planner takes one chunk per request per step, so
+    its only zero-progress outcome IS the preemption that drops the
+    item; there is no retry loop to wedge.)"""
     cfg = _cfg()
     params = _params(cfg)
     eng = ServingEngine(cfg, params, CTX, n_slots=2, block_size=8,
-                        max_model_len=32, chunk=8)
+                        max_model_len=32, chunk=8, ragged=False)
     eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
                        max_new_tokens=2))
     eng._prefill_chunk = lambda req, budget: 0      # broken contract
