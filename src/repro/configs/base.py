@@ -115,6 +115,18 @@ class ModelConfig:
     # n_kv_heads, and only 'model' is wired through the cache/activation
     # sharding rules — launch/steps raises NotImplementedError otherwise.
     attn_shard_axis: str = "model"
+    # projection/MLP matmul path for the forward pass (DESIGN §13):
+    #   'dense' — float matmuls; quantization behaviour follows the
+    #             QuantContext mode (fp/fake quantize in float, int
+    #             quantizes on the fly from float weights)
+    #   'int8'  — true W8A8 deploy: weights are pre-quantized int8 codes
+    #             (core.qmodel.quantize_params) with static po2 exponents,
+    #             activations quantize at module boundaries, and every
+    #             projection/MLP/head matmul runs int8 x int8 -> int32 with
+    #             the fused bit-shift requant epilogue.  Requires a
+    #             calibrated QuantContext in INT mode — launch/steps raises
+    #             at build time otherwise.
+    matmul_kernel: str = "dense"
 
     @property
     def resolved_head_dim(self) -> int:

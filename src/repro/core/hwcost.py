@@ -30,6 +30,7 @@ __all__ = [
     "HardwareReport",
     "estimate",
     "memory_access_bytes",
+    "forward_quant_ops_per_token",
 ]
 
 CLOCK_HZ = 500e6  # paper's synthesis clock
@@ -83,6 +84,35 @@ def estimate(kind: str, n_quant_ops: int) -> HardwareReport:
         area_um2=c.area_um2,
         vs_bit_shift_energy=c.energy_pj / ref.energy_pj,
     )
+
+
+def forward_quant_ops_per_token(cfg) -> int:
+    """Per-token quantization ops of a W8A8 dense-transformer forward.
+
+    Extends the Table-5 accounting from the KV path to the full forward
+    (DESIGN §13).  Counts only the DYNAMIC per-token ops the requant unit
+    executes at serve time: the Eq.-1 activation quantization at each
+    unified-module input boundary plus the fused Eq.-5 bit-shift
+    requantization of each module's int32 output.  Weight and bias codes
+    are produced once at engine build (:func:`repro.core.qmodel.quantize_params`)
+    and amortize to zero per token; KV-cache quantization is counted
+    separately by the engine's existing KV counters.
+
+    Per layer (GQA dims): inputs to wq/wk/wv (3*d_model, the shared
+    post-norm activation is quantized once per projection — each module
+    has its own N_x grid), wo (n_heads*head_dim), w1/w3 (2*d_model) and
+    w2 (d_ff); outputs of wq (n_heads*head_dim), wk/wv
+    (2*n_kv_heads*head_dim), wo (d_model), w1/w3 (2*d_ff) and w2
+    (d_model).  Plus the lm_head boundary: d_model in, vocab_padded out.
+    """
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    q_dim = cfg.n_heads * hd
+    kv_dim = cfg.n_kv_heads * hd
+    act_in = 3 * d + q_dim + 2 * d + cfg.d_ff
+    requant_out = q_dim + 2 * kv_dim + d + 2 * cfg.d_ff + d
+    head = d + cfg.vocab_padded
+    return cfg.n_layers * (act_in + requant_out) + head
 
 
 def memory_access_bytes(n_elements: int, bits: int) -> int:

@@ -26,19 +26,53 @@ from repro.core.calibrate import (CalibrationReport, calibrate_linear_module)
 from repro.core.qmodel import ModuleBits, QuantContext, QuantMode
 from repro.core.qscheme import fake_quant, search_window
 
-__all__ = ["calibrate_lm"]
+__all__ = ["calibrate_lm", "DATAFLOW_CHAIN"]
+
+# Paper §2.2 sequential joint scheme: the upstream module's output grid N_o
+# becomes the downstream module's input grid N_x, so the value flowing along
+# the dataflow edge is quantized ONCE.  A transformer breaks the strict CNN
+# chain (norms/softmax/SiLU sit between most matmuls), but two edges are
+# range-preserving enough to inherit the grid (DESIGN §13):
+#   attn/wo <- attn/wv : attention output rows are softmax-convex
+#       combinations of V rows, so the o-projection input lives inside the
+#       value projection's output range — V's grid is its natural grid.
+#   mlp/w2 <- mlp/w1   : h = silu(g) * u with |silu(g)| <= |g|, so the gate
+#       projection's grid bounds the gating factor; the windowed
+#       (N_w, N_b, N_o) search absorbs the residual range shift from u.
+# Keys are matched as module-name suffixes so prefixed blocks (e.g.
+# 'shared/attn/wo') inherit the same way.
+DATAFLOW_CHAIN = {"attn/wo": "attn/wv", "mlp/w2": "mlp/w1"}
+
+
+def _upstream_of(name: str, chain) -> Optional[str]:
+    """Resolve ``name``'s dataflow upstream under suffix-matched ``chain``."""
+    for suffix, up in chain.items():
+        if name == suffix or name.endswith("/" + suffix):
+            return name[: len(name) - len(suffix)] + up
+    return None
 
 
 def calibrate_lm(forward_fn, params, batch, *, bits: int = 8, tau: int = 4,
-                 sample_rows: int = 2048) -> tuple[QuantContext,
-                                                   CalibrationReport]:
+                 sample_rows: int = 2048,
+                 chain=None) -> tuple[QuantContext, CalibrationReport]:
     """Calibrate every qlinear module of an LM.
 
     forward_fn(params, batch, ctx) must run the model's forward (loss or
     logits — only the capture side effects matter).
     ``sample_rows`` subsamples token rows per module to bound the grid
     search cost (the paper calibrates on one image's worth of activations).
+
+    ``chain`` maps a module-name suffix to its dataflow upstream; for each
+    chained module the upstream's chosen ``N_o`` is inherited as ``N_x``
+    (the paper's sequential joint scheme) and the module is calibrated on
+    the already-quantized input ``fake_quant(x, N_x)`` — equivalent to
+    calibrating the composed pair module-by-module.  Defaults to
+    :data:`DATAFLOW_CHAIN`; pass ``{}`` to disable threading.  Capture
+    order is call order, so the store iterates in dataflow order and every
+    upstream is calibrated before its consumer.
     """
+    if chain is None:
+        chain = DATAFLOW_CHAIN
     with qmodel.capture_activations() as store:
         forward_fn(params, batch, QuantContext(mode=QuantMode.FP))
         jax.effects_barrier()
@@ -59,19 +93,29 @@ def calibrate_lm(forward_fn, params, batch, *, bits: int = 8, tau: int = 4,
             y = xx.astype(jnp.float32) @ wq.astype(jnp.float32)
             return y + bq.astype(jnp.float32) if bq is not None else y
 
-        # extend Algorithm 1's grid with the INPUT grid N_x (the LM input
-        # is a fresh quant point per module boundary, unlike the CNN chain
-        # where N_x is inherited): a slightly finer-than-max grid often
-        # wins by clipping activation outliers.
-        nx_hi = (bits - 1) - search_window(x, 0)[1]
-        best = None
-        for n_x in (nx_hi, nx_hi + 1, nx_hi + 2):
-            xq = fake_quant(x, n_x, bits)
-            r = calibrate_linear_module(xq, w, b, o_ref, apply, bits=bits,
-                                        tau=tau)
-            if best is None or r.error < best[1].error:
-                best = (n_x, r)
-        n_x, r = best
+        upstream = _upstream_of(name, chain)
+        if upstream is not None and upstream in table:
+            # threaded edge: inherit the upstream output grid (N_o -> N_x)
+            # and calibrate (N_w, N_b, N_o) on the already-quantized input —
+            # the value crossing this dataflow edge is quantized once.
+            n_x = table[upstream].n_o
+            r = calibrate_linear_module(fake_quant(x, n_x, bits), w, b,
+                                        o_ref, apply, bits=bits, tau=tau)
+        else:
+            # unchained boundary: extend Algorithm 1's grid with the INPUT
+            # grid N_x (the LM input is a fresh quant point per module
+            # boundary, unlike the CNN chain where N_x is inherited): a
+            # slightly finer-than-max grid often wins by clipping
+            # activation outliers.
+            nx_hi = (bits - 1) - search_window(x, 0)[1]
+            best = None
+            for n_x in (nx_hi, nx_hi + 1, nx_hi + 2):
+                xq = fake_quant(x, n_x, bits)
+                r = calibrate_linear_module(xq, w, b, o_ref, apply,
+                                            bits=bits, tau=tau)
+                if best is None or r.error < best[1].error:
+                    best = (n_x, r)
+            n_x, r = best
         report.add(name, r)
         table[name] = ModuleBits(n_x=n_x, n_w=r.n_w, n_b=r.n_b, n_o=r.n_o)
     return QuantContext(mode=QuantMode.FAKE, bits=bits, table=table), report

@@ -28,7 +28,9 @@ from repro.core.calibrate import CalibrationReport
 from repro.core.qscheme import QuantParams, fake_quant, quant, dequant
 
 __all__ = ["QuantMode", "ModuleBits", "QuantContext", "qlinear",
-           "quantize_weight_tree", "DEFAULT_N_W", "DEFAULT_N_X", "DEFAULT_N_O"]
+           "quantize_weight_tree", "QuantizedParams", "quantize_params",
+           "module_name_for_path",
+           "DEFAULT_N_W", "DEFAULT_N_X", "DEFAULT_N_O"]
 
 # Static fall-back fractional bits (paper Fig. 2b: chosen shifts cluster
 # around 3 and 8 for weights/activations on ResNet-50; transformer weights
@@ -149,6 +151,13 @@ def qlinear(ctx: QuantContext, name: str, x: jax.Array, w: jax.Array,
     :func:`quantize_weight_tree`); float weights are quantized on the fly
     (dry-run convenience path).
     """
+    if w.dtype == jnp.int8 and ctx.mode != QuantMode.INT:
+        # pre-quantized codes are meaningless as float values — a fp/fake
+        # forward over a quantize_params tree is a wiring bug, not a result.
+        raise ValueError(
+            f"module {name!r}: int8 weight codes reached the "
+            f"{ctx.mode.value!r} path — QuantizedParams trees require INT "
+            "mode (cfg.matmul_kernel='int8')")
     if ctx.mode == QuantMode.FP:
         _maybe_capture(name, x, w, b)
         return _fp_linear(x, w, b)
@@ -216,3 +225,79 @@ def quantize_weight_tree(params: Any, ctx: QuantContext,
         else:
             out.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# W8A8 deploy containers (DESIGN §13)
+# ---------------------------------------------------------------------------
+
+def module_name_for_path(path_name: str, table: Mapping[str, ModuleBits]
+                         ) -> Optional[str]:
+    """Map a params-tree path to the qlinear module name the forward uses.
+
+    Tree paths carry structural prefixes the calibration table does not
+    ('blocks/attn/wq' vs the qlinear name 'attn/wq'); the longest path
+    suffix present in the table is the module whose grid the forward will
+    read at this weight.  None when no calibrated module matches — such
+    leaves stay float and (in INT mode) quantize on the fly at defaults.
+    """
+    parts = path_name.split("/")
+    for i in range(len(parts)):
+        cand = "/".join(parts[i:])
+        if cand in table:
+            return cand
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedParams:
+    """Deploy-time weight container for ``cfg.matmul_kernel='int8'``.
+
+    ``tree`` is the params pytree with matmul weights replaced by int8
+    codes; the po2 exponents live in ``ctx.table`` (static, hashable —
+    they become compile-time shift constants in the fused kernel, which
+    is also why the §8 shard_map path needs no changes: codes shard
+    exactly like their float counterparts and exponents ride along as
+    kernel constants).  ``converted`` records which tree paths were
+    quantized, for reporting and tests.
+    """
+
+    tree: Any
+    ctx: QuantContext
+    converted: tuple = ()
+
+
+def quantize_params(params: Any, ctx: QuantContext) -> QuantizedParams:
+    """Pre-quantize calibrated matmul weights to int8 codes (DESIGN §13).
+
+    Codes are bit-identical to qlinear's on-the-fly ``quant(w, mb.n_w)``
+    — the INT branch passes int8 weights through untouched, so a forward
+    over the returned tree produces exactly the tokens of the float-weight
+    INT forward while skipping the per-step weight quantization.  Only
+    2-D+ leaves whose path maps onto a calibrated module convert;
+    embeddings, norm gains and biases stay float (a tied lm_head reads
+    ``embed.T`` and therefore also stays float, quantizing on the fly to
+    the same codes).  Scanned stacks quantize the whole leading layer
+    axis on the one shared grid, matching the scan constraint (DESIGN §3).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+
+    def path_name(path):
+        return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+
+    out, converted = [], []
+    for path, leaf in flat:
+        nm = path_name(path)
+        mod = module_name_for_path(nm, ctx.table)
+        if (mod is not None and isinstance(leaf, jax.Array)
+                and leaf.ndim >= 2 and leaf.dtype != jnp.int8
+                and "embed" not in nm):
+            mb = ctx.bits_for(mod)
+            out.append(quant(leaf, mb.n_w, ctx.bits))
+            converted.append(nm)
+        else:
+            out.append(leaf)
+    return QuantizedParams(
+        tree=jax.tree_util.tree_unflatten(treedef, out), ctx=ctx,
+        converted=tuple(converted))

@@ -13,6 +13,16 @@ Tiling: grid (M/bm, N/bn, K/bk) with K innermost ("arbitrary" semantics);
 the int32 accumulator tile lives in a VMEM scratch buffer across K steps.
 MXU alignment: bm/bn/bk multiples of 128 when shapes allow (int8 MXU packs
 32x128x128); the ops.py wrapper pads otherwise.
+
+W8A8 serving (DESIGN §13): every qlinear module of the engine forward
+routes here through ``ops.int8_matmul`` when ``cfg.matmul_kernel='int8'``
+— all shift amounts come from the calibrated ``LinearQuantSpec`` and are
+compile-time constants, so one specialization per module shape serves
+the whole run (and shards unchanged under §8 shard_map).  On interpret-
+mode backends the wrapper runs ``integer_ops.int_linear`` instead (bit-
+exact, no Python-loop overhead); kernel tests force the body with
+``force_kernel=True``.  Zero-padded tiles are proven leak-free through
+both bias-align shift signs in ``tests/test_kernels.py``.
 """
 from __future__ import annotations
 

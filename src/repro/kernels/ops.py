@@ -62,12 +62,20 @@ def _pick_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
 
 def int8_matmul(x_int: jax.Array, w_int: jax.Array,
                 b_int: Optional[jax.Array], spec: LinearQuantSpec,
-                *, relu: bool = False) -> jax.Array:
+                *, relu: bool = False, force_kernel: bool = False) -> jax.Array:
     """(..., K) int8 @ (K, N) int8 -> (..., N) int8 with fused requant.
 
-    Static shift constants come from ``spec`` (deploy artifacts).  Shapes
-    not worth a kernel launch (tiny K or M) use the jnp reference — same
-    bit-exact contract.
+    The batched/ragged entry point for the W8A8 forward (DESIGN §13):
+    leading dims — a (B, S) batch or a packed ragged (T,) token stream —
+    are flattened into the M axis.  Static shift constants come from
+    ``spec`` (deploy artifacts).  Shapes not worth a kernel launch (tiny
+    K, N or M — e.g. non-MXU-aligned head/model dims) use the jnp
+    reference ``int_linear`` — same bit-exact contract, so the fallback
+    is invisible to the parity rig.  On CPU the reference also serves
+    MXU-aligned shapes by default: interpret-mode Pallas simulates the
+    grid serially and would dominate the serving step for zero fidelity
+    gain.  ``force_kernel=True`` overrides that policy so kernel parity
+    tests exercise the fused epilogue itself (in interpret mode on CPU).
     """
     *batch, k = x_int.shape
     n = w_int.shape[-1]
@@ -78,7 +86,7 @@ def int8_matmul(x_int: jax.Array, w_int: jax.Array,
     lo, hi = ((0, (1 << spec.bits) - 1) if unsigned
               else (-(1 << (spec.bits - 1)), (1 << (spec.bits - 1)) - 1))
 
-    if m < 16 or k < 128 or n < 128:
+    if m < 16 or k < 128 or n < 128 or (use_interpret() and not force_kernel):
         out = int_linear(x_int, w_int, b_int, spec, apply_relu=relu)
         return out
 

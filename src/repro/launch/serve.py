@@ -175,7 +175,7 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                  requests=None, cfg_overrides: dict | None = None,
                  shared_prefix: int = 0, prefix_cache: bool = True,
                  spec_k: int = 0, drafter="ngram",
-                 ragged: bool = True) -> dict:
+                 ragged: bool = True, w8a8: bool = False) -> dict:
     """Continuous-batching serving on the paged int8-KV block pool
     (DESIGN §9/§10).  Returns {"report", "outputs", "requests", "engine"}.
 
@@ -189,11 +189,19 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
     never reach the prefix cache.  ``ragged=False`` falls back to the
     legacy per-shape step trio (bucketed prefill / decode / spec-verify
     dispatches) instead of the unified ragged work-list (DESIGN §12) —
-    kept for A/B padding and throughput comparison."""
+    kept for A/B padding and throughput comparison.  ``w8a8=True`` is the
+    true-W8A8 deploy path (DESIGN §13): forces mode='int' with
+    Algorithm-1 calibration (threaded along the dataflow), sets
+    ``cfg.matmul_kernel='int8'`` and pre-quantizes the matmul weights to
+    int8 codes, so every projection/MLP/head matmul in the engine runs
+    int8 x int8 -> int32 with the fused bit-shift requant."""
     from repro.serving import ServingEngine
     overrides = dict(cfg_overrides or {})
     if kv_bits is not None:
         overrides.setdefault("kv_cache_bits", kv_bits)
+    if w8a8:
+        mode, calibrate = "int", True
+        overrides["matmul_kernel"] = "int8"
     cfg, mesh = _resolve_cfg_mesh(arch, smoke=smoke, attn_kernel=attn_kernel,
                                   cfg_overrides=overrides,
                                   mesh_shape=mesh_shape)
@@ -208,6 +216,19 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
         ctx_cal, _ = calibrate_lm(
             lambda p, b, c: M.forward(p, b, cfg, c), params, b0)
         ctx = dataclasses.replace(ctx_cal, mode=QuantMode(mode))
+
+    quantized = None
+    if cfg.matmul_kernel == "int8":
+        # W8A8 deploy: one-time weight-code conversion on the calibrated
+        # grids; the engine forward then passes int8 codes straight through
+        # qlinear (bit-identical to on-the-fly quantization).  The codes
+        # shard exactly like their float counterparts under §8 meshes.
+        from repro.core.qmodel import quantize_params
+        if ctx.mode is not QuantMode.INT:
+            raise ValueError("matmul_kernel='int8' requires mode='int' "
+                             "(pass w8a8=True or mode='int')")
+        quantized = quantize_params(params, ctx)
+        params = quantized.tree
 
     if requests is None:
         requests = poisson_workload(
@@ -226,7 +247,8 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                            spec_k=spec_k, drafter=drafter, ragged=ragged)
     report = engine.run(requests)
     return {"report": report, "outputs": engine.outputs(),
-            "requests": requests, "engine": engine}
+            "requests": requests, "engine": engine,
+            "quantized": quantized, "ctx": ctx}
 
 
 def main(argv=None):
@@ -283,6 +305,13 @@ def main(argv=None):
                          "the model-free prompt-lookup self-drafter "
                          "(small-draft-model hooks plug in via the "
                          "serve_engine(drafter=...) API)")
+    ap.add_argument("--w8a8", action="store_true",
+                    help="[--engine] true W8A8 serving (DESIGN §13): "
+                         "calibrate with Algorithm 1 threaded along the "
+                         "dataflow, pre-quantize weights to int8 codes and "
+                         "run every projection/MLP/head matmul through the "
+                         "fused int8 shift-requant path (implies "
+                         "--mode int)")
     ap.add_argument("--no-ragged", action="store_true",
                     help="[--engine] use the legacy per-shape step trio "
                          "(bucketed prefill / decode / spec-verify) "
@@ -308,8 +337,17 @@ def main(argv=None):
                            shared_prefix=args.shared_prefix,
                            prefix_cache=not args.no_prefix_cache,
                            spec_k=args.spec_k, drafter=args.drafter,
-                           ragged=not args.no_ragged)
+                           ragged=not args.no_ragged, w8a8=args.w8a8)
         print(json.dumps(out["report"], indent=2))
+        hw = out["report"].get("hwcost", {})
+        if hw.get("w8a8"):
+            print(f"w8a8 forward: {hw['requant_ops_forward']} requant ops "
+                  f"-> {hw['energy_uj_forward_bit_shift']:.3f} uJ "
+                  f"(bit-shift) vs "
+                  f"{hw['energy_uj_forward_if_scaling_factor']:.3f} uJ "
+                  f"(scaling-factor unit); "
+                  f"{len(out['quantized'].converted)} weight tensors "
+                  f"pre-quantized to int8 codes")
         pc = out["report"].get("prefix_cache")
         if pc is not None:
             print(f"prefix cache: hit-rate {pc['hit_rate']:.1%} "

@@ -196,6 +196,25 @@ def _resolve_attn_kernel(cfg: ModelConfig, attn_kernel: Optional[str],
     return cfg
 
 
+def _check_matmul_kernel(cfg: ModelConfig, ctx: QuantContext) -> None:
+    """Build-time validation of the W8A8 matmul path (DESIGN §13).
+
+    ``matmul_kernel='int8'`` means the params tree carries pre-quantized
+    int8 weight codes whose values only make sense on the calibrated po2
+    grids — running them through the fp/fake float paths would silently
+    produce garbage logits, so refuse at build time rather than at the
+    first decoded token."""
+    if cfg.matmul_kernel not in ("dense", "int8"):
+        raise ValueError(
+            f"unknown matmul_kernel={cfg.matmul_kernel!r}; expected "
+            "'dense' or 'int8'")
+    if cfg.matmul_kernel == "int8" and ctx.mode is not QuantMode.INT:
+        raise NotImplementedError(
+            "matmul_kernel='int8' is the W8A8 deploy path: it requires a "
+            "calibrated QuantContext in INT mode (serve --engine --w8a8 "
+            f"builds one); got mode={ctx.mode.value!r}")
+
+
 def _mesh_scope(mesh: Optional[Mesh]):
     """Activation-sharding scope for a step body: makes ``constrain`` and
     ``current_mesh()`` (the shard_map'd flash kernels, DESIGN §8) see the
@@ -210,6 +229,7 @@ def build_prefill_step(cfg: ModelConfig, ctx: QuantContext,
                        mesh: Optional[Mesh] = None,
                        max_seq: Optional[int] = None):
     cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
+    _check_matmul_kernel(cfg, ctx)
 
     def prefill_step(params, batch):
         with _mesh_scope(mesh):
@@ -223,6 +243,7 @@ def build_serve_step(cfg: ModelConfig, ctx: QuantContext,
                      mesh: Optional[Mesh] = None):
     """One batched decode step (greedy sampling of the next token)."""
     cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
+    _check_matmul_kernel(cfg, ctx)
 
     def serve_step(params, tokens, cache, pos):
         with _mesh_scope(mesh):
@@ -244,6 +265,7 @@ def build_paged_step(cfg: ModelConfig, ctx: QuantContext,
     jit specializes per distinct (B, C) — the engine's bucketing keeps
     that set bounded."""
     cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
+    _check_matmul_kernel(cfg, ctx)
 
     def paged_step(params, tokens, cache, positions, block_tables):
         with _mesh_scope(mesh):
@@ -262,6 +284,7 @@ def build_ragged_step(cfg: ModelConfig, ctx: QuantContext,
     paged_step dispatch trio — jit specializes per (T_pad, S_pad) only,
     and the engine's T bucketing keeps that set O(few)."""
     cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
+    _check_matmul_kernel(cfg, ctx)
 
     def ragged_step(params, tokens, cache, positions, ragged):
         with _mesh_scope(mesh):

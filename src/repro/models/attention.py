@@ -278,6 +278,9 @@ def gqa_attention(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
 
     q = linear(ctx, f"{name}/wq", x, p["wq"], p.get("bq"))
     k = linear(ctx, f"{name}/wk", src, p["wk"], p.get("bk"))
+    # wo's input grid is THREADED from wv's output grid (DESIGN §13,
+    # lm_calibrate.DATAFLOW_CHAIN): attention rows are softmax-convex
+    # combinations of V rows, so the wo input lives inside wv's range.
     v = linear(ctx, f"{name}/wv", src, p["wv"], p.get("bv"))
     q = constrain(q.reshape(b, s, h, hd), ("batch", None, "heads", None))
     k = constrain(k.reshape(b, src.shape[1], kvh, hd),

@@ -56,6 +56,9 @@ def mlp(ctx: QuantContext, p: dict, x: jax.Array, act: str = "silu",
         g = _act(linear(ctx, f"{name}/w1", x, p["w1"]), act)
         u = linear(ctx, f"{name}/w3", x, p["w3"])
         h = g * u   # unified-module boundary: ONE quant point after product
+        # w2's input grid is THREADED from w1's output grid (DESIGN §13,
+        # lm_calibrate.DATAFLOW_CHAIN): |silu(g)| <= |g| bounds the gate
+        # factor, so h lives inside w1's calibrated range.
     else:
         h = _act(linear(ctx, f"{name}/w1", x, p["w1"]), act)
     h = constrain(h, ("batch",) + (None,) * (h.ndim - 2) + ("ff",))

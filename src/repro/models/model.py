@@ -190,6 +190,11 @@ def forward(params: dict, batch: dict, cfg: ModelConfig, ctx: QuantContext,
     remat: False (save everything) | 'full' / True (recompute each block in
     backward — the production default: saved state per layer is ONE bf16
     residual) | 'dots' (save matmul outputs).
+
+    W8A8 deploy (DESIGN §13): ``params`` may be a ``QuantizedParams.tree``
+    — matmul weights as int8 codes — in which case ``ctx`` MUST be the
+    matching INT-mode context (qlinear raises otherwise); embeddings and
+    norm gains stay float, so embed/rmsnorm paths are unchanged.
     """
     tokens = batch["tokens"]
     b, s = tokens.shape

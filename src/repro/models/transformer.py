@@ -73,6 +73,11 @@ def _attn_dispatch(ctx, p, x, cfg, positions, cache, cache_pos,
 def dense_block(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
                 *, positions: jax.Array, cache=None, cache_pos=None,
                 use_rope: bool = True, block_tables=None, ragged=None):
+    # W8A8 (DESIGN §13): all quantization lives inside the qlinear
+    # modules; residual adds and rmsnorms run in float between module
+    # grids, so a block over int8 weight codes is bit-identical to the
+    # float-weight INT forward module-for-module (the parity rig's
+    # full-layer case leans on exactly this).
     h, new_cache = _attn_dispatch(ctx, p, rmsnorm(x, p["ln1"], cfg.norm_eps),
                                   cfg, positions, cache, cache_pos, use_rope,
                                   block_tables, ragged)

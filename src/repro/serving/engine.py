@@ -126,6 +126,11 @@ class ServingEngine:
                  prefix_cache: bool = True, spec_k: int = 0,
                  drafter="ngram", ragged: bool = True):
         self.cfg = cfg
+        from repro.core.qmodel import QuantizedParams
+        if isinstance(params, QuantizedParams):
+            # W8A8 deploy container: the engine only ever runs the code
+            # tree; the exponents already live in ctx.table
+            params = params.tree
         self.params = params
         self.ctx = ctx
         self.n_slots = n_slots
@@ -247,6 +252,18 @@ class ServingEngine:
         # exactly the waste the paper's write-once scheme minimizes
         # elsewhere, reported honestly instead of hidden (Table 5)
         self.requant_ops_wasted_spec = 0
+        # true-W8A8 forward accounting (DESIGN §13): per-token dynamic
+        # quant ops of the projection/MLP/head dataflow — activation quant
+        # at every module boundary + the fused output requant.  Zero on the
+        # dense path, so the forward counters below only move under
+        # matmul_kernel='int8'.  Kept SEPARATE from the KV counters above
+        # so the KV-only Table-5 accounting stays comparable across runs.
+        self._fwd_elems_per_token = (
+            hwcost.forward_quant_ops_per_token(cfg)
+            if cfg.matmul_kernel == "int8" else 0)
+        self.requant_ops_forward = 0
+        self.requant_ops_forward_avoided_cache = 0
+        self.requant_ops_forward_wasted_spec = 0
         self.cache_hit_prefill_tokens = 0
         self.decode_steps = 0
         self.prefill_chunks = 0
@@ -302,6 +319,9 @@ class ServingEngine:
         self.requant_ops_avoided = 0
         self.requant_ops_avoided_cache = 0
         self.requant_ops_wasted_spec = 0
+        self.requant_ops_forward = 0
+        self.requant_ops_forward_avoided_cache = 0
+        self.requant_ops_forward_wasted_spec = 0
         self.cache_hit_prefill_tokens = 0
         self.decode_steps = 0
         self.prefill_chunks = 0
@@ -345,6 +365,10 @@ class ServingEngine:
             self.cache_hit_prefill_tokens += req.n_prefilled
             self.requant_ops_avoided_cache += \
                 req.n_prefilled * self._elems_per_token
+            # under W8A8 the hit also skips the whole forward for those
+            # tokens — none of their matmul-boundary quant ops ever run
+            self.requant_ops_forward_avoided_cache += \
+                req.n_prefilled * self._fwd_elems_per_token
         if self.ragged:
             self._run_ragged_step()
             return
@@ -494,6 +518,7 @@ class ServingEngine:
                              req.feed[start:start + c_real])
             self.prefill_chunks += 1
             self.requant_ops_performed += c_real * self._elems_per_token
+            self.requant_ops_forward += c_real * self._fwd_elems_per_token
             if req.n_prefilled == len(req.feed):
                 tok = int(out[i, 0])
                 if req.t_first is None:
@@ -534,6 +559,12 @@ class ServingEngine:
                     (1 + len(d)) * self._elems_per_token
                 self.requant_ops_wasted_spec += \
                     (len(d) - kept_drafts) * self._elems_per_token
+                # every fed row (real token + all drafts) ran the W8A8
+                # forward; rejected drafts' forward ops are pure waste
+                self.requant_ops_forward += \
+                    (1 + len(d)) * self._fwd_elems_per_token
+                self.requant_ops_forward_wasted_spec += \
+                    (len(d) - kept_drafts) * self._fwd_elems_per_token
                 self.spec_drafted += len(d)
                 self.spec_accepted += acc
                 req.n_ctx += 1 + kept_drafts
@@ -546,6 +577,7 @@ class ServingEngine:
             else:
                 self.pool.commit(req.rid, req.n_ctx, [fed_tok])
                 self.requant_ops_performed += self._elems_per_token
+                self.requant_ops_forward += self._fwd_elems_per_token
                 req.n_ctx += 1
                 self.requant_ops_avoided += \
                     req.n_ctx * self._elems_per_token
@@ -645,6 +677,7 @@ class ServingEngine:
         self.pool.commit(req.rid, start, req.feed[start:start + c_real])
         self.prefill_chunks += 1
         self.requant_ops_performed += c_real * self._elems_per_token
+        self.requant_ops_forward += c_real * self._fwd_elems_per_token
         if req.n_prefilled == len(req.feed):
             # prompt fully resident: the token sampled from the last real
             # row IS the first generated token (for preemption resumes it
@@ -688,6 +721,7 @@ class ServingEngine:
         self.padded_tokens += self.n_slots - len(reqs)
         self.decode_steps += 1
         self.requant_ops_performed += len(reqs) * self._elems_per_token
+        self.requant_ops_forward += len(reqs) * self._fwd_elems_per_token
         now = self._now()
         for req in reqs:
             # the fed token's KV row is resident: blocks that fill during
@@ -813,6 +847,10 @@ class ServingEngine:
                 (1 + len(d)) * self._elems_per_token
             self.requant_ops_wasted_spec += \
                 (len(d) - kept_drafts) * self._elems_per_token
+            self.requant_ops_forward += \
+                (1 + len(d)) * self._fwd_elems_per_token
+            self.requant_ops_forward_wasted_spec += \
+                (len(d) - kept_drafts) * self._fwd_elems_per_token
             self.spec_drafted += len(d)
             self.spec_accepted += acc
             req.n_ctx += 1 + kept_drafts
@@ -932,6 +970,25 @@ class ServingEngine:
             "energy_uj_if_scaling_factor": hwcost.estimate(
                 "scaling_factor", perf + avoid).energy_uj,
         }
+        # full-forward W8A8 accounting (DESIGN §13): the Table-5 claim
+        # measured on the whole serving forward, not just the KV path.
+        # Keys are separate from the KV counters above so both remain
+        # individually comparable across W8A8-on/off runs (forward keys
+        # are all zero on the dense path).
+        fwd = self.requant_ops_forward
+        hw.update({
+            "w8a8": self.cfg.matmul_kernel == "int8",
+            "forward_quant_ops_per_token": self._fwd_elems_per_token,
+            "requant_ops_forward": fwd,
+            "requant_ops_forward_avoided_prefix_cache":
+                self.requant_ops_forward_avoided_cache,
+            "requant_ops_forward_wasted_speculation":
+                self.requant_ops_forward_wasted_spec,
+            "energy_uj_forward_bit_shift": hwcost.estimate(
+                "bit_shifting", fwd).energy_uj,
+            "energy_uj_forward_if_scaling_factor": hwcost.estimate(
+                "scaling_factor", fwd).energy_uj,
+        })
         cache = None
         if self.pool.cache is not None:
             cs = self.pool.cache.stats

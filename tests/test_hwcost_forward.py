@@ -1,0 +1,153 @@
+"""Full-forward Table-5 accounting for W8A8 serving (DESIGN §13).
+
+Three layers of exactness:
+  * ``forward_quant_ops_per_token`` equals an independent per-module
+    enumeration of the transformer forward's quant points;
+  * a W8A8 engine run counts EXACTLY fed_tokens x per-token ops — and
+    exactly zero with W8A8 off (the forward keys must not bleed into the
+    KV-path counters, which tests pin separately);
+  * the forward counters reconcile against the KV counters under prefix
+    sharing and speculation: every increment site feeds both families
+    with the same token multiplier, so the cross-products are equal.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import hwcost
+from repro.core.lm_calibrate import calibrate_lm
+from repro.core.qmodel import QuantContext, QuantMode, quantize_params
+from repro.models import model as M
+from repro.serving import Request, ServingEngine
+
+SCALE = dict(dtype="float32", n_layers=2, d_model=64, n_heads=4,
+             n_kv_heads=2, d_ff=128, head_dim=16)
+
+
+def _cfg(**kw):
+    cfg = get_smoke_config("qwen3_1_7b").scaled(**SCALE)
+    return dataclasses.replace(cfg, kv_cache_bits=8, **kw)
+
+
+@pytest.mark.parametrize("scale", [
+    SCALE,
+    dict(dtype="float32", n_layers=3, d_model=96, n_heads=6,
+         n_kv_heads=3, d_ff=160, head_dim=32),
+])
+def test_per_token_formula_matches_module_enumeration(scale):
+    """Independent re-derivation: walk the forward module by module and
+    sum (input quant elems + output requant elems) per token."""
+    cfg = get_smoke_config("qwen3_1_7b").scaled(**scale)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    modules = []                       # (in_features, out_features)
+    for _ in range(cfg.n_layers):
+        modules += [(d, cfg.n_heads * hd),        # attn/wq
+                    (d, cfg.n_kv_heads * hd),     # attn/wk
+                    (d, cfg.n_kv_heads * hd),     # attn/wv
+                    (cfg.n_heads * hd, d),        # attn/wo
+                    (d, cfg.d_ff),                # mlp/w1
+                    (d, cfg.d_ff),                # mlp/w3
+                    (cfg.d_ff, d)]                # mlp/w2
+    modules += [(d, cfg.vocab_padded)]            # lm_head
+    want = sum(i + o for i, o in modules)
+    assert hwcost.forward_quant_ops_per_token(cfg) == want
+
+
+@pytest.fixture(scope="module")
+def cal():
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(2, 32)), jnp.int32)}
+    ctx_cal, _ = calibrate_lm(
+        lambda p, b, c: M.forward(p, b, cfg, c), params, batch)
+    ctx = dataclasses.replace(ctx_cal, mode=QuantMode.INT)
+    return dict(cfg=cfg, params=params, ctx=ctx,
+                qp=quantize_params(params, ctx))
+
+
+def _reqs(rng, n, vocab, *, prefix=0):
+    pre = rng.integers(0, vocab, size=prefix).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, vocab, size=int(rng.integers(5, 12))
+                            ).astype(np.int32)
+        out.append(Request(
+            rid=i, prompt=np.concatenate([pre, tail]) if prefix else tail,
+            max_new_tokens=int(rng.integers(3, 7))))
+    return out
+
+
+def _run(cfg, params, ctx, reqs, **kw):
+    eng = ServingEngine(cfg, params, ctx, n_slots=2, block_size=8,
+                        max_model_len=48, chunk=8, **kw)
+    rep = eng.run(reqs)
+    assert rep["completed"] == len(reqs)
+    return eng, rep
+
+
+@pytest.mark.parametrize("w8a8", [True, False])
+def test_engine_counts_exactly_fed_tokens(cal, w8a8):
+    """Greedy decode, unique prompts, no prefix cache: a request of
+    prompt P generating G tokens feeds P + G - 1 tokens through the
+    forward (the prefill's last position samples token 1), and the W8A8
+    counter is exactly that total times the per-token formula.  With
+    W8A8 off, every forward key reports zero."""
+    cfg = _cfg(matmul_kernel="int8") if w8a8 else _cfg()
+    params = cal["qp"] if w8a8 else cal["params"]
+    ctx = cal["ctx"] if w8a8 else QuantContext(mode=QuantMode.FP)
+    reqs = _reqs(np.random.default_rng(2), 5, cfg.vocab_size)
+    eng, rep = _run(cfg, params, ctx, reqs, prefix_cache=False)
+    fed = sum(len(r.prompt) + r.max_new_tokens - 1 for r in reqs)
+    hw = rep["hwcost"]
+    per_tok = hwcost.forward_quant_ops_per_token(cfg)
+    if w8a8:
+        assert hw["w8a8"] is True
+        assert hw["forward_quant_ops_per_token"] == per_tok
+        assert hw["requant_ops_forward"] == fed * per_tok
+        assert hw["requant_ops_forward_avoided_prefix_cache"] == 0
+        assert hw["requant_ops_forward_wasted_speculation"] == 0
+        assert hw["energy_uj_forward_bit_shift"] == pytest.approx(
+            hwcost.estimate("bit_shifting", fed * per_tok).energy_uj)
+        # Table 5's gap, now full-forward: shift-based requant vs the
+        # per-tensor scaling-factor baseline on the same op count
+        assert hw["energy_uj_forward_if_scaling_factor"] > \
+            hw["energy_uj_forward_bit_shift"]
+    else:
+        assert hw["w8a8"] is False
+        assert hw["forward_quant_ops_per_token"] == 0
+        assert hw["requant_ops_forward"] == 0
+        assert hw["energy_uj_forward_bit_shift"] == 0.0
+        # KV-path accounting still runs on the dense engine
+        assert hw["requant_ops_performed"] > 0
+
+
+@pytest.mark.parametrize("scenario", ["prefix", "spec"])
+def test_forward_reconciles_with_kv_counters(cal, scenario):
+    """Both counter families see the same fed/avoided/wasted token
+    streams, so forward * kv_per_token == kv * forward_per_token holds
+    EXACTLY — under prefix-cache admission skips and speculative
+    rollback alike.  A drifting increment site breaks the product."""
+    cfg = _cfg(matmul_kernel="int8")
+    rng = np.random.default_rng(3)
+    kw = dict(spec_k=2) if scenario == "spec" else {}
+    reqs = _reqs(rng, 5, cfg.vocab_size,
+                 prefix=16 if scenario == "prefix" else 0)
+    eng, rep = _run(cfg, cal["qp"], cal["ctx"], reqs, **kw)
+    kv_per, fwd_per = eng._elems_per_token, eng._fwd_elems_per_token
+    assert fwd_per > 0 and kv_per > 0
+    assert eng.requant_ops_forward * kv_per == \
+        eng.requant_ops_performed * fwd_per
+    assert eng.requant_ops_forward_avoided_cache * kv_per == \
+        eng.requant_ops_avoided_cache * fwd_per
+    assert eng.requant_ops_forward_wasted_spec * kv_per == \
+        eng.requant_ops_wasted_spec * fwd_per
+    if scenario == "prefix":
+        assert eng.requant_ops_forward_avoided_cache > 0
+    if scenario == "spec":
+        assert rep["spec_steps"] > 0

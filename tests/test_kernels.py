@@ -27,7 +27,7 @@ def test_int8_matmul_shapes(m, k, n, has_bias):
     x, w = _codes((m, k), 1), _codes((k, n), 2)
     b = _codes((n,), 3) if has_bias else None
     spec = LinearQuantSpec(n_x=4, n_w=8, n_b=7, n_o=4)
-    out = ops.int8_matmul(x, w, b, spec)
+    out = ops.int8_matmul(x, w, b, spec, force_kernel=True)
     expect = ref.int8_matmul_ref(x, w, b, shift=spec.requant_shift,
                                  bias_shift=spec.bias_shift)
     assert out.dtype == jnp.int8
@@ -45,7 +45,7 @@ def test_int8_matmul_negative_bias_shift():
     b = _codes((128,), 23)
     spec = LinearQuantSpec(n_x=2, n_w=2, n_b=10, n_o=1)
     assert spec.bias_shift < 0  # the buggy branch
-    out = ops.int8_matmul(x, w, b, spec)
+    out = ops.int8_matmul(x, w, b, spec, force_kernel=True)
     expect = ref.int8_matmul_ref(x, w, b, shift=spec.requant_shift,
                                  bias_shift=spec.bias_shift)
     assert np.array_equal(np.asarray(out), np.asarray(expect))
@@ -55,7 +55,7 @@ def test_int8_matmul_batch_dims():
     x = _codes((4, 32, 256), 5)
     w = _codes((256, 128), 6)
     spec = LinearQuantSpec(n_x=4, n_w=8, n_b=8, n_o=4)
-    out = ops.int8_matmul(x, w, None, spec)
+    out = ops.int8_matmul(x, w, None, spec, force_kernel=True)
     expect = ref.int8_matmul_ref(x.reshape(-1, 256), w, None,
                                  shift=spec.requant_shift).reshape(4, 32, 128)
     assert np.array_equal(np.asarray(out), np.asarray(expect))
@@ -64,11 +64,44 @@ def test_int8_matmul_batch_dims():
 def test_int8_matmul_fused_relu():
     x, w = _codes((128, 256), 7), _codes((256, 128), 8)
     spec = LinearQuantSpec(n_x=4, n_w=8, n_b=8, n_o=4, out_unsigned=True)
-    out = ops.int8_matmul(x, w, None, spec, relu=True)
+    out = ops.int8_matmul(x, w, None, spec, relu=True, force_kernel=True)
     expect = ref.int8_matmul_ref(x, w, None, shift=spec.requant_shift,
                                  relu=True, lo=0, hi=255, out_dtype=jnp.uint8)
     assert out.dtype == jnp.uint8
     assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_int8_matmul_padded_tiles_negative_bias_shift():
+    """Regression (W8A8 serving): zero-padded tiles cannot leak through
+    bias-align under a negative ``bias_shift``.
+
+    With k, n > 512 and non-multiples of the (bm, bk, bn) = (128, 512,
+    512) tile quanta, the kernel genuinely zero-pads K and N (smaller
+    operands clamp the block to the operand and never pad — see
+    ``_pick_blocks``).  A finer-than-accumulator bias grid (n_b > n_x +
+    n_w, bias_shift < 0) then routes every padded column's zero bias
+    through the rounding right-shift; the contract is that a zero
+    contribution stays exactly zero through BOTH shift signs, so the
+    valid region must equal the unpadded integer reference bit-for-bit.
+    """
+    from repro.core.integer_ops import int_linear
+    m, k, n = 150, 600, 640                 # pads to (256, 1024, 1024)
+    x, w = _codes((m, k), 31), _codes((k, n), 32)
+    b = _codes((n,), 33)
+    spec = LinearQuantSpec(n_x=2, n_w=3, n_b=9, n_o=4)
+    assert spec.bias_shift < 0 and spec.requant_shift > 0
+    out = ops.int8_matmul(x, w, b, spec, force_kernel=True)
+    assert out.shape == (m, n)              # padding stripped
+    expect = int_linear(x, w, b, spec)      # serving's jnp reference path
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+    # saturating bias codes + fused relu on the same padded grid
+    spec_r = LinearQuantSpec(n_x=2, n_w=3, n_b=9, n_o=4, out_unsigned=True)
+    b_sat = jnp.where(jnp.arange(n) % 2 == 0, 127, -128).astype(jnp.int8)
+    out_r = ops.int8_matmul(x, w, b_sat, spec_r, relu=True,
+                            force_kernel=True)
+    assert np.array_equal(np.asarray(out_r),
+                          np.asarray(int_linear(x, w, b_sat, spec_r,
+                                                apply_relu=True)))
 
 
 @pytest.mark.parametrize("rows,cols", [(8, 128), (256, 512), (100, 640),
@@ -99,7 +132,7 @@ def test_property_int8_matmul_any_shape(m, k, n, shift_in, seed):
     w = _codes((k, n), seed + 1)
     spec = LinearQuantSpec(n_x=shift_in // 2, n_w=shift_in - shift_in // 2,
                            n_b=4, n_o=2)
-    out = ops.int8_matmul(x, w, None, spec)
+    out = ops.int8_matmul(x, w, None, spec, force_kernel=True)
     expect = ref.int8_matmul_ref(x, w, None, shift=spec.requant_shift)
     assert np.array_equal(np.asarray(out), np.asarray(expect))
 

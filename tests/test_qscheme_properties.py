@@ -91,7 +91,7 @@ def test_int8_matmul_bias_shift_sign_property(n_b, relu, seed):
     x = jnp.asarray(rng.integers(-128, 128, size=(16, 128)), jnp.int8)
     w = jnp.asarray(rng.integers(-128, 128, size=(128, 128)), jnp.int8)
     b = jnp.asarray(rng.integers(-128, 128, size=(128,)), jnp.int8)
-    got = ops.int8_matmul(x, w, b, spec, relu=relu)
+    got = ops.int8_matmul(x, w, b, spec, relu=relu, force_kernel=True)
     ref = int_linear(x, w, b, spec, apply_relu=relu)
     assert jnp.array_equal(got, ref), f"bias_shift={spec.bias_shift}"
 
