@@ -1,0 +1,81 @@
+"""Inspect a serving trace exported by the observability layer.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b \
+        --engine --requests 8 --trace /tmp/trace.json
+    PYTHONPATH=src python examples/inspect_trace.py /tmp/trace.json
+
+The file is Chrome trace-event JSON (DESIGN §14): load it at
+https://ui.perfetto.dev (or chrome://tracing) to see the lanes —
+engine steps, jitted dispatches (with padded-token counts and
+compile-vs-steady flags), scheduler admissions/preemptions, pool
+alloc/evict/retract, prefix-cache hits, and one span per request
+from admission to completion.
+
+This script does the same offline: validates the schema, then prints
+a lane-by-lane span summary and the per-request timelines with
+trace-derived TTFT/TPOT.
+"""
+import argparse
+import json
+from collections import defaultdict
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace-event JSON "
+                                  "(serve --engine --trace OUT.json)")
+    ap.add_argument("--top", type=int, default=8,
+                    help="spans to list per lane (by total duration)")
+    args = ap.parse_args()
+
+    with open(args.trace) as f:
+        obj = json.load(f)
+
+    from repro.obs import validate_chrome_trace
+    problems = validate_chrome_trace(obj)
+    if problems:
+        raise SystemExit("invalid trace:\n  " + "\n  ".join(problems))
+
+    events = obj["traceEvents"]
+    meta = obj.get("otherData", {})
+    # tid -> lane name from the thread_name metadata events
+    lanes = {e["tid"]: e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    spans = [e for e in events if e["ph"] == "X"]
+    instants = [e for e in events if e["ph"] in ("i", "I")]
+    print(f"{args.trace}: {len(events)} events "
+          f"({len(spans)} spans, {len(instants)} instants), "
+          f"ring dropped={meta.get('dropped_events', '?')} "
+          f"capacity={meta.get('ring_capacity', '?')}")
+
+    per_lane = defaultdict(lambda: defaultdict(lambda: [0, 0.0]))
+    for e in spans:
+        agg = per_lane[lanes.get(e["tid"], f"tid{e['tid']}")][e["name"]]
+        agg[0] += 1
+        agg[1] += e.get("dur", 0.0)
+    for lane in sorted(per_lane):
+        print(f"\n[{lane}]")
+        rows = sorted(per_lane[lane].items(),
+                      key=lambda kv: -kv[1][1])[:args.top]
+        for name, (n, dur) in rows:
+            print(f"  {name:<32s} x{n:<5d} total {dur / 1e3:9.3f} ms")
+
+    # per-request timelines live in the 'requests' lane: one span per
+    # request (admission -> done) plus a first_token instant for TTFT
+    reqs = [e for e in spans if lanes.get(e["tid"]) == "requests"]
+    if reqs:
+        print(f"\n[timelines] {len(reqs)} requests")
+        for e in sorted(reqs, key=lambda e: e["ts"])[:args.top]:
+            a = e["args"]
+            # span runs admit -> done; true e2e is measured from arrival
+            e2e = (e["ts"] + e.get("dur", 0.0)) / 1e6 - a["arrival_s"]
+            fmt = lambda v: f"{1e3 * v:8.2f} ms" if v is not None else "       --"
+            print(f"  {e['name']:<12s} e2e {1e3 * e2e:9.3f} ms  "
+                  f"ttft {fmt(a.get('ttft_s'))}  "
+                  f"tpot {fmt(a.get('tpot_s'))}")
+
+    print("\nopen in Perfetto: https://ui.perfetto.dev  ->  Open trace file")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ __all__ = [
     "TABLE5",
     "CLOCK_HZ",
     "energy_per_op_pj",
+    "energy_uj",
     "HardwareReport",
     "estimate",
     "memory_access_bytes",
@@ -59,6 +60,13 @@ def energy_per_op_pj(kind: str) -> float:
     return TABLE5[kind].energy_pj
 
 
+def energy_uj(kind: str, n_quant_ops: int) -> float:
+    """Total requant energy in uJ for ``n_quant_ops`` ops of ``kind`` —
+    the scalar the live obs gauges read at every snapshot (DESIGN §14),
+    without building a full :class:`HardwareReport` per read."""
+    return TABLE5[kind].energy_pj * n_quant_ops * 1e-6
+
+
 @dataclasses.dataclass
 class HardwareReport:
     kind: str
@@ -80,7 +88,7 @@ def estimate(kind: str, n_quant_ops: int) -> HardwareReport:
     return HardwareReport(
         kind=kind,
         n_quant_ops=n_quant_ops,
-        energy_uj=c.energy_pj * n_quant_ops * 1e-6,
+        energy_uj=energy_uj(kind, n_quant_ops),
         area_um2=c.area_um2,
         vs_bit_shift_energy=c.energy_pj / ref.energy_pj,
     )

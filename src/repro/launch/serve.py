@@ -175,7 +175,11 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                  requests=None, cfg_overrides: dict | None = None,
                  shared_prefix: int = 0, prefix_cache: bool = True,
                  spec_k: int = 0, drafter="ngram",
-                 ragged: bool = True, w8a8: bool = False) -> dict:
+                 ragged: bool = True, w8a8: bool = False,
+                 trace: str | bool = False, trace_capacity: int = 65536,
+                 metrics_path: str | None = None,
+                 profile_dir: str | None = None,
+                 profile_cost: bool = False) -> dict:
     """Continuous-batching serving on the paged int8-KV block pool
     (DESIGN §9/§10).  Returns {"report", "outputs", "requests", "engine"}.
 
@@ -194,7 +198,16 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
     Algorithm-1 calibration (threaded along the dataflow), sets
     ``cfg.matmul_kernel='int8'`` and pre-quantizes the matmul weights to
     int8 codes, so every projection/MLP/head matmul in the engine runs
-    int8 x int8 -> int32 with the fused bit-shift requant."""
+    int8 x int8 -> int32 with the fused bit-shift requant.
+
+    Observability (DESIGN §14): ``trace`` turns on the ring-buffered
+    event tracer — pass a path string to also export the Chrome
+    trace-event JSON there (load it in Perfetto / ``chrome://tracing``).
+    ``metrics_path`` writes the prometheus text exposition of the
+    metrics registry after the run.  ``profile_dir`` wraps each jitted
+    dispatch in a ``jax.profiler`` step annotation and captures the run
+    into that directory; ``profile_cost`` additionally records XLA
+    FLOPs/bytes per compiled shape via AOT ``cost_analysis()``."""
     from repro.serving import ServingEngine
     overrides = dict(cfg_overrides or {})
     if kv_bits is not None:
@@ -244,8 +257,20 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                            max_model_len=max_model_len,
                            num_blocks=num_blocks, top_k=top_k, mesh=mesh,
                            seed=seed, prefix_cache=prefix_cache,
-                           spec_k=spec_k, drafter=drafter, ragged=ragged)
-    report = engine.run(requests)
+                           spec_k=spec_k, drafter=drafter, ragged=ragged,
+                           trace=bool(trace), trace_capacity=trace_capacity,
+                           profile_dir=profile_dir,
+                           profile_cost=profile_cost)
+    if profile_dir is not None:
+        with engine.profiler.capture():
+            report = engine.run(requests)
+    else:
+        report = engine.run(requests)
+    if isinstance(trace, str) and trace:
+        engine.tracer.export(trace)
+    if metrics_path is not None:
+        with open(metrics_path, "w") as fh:
+            fh.write(engine.metrics.to_prometheus())
     return {"report": report, "outputs": engine.outputs(),
             "requests": requests, "engine": engine,
             "quantized": quantized, "ctx": ctx}
@@ -312,6 +337,26 @@ def main(argv=None):
                          "run every projection/MLP/head matmul through the "
                          "fused int8 shift-requant path (implies "
                          "--mode int)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="[--engine] enable structured event tracing "
+                         "(DESIGN §14) and export the run as Chrome "
+                         "trace-event JSON — open it in Perfetto "
+                         "(ui.perfetto.dev) or chrome://tracing")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="[--engine --trace] trace ring-buffer size; the "
+                         "ring is a hard memory bound — oldest events "
+                         "drop first and the export reports the count")
+    ap.add_argument("--metrics", default=None, metavar="OUT.prom",
+                    help="[--engine] write the metrics registry as "
+                         "prometheus text exposition after the run")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="[--engine] capture a jax.profiler trace of the "
+                         "run into DIR (one StepTraceAnnotation per "
+                         "jitted dispatch)")
+    ap.add_argument("--profile-cost", action="store_true",
+                    help="[--engine] record XLA FLOPs/bytes per compiled "
+                         "shape via AOT cost_analysis() in the report's "
+                         "profile section")
     ap.add_argument("--no-ragged", action="store_true",
                     help="[--engine] use the legacy per-shape step trio "
                          "(bucketed prefill / decode / spec-verify) "
@@ -337,8 +382,27 @@ def main(argv=None):
                            shared_prefix=args.shared_prefix,
                            prefix_cache=not args.no_prefix_cache,
                            spec_k=args.spec_k, drafter=args.drafter,
-                           ragged=not args.no_ragged, w8a8=args.w8a8)
+                           ragged=not args.no_ragged, w8a8=args.w8a8,
+                           trace=args.trace if args.trace else False,
+                           trace_capacity=args.trace_capacity,
+                           metrics_path=args.metrics,
+                           profile_dir=args.profile_dir,
+                           profile_cost=args.profile_cost)
         print(json.dumps(out["report"], indent=2))
+        if args.trace:
+            obs = out["report"]["obs"]
+            print(f"trace: {obs['trace_events']} events "
+                  f"({obs['trace_dropped']} dropped, ring "
+                  f"{obs['trace_capacity']}) -> {args.trace} "
+                  f"(open in ui.perfetto.dev)")
+        if args.metrics:
+            print(f"metrics: prometheus exposition -> {args.metrics}")
+        en = out["report"]["energy"]
+        print(f"energy proxy ({en['unit']}): "
+              f"{en['proxy_uj_per_token']} uJ/token live "
+              f"[prefill {en['prefill']['uj_per_token']}, "
+              f"decode {en['decode']['uj_per_token']}, "
+              f"spec-wasted {en['spec_wasted']['uj_per_token']}]")
         hw = out["report"].get("hwcost", {})
         if hw.get("w8a8"):
             print(f"w8a8 forward: {hw['requant_ops_forward']} requant ops "

@@ -1,0 +1,19 @@
+"""Serving observability layer (DESIGN §14): metrics registry,
+structured event tracing, profiling + energy hooks.
+
+``metrics``/``trace``/``schema`` are stdlib-only (importable from the
+jax-free host modules); ``profile`` imports jax lazily inside methods.
+"""
+from repro.obs.metrics import (Counter, FuncMetric, Gauge, Histogram,
+                               MetricsRegistry, prom_name)
+from repro.obs.profile import ENERGY_PHASES, EnergyAccount, Profiler
+from repro.obs.schema import GOLDEN_SCHEMA, diff_schema, schema_of
+from repro.obs.trace import Timeline, Tracer, validate_chrome_trace
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "FuncMetric", "MetricsRegistry",
+    "prom_name",
+    "Tracer", "Timeline", "validate_chrome_trace",
+    "Profiler", "EnergyAccount", "ENERGY_PHASES",
+    "GOLDEN_SCHEMA", "schema_of", "diff_schema",
+]

@@ -114,6 +114,11 @@ class BlockPool:
         # alloc, immutable while resident.  One int per block of metadata.
         self.scale_exp = np.full((num_blocks,), scale_exp, np.int32)
         self.stats = PoolStats()
+        # optional obs hook (DESIGN §14): the engine attaches its Tracer
+        # here; every emission is guarded on ``tracer is not None and
+        # tracer.enabled`` so the standalone pool (property tests, no
+        # engine) pays one attribute read per lifecycle transition.
+        self.tracer = None
 
     # -- capacity ---------------------------------------------------------
 
@@ -231,6 +236,11 @@ class BlockPool:
         if self.cache is not None:
             self.cache.on_alloc(seq_id, plan.hit_keys, plan.n_full_lookups,
                                 plan.scale_exp)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.event("pool.alloc", "pool", args={
+                "seq": seq_id, "hit_blocks": len(plan.hit_blocks),
+                "new_blocks": len(new), "free": self.n_free})
         return list(blocks)  # copy: callers must not mutate the pool's map
 
     def extend(self, seq_id: int, n_tokens_total: int) -> list[int]:
@@ -250,6 +260,10 @@ class BlockPool:
             else self.default_scale_exp
         new = [self._take(exp) for _ in range(need)]
         blocks.extend(new)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.event("pool.extend", "pool", args={
+                "seq": seq_id, "new_blocks": need, "free": self.n_free})
         return new
 
     def retract(self, seq_id: int, n_tokens_keep: int) -> int:
@@ -292,6 +306,11 @@ class BlockPool:
         self.stats.frees += len(tail)
         self.stats.retracts += 1
         self.stats.retracted_blocks += len(tail)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.event("pool.retract", "pool", args={
+                "seq": seq_id, "freed_blocks": len(tail),
+                "keep_tokens": n_tokens_keep})
         return len(tail)
 
     def free_seq(self, seq_id: int) -> int:
@@ -300,7 +319,12 @@ class BlockPool:
         (idle-LRU) instead of returning to the free stack."""
         if seq_id not in self._seqs:
             raise BlockPoolError(f"double free: unknown sequence {seq_id}")
-        return self._release_seq(seq_id)
+        n = self._release_seq(seq_id)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.event("pool.free", "pool", args={
+                "seq": seq_id, "blocks": n, "free": self.n_free})
+        return n
 
     def evict(self, seq_id: int) -> int:
         """Preemption path: release references + count the eviction
@@ -313,6 +337,10 @@ class BlockPool:
         n = self._release_seq(seq_id)
         self.stats.evictions += n
         self.stats.seq_evictions += 1
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.event("pool.evict", "pool", args={
+                "seq": seq_id, "blocks": n, "free": self.n_free})
         return n
 
     def _release_seq(self, seq_id: int) -> int:
@@ -386,6 +414,10 @@ class BlockPool:
         self._release(src)
         if self.cache is not None:
             self.cache.stats.cow_copies += 1
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.event("pool.cow", "pool", args={
+                "seq": seq_id, "idx": logical_idx, "src": src, "dst": dst})
         return src, dst
 
     # -- cache plumbing ---------------------------------------------------

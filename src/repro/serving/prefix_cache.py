@@ -96,6 +96,9 @@ class PrefixCache:
         self._key_of: dict[int, int] = {}      # pool block -> content key
         self._seq: dict[int, _SeqChain] = {}
         self.stats = CacheStats()
+        # optional obs hook (DESIGN §14): attached by the engine; every
+        # emission is guarded on ``tracer is not None and tracer.enabled``
+        self.tracer = None
 
     # -- queries ----------------------------------------------------------
 
@@ -146,6 +149,14 @@ class PrefixCache:
         self.stats.misses += n_full_lookups - len(hit_keys)
         self.stats.hit_tokens += len(hit_keys) * bs
         self.stats.lookup_tokens += n_full_lookups * bs
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            # one summary event per CONSUMED lookup (planning retries are
+            # side-effect free and never reach here, mirroring the stats)
+            tr.event("cache.lookup", "cache", args={
+                "seq": seq_id, "hit_blocks": len(hit_keys),
+                "miss_blocks": n_full_lookups - len(hit_keys),
+                "hit_tokens": len(hit_keys) * bs})
         self._seq[seq_id] = _SeqChain(
             parent_key=hit_keys[-1] if hit_keys else ROOT_KEY,
             scale_exp=scale_exp,
@@ -184,6 +195,11 @@ class PrefixCache:
                 self._by_key[key] = blk
                 self._key_of[blk] = key
                 self.stats.published += 1
+                tr = self.tracer
+                if tr is not None and tr.enabled:
+                    tr.event("cache.publish", "cache", args={
+                        "seq": seq_id, "block": blk,
+                        "chain_idx": st.n_chained})
             st.parent_key = key
             st.n_chained += 1
 
@@ -208,6 +224,9 @@ class PrefixCache:
         key = self._key_of.pop(block)
         del self._by_key[key]
         self.stats.evictions += 1
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.event("cache.forget", "cache", args={"block": block})
 
     def flush(self) -> int:
         """Drop every key (pool moves the idle blocks to the free stack);

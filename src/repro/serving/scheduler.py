@@ -130,6 +130,12 @@ class Scheduler:
         self.slots: list[Optional[Request]] = [None] * n_slots
         self.done: list[Request] = []
         self.admission_log: list[int] = []    # rids in admission order
+        # optional obs hook (DESIGN §14): the engine attaches its Tracer.
+        # Request-timeline marks (admit / preempt / done) are always-on
+        # when a tracer is attached — they are a few floats per request
+        # and the source of the report's trace-derived latency section;
+        # ring events additionally check ``tracer.enabled``.
+        self.tracer = None
 
     # -- queue ------------------------------------------------------------
 
@@ -192,6 +198,15 @@ class Scheduler:
             self.slots[slot] = req
             self.admission_log.append(req.rid)
             admitted.append(req)
+            tr = self.tracer
+            if tr is not None:
+                tr.req_mark(req.rid, "admit", now)
+                if tr.enabled:
+                    tr.event("sched.admit", "sched", ts=now, args={
+                        "rid": req.rid, "slot": slot,
+                        "feed_tokens": len(req.feed),
+                        "cached_tokens": hit,
+                        "resume": req.preemptions > 0})
         return admitted
 
     # -- prefill ----------------------------------------------------------
@@ -250,6 +265,12 @@ class Scheduler:
         have = self.pool.n_blocks_of(req.rid) * bs
         spare = have + self.pool.n_free * bs - (req.n_ctx + 1)
         k = max(min(n_draft, spare), 0)
+        tr = self.tracer
+        if k < n_draft and tr is not None and tr.enabled:
+            # pool pressure degraded the speculative tail: fewer tokens
+            # verified this step instead of preempting a peer
+            tr.event("sched.spec_degrade", "sched", ts=now, args={
+                "rid": req.rid, "requested": n_draft, "granted": k})
         if not self.grow_for_decode(req, now, n_tokens=1 + k):
             return None
         return k
@@ -267,6 +288,11 @@ class Scheduler:
             except BlockPoolError:
                 victim = max(self.active(),
                              key=lambda r: (r.t_admit, r.rid))
+                tr = self.tracer
+                if tr is not None and tr.enabled:
+                    tr.event("sched.cow_retry", "sched", ts=now, args={
+                        "rid": req.rid, "idx": logical_idx,
+                        "victim": victim.rid})
                 self.preempt(victim, now)
                 if victim is req:
                     return None
@@ -276,7 +302,14 @@ class Scheduler:
         PUBLISHED blocks stay cached for the resume to re-attach), requeue
         (arrival order keeps its place near the front), keep generated
         tokens for the resume feed."""
-        del now
+        tr = self.tracer
+        if tr is not None:
+            tr.req_preempt(req.rid)
+            if tr.enabled:
+                tr.event("sched.preempt", "sched", ts=now, args={
+                    "rid": req.rid, "slot": req.slot,
+                    "n_ctx": req.n_ctx,
+                    "preemptions": req.preemptions + 1})
         self.pool.evict(req.rid)
         self.slots[req.slot] = None
         req.slot = None
@@ -293,3 +326,12 @@ class Scheduler:
         req.state = RequestState.DONE
         req.t_done = now
         self.done.append(req)
+        tr = self.tracer
+        if tr is not None:
+            # the timeline's done mark reuses the SAME clock value as
+            # req.t_done, so trace-derived TPOT/e2e reproduce the legacy
+            # report's request-timestamp math exactly
+            tr.req_done(req.rid, now, req.n_generated)
+            if tr.enabled:
+                tr.event("sched.finish", "sched", ts=now, args={
+                    "rid": req.rid, "n_generated": req.n_generated})

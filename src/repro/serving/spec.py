@@ -47,13 +47,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["NgramDrafter", "CallableDrafter", "resolve_drafter",
-           "apply_top_k", "verify_tokens"]
+__all__ = ["NgramDrafter", "CallableDrafter", "DrafterStats",
+           "resolve_drafter", "apply_top_k", "verify_tokens"]
 
 
 # ---------------------------------------------------------------------------
 # drafters (host-side)
 # ---------------------------------------------------------------------------
+
+class DrafterStats:
+    """Draft-efficacy accounting (DESIGN §14): how often the drafter was
+    asked, how many tokens it proposed, and how often it came up empty —
+    an empty proposal means the request pays the full per-token decode
+    rate for that step.  Surfaced through the engine's metrics registry
+    as ``speculative.drafter_*``; acceptance lives with the engine (the
+    drafter never sees the verifier's verdicts)."""
+
+    __slots__ = ("calls", "proposed", "empty")
+
+    def __init__(self):
+        self.calls = 0
+        self.proposed = 0
+        self.empty = 0
+
+    def reset(self) -> None:
+        self.calls = 0
+        self.proposed = 0
+        self.empty = 0
 
 class NgramDrafter:
     """Model-free n-gram / prompt-lookup self-drafter (deterministic).
@@ -72,13 +92,16 @@ class NgramDrafter:
                 f"[{min_ngram}, {max_ngram}]")
         self.max_ngram = max_ngram
         self.min_ngram = min_ngram
+        self.stats = DrafterStats()
 
     def draft(self, history, k: int) -> np.ndarray:
         """Up to ``k`` proposed continuation tokens ([] when no n-gram of
         the history's suffix recurs earlier in the history)."""
+        self.stats.calls += 1
         h = np.asarray(history, np.int32)
         n_hist = len(h)
         if k < 1 or n_hist < self.min_ngram + 1:
+            self.stats.empty += 1
             return np.empty(0, np.int32)
         for n in range(min(self.max_ngram, n_hist - 1),
                        self.min_ngram - 1, -1):
@@ -89,7 +112,12 @@ class NgramDrafter:
             hits = np.flatnonzero((win == suffix).all(axis=1))
             if len(hits):
                 i = int(hits[-1])              # most recent occurrence
-                return h[i + n:i + n + k].copy()
+                out = h[i + n:i + n + k].copy()
+                self.stats.proposed += len(out)
+                if not len(out):
+                    self.stats.empty += 1
+                return out
+        self.stats.empty += 1
         return np.empty(0, np.int32)
 
 
@@ -102,10 +130,15 @@ class CallableDrafter:
 
     def __init__(self, fn):
         self.fn = fn
+        self.stats = DrafterStats()
 
     def draft(self, history, k: int) -> np.ndarray:
-        out = np.asarray(self.fn(history, k), np.int32).reshape(-1)
-        return out[:k]
+        self.stats.calls += 1
+        out = np.asarray(self.fn(history, k), np.int32).reshape(-1)[:k]
+        self.stats.proposed += len(out)
+        if not len(out):
+            self.stats.empty += 1
+        return out
 
 
 def resolve_drafter(spec) -> object:
