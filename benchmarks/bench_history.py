@@ -1,0 +1,293 @@
+"""Bench-history regression detection for ``serving_bench`` (ISSUE 9).
+
+Every ``serving_bench`` run produces a ``BENCH_serving.json`` snapshot;
+this module folds those snapshots into a committed, append-only
+``BENCH_history.jsonl`` ledger and compares fresh runs against the best
+historical baseline with *noise-aware* per-metric tolerances.
+
+Ledger schema (one JSON object per line):
+
+    {"schema": 1,
+     "fingerprint": "ab12...",        # sha256[:16] of backend + workloads
+     "backend": "cpu",
+     "run": {"seed": 0, ...},         # free-form provenance (optional)
+     "metrics": {"continuous.tokens_per_s": 855.5, ...}}
+
+The fingerprint hashes everything that *defines* the experiment (backend
+plus each section's ``workload`` dict) and nothing that *measures* it,
+so only runs of the identical workload are comparable.  ``--regress``
+picks, per metric, the best value among history entries with a matching
+fingerprint ("best-of-N" across the committed history) and fails when
+the fresh run falls outside that metric's relative tolerance in the bad
+direction.  Timing metrics get loose tolerances (shared CI runners show
+contention spikes); structural counters get tight ones; deterministic
+parity metrics get zero.
+
+CLI::
+
+    python -m benchmarks.bench_history \
+        --bench BENCH_serving.json --history BENCH_history.jsonl \
+        --regress            # exit 1 when the fresh run regressed
+    python -m benchmarks.bench_history --bench ... --append
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Any, Optional
+
+HISTORY_SCHEMA = 1
+
+
+# ---------------------------------------------------------------------------
+# tracked metrics
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Tracked:
+    """One scalar the history ledger follows.
+
+    ``path`` is a dotted path into the BENCH_serving.json dict.
+    ``higher`` says which direction is good; ``rel_tol`` is the relative
+    slack allowed in the *bad* direction before the run counts as a
+    regression (0.0 = exact match required, for deterministic parities).
+    """
+
+    path: str
+    higher: bool
+    rel_tol: float
+
+
+# Tolerance classes: wall-clock throughput/latency on shared CI runners
+# is the noisiest (0.35-0.6); structural counters (decode steps, padded
+# tokens, dispatch counts) wobble only with scheduler changes (0.15-
+# 0.25); deterministic parities and compile counts must not move (0.0).
+TRACKED: tuple[Tracked, ...] = (
+    Tracked("continuous.tokens_per_s", higher=True, rel_tol=0.60),
+    Tracked("speedup_tokens_per_s", higher=True, rel_tol=0.35),
+    Tracked("decode_steps.continuous", higher=False, rel_tol=0.15),
+    Tracked("shared_prefix.hit_rate", higher=True, rel_tol=0.01),
+    Tracked("shared_prefix.quant_ops_avoided", higher=True, rel_tol=0.15),
+    Tracked("shared_prefix.prefill_chunks.cached", higher=False,
+            rel_tol=0.15),
+    Tracked("spec_decode.acceptance_rate", higher=True, rel_tol=0.15),
+    Tracked("spec_decode.tokens_per_step", higher=True, rel_tol=0.15),
+    Tracked("spec_decode.decode_phase_steps.spec", higher=False,
+            rel_tol=0.15),
+    Tracked("ragged_mixed.compiled_step_shapes", higher=False, rel_tol=0.0),
+    Tracked("ragged_mixed.dispatches.ragged", higher=False, rel_tol=0.15),
+    Tracked("ragged_mixed.padded_tokens.ragged", higher=False, rel_tol=0.25),
+    Tracked("ragged_mixed.tokens_per_s_best.ragged", higher=True,
+            rel_tol=0.60),
+    Tracked("w8a8.agreement_int_ref", higher=True, rel_tol=0.0),
+    Tracked("w8a8.requant_ops_forward", higher=False, rel_tol=0.10),
+    Tracked("w8a8.tokens_per_s_best.w8a8", higher=True, rel_tol=0.60),
+    Tracked("obs.overhead_frac_disabled", higher=False, rel_tol=0.60),
+    Tracked("obs.energy.proxy_uj_per_token", higher=False, rel_tol=0.20),
+    Tracked("flight_recorder.decisions", higher=False, rel_tol=0.0),
+    Tracked("flight_recorder.replay_diff_lines", higher=False, rel_tol=0.0),
+    Tracked("slo.overload.alerts_fired", higher=True, rel_tol=0.0),
+    Tracked("slo.healthy.alerts_fired", higher=False, rel_tol=0.0),
+)
+
+
+def _dig(d: Any, path: str) -> Optional[float]:
+    """Resolve a dotted path; None when any hop is missing/non-numeric."""
+    cur = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    if isinstance(cur, bool):
+        return float(cur)
+    if isinstance(cur, (int, float)) and math.isfinite(cur):
+        return float(cur)
+    return None
+
+
+def extract(bench: dict) -> dict[str, float]:
+    """The tracked scalars present in one BENCH_serving.json dict.
+
+    Missing paths are simply skipped: older snapshots (pre-obs, pre-
+    flight-recorder) stay loadable and comparable on their common
+    subset.
+    """
+    out: dict[str, float] = {}
+    for t in TRACKED:
+        v = _dig(bench, t.path)
+        if v is not None:
+            out[t.path] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fingerprint
+# ---------------------------------------------------------------------------
+
+def fingerprint_of(bench: dict) -> str:
+    """sha256[:16] over what defines the experiment, not what it measured.
+
+    Hashes the backend string plus every section's ``workload`` dict
+    (request counts, arrival rate, prompt/gen shapes, pool geometry,
+    seeds, pass counts).  Two runs share a fingerprint iff their numbers
+    are comparable.
+    """
+    ident: dict[str, Any] = {"backend": bench.get("backend")}
+    if isinstance(bench.get("workload"), dict):
+        ident["workload"] = bench["workload"]
+    for key in sorted(bench):
+        sec = bench[key]
+        if isinstance(sec, dict) and isinstance(sec.get("workload"), dict):
+            ident[key] = sec["workload"]
+    blob = json.dumps(ident, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# ledger I/O
+# ---------------------------------------------------------------------------
+
+def entry_of(bench: dict, run: Optional[dict] = None) -> dict:
+    """One history-ledger line for a finished bench run."""
+    return {
+        "schema": HISTORY_SCHEMA,
+        "fingerprint": fingerprint_of(bench),
+        "backend": bench.get("backend"),
+        "run": dict(run or {}),
+        "metrics": extract(bench),
+    }
+
+
+def load_history(path: str) -> list[dict]:
+    """Parse a JSONL ledger; missing file -> empty history."""
+    if not os.path.exists(path):
+        return []
+    entries = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                e = json.loads(line)
+            except json.JSONDecodeError as exc:
+                raise ValueError(f"{path}:{ln}: bad JSON ({exc})") from exc
+            if e.get("schema") != HISTORY_SCHEMA:
+                raise ValueError(
+                    f"{path}:{ln}: schema {e.get('schema')!r} != "
+                    f"{HISTORY_SCHEMA}")
+            entries.append(e)
+    return entries
+
+
+def append_entry(path: str, entry: dict) -> None:
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# regression check
+# ---------------------------------------------------------------------------
+
+def _baseline(history: list[dict], fingerprint: str,
+              t: Tracked) -> Optional[float]:
+    """Best-of-N historical value for one metric (matching runs only)."""
+    vals = [e["metrics"][t.path] for e in history
+            if e.get("fingerprint") == fingerprint
+            and t.path in e.get("metrics", {})]
+    if not vals:
+        return None
+    return max(vals) if t.higher else min(vals)
+
+
+def regress(bench: dict, history: list[dict]) -> list[str]:
+    """Regression messages for a fresh run vs the committed history.
+
+    Empty list = pass.  A run whose fingerprint matches no history entry
+    passes trivially (nothing is comparable) — callers should treat that
+    as "new baseline needed", not success, and we print a warning.
+    """
+    fp = fingerprint_of(bench)
+    cur = extract(bench)
+    comparable = [e for e in history if e.get("fingerprint") == fp]
+    if not comparable:
+        print(f"WARNING: no history entry matches fingerprint {fp} "
+              f"({len(history)} entries total) — nothing to compare")
+        return []
+    failures: list[str] = []
+    for t in TRACKED:
+        if t.path not in cur:
+            continue
+        base = _baseline(history, fp, t)
+        if base is None:
+            continue
+        val = cur[t.path]
+        # the allowed floor/ceiling in the bad direction
+        slack = abs(base) * t.rel_tol
+        if t.higher:
+            bound = base - slack
+            bad = val < bound - 1e-12
+        else:
+            bound = base + slack
+            bad = val > bound + 1e-12
+        if bad:
+            arrow = ">=" if t.higher else "<="
+            failures.append(
+                f"{t.path}: {val:g} vs baseline {base:g} "
+                f"(needs {arrow} {bound:g}, rel_tol {t.rel_tol:g}, "
+                f"{'higher' if t.higher else 'lower'} is better)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default="BENCH_serving.json",
+                    help="fresh serving_bench snapshot to evaluate")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="committed append-only ledger")
+    ap.add_argument("--append", action="store_true",
+                    help="fold the fresh run into the ledger")
+    ap.add_argument("--regress", action="store_true",
+                    help="exit 1 when the fresh run regressed vs the "
+                         "best matching history entry")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="provenance only: seed recorded in the entry")
+    args = ap.parse_args()
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+    history = load_history(args.history)
+    fp = fingerprint_of(bench)
+    cur = extract(bench)
+    print(f"bench {args.bench}: fingerprint {fp}, "
+          f"{len(cur)} tracked metrics, history {args.history}: "
+          f"{len(history)} entries "
+          f"({sum(1 for e in history if e.get('fingerprint') == fp)} "
+          f"comparable)")
+
+    failed = False
+    if args.regress:
+        failures = regress(bench, history)
+        if failures:
+            print(f"REGRESSIONS ({len(failures)}):")
+            for msg in failures:
+                print(f"  {msg}")
+            failed = True
+        else:
+            print("regression check: PASS")
+
+    if args.append:
+        run = {} if args.seed is None else {"seed": args.seed}
+        append_entry(args.history, entry_of(bench, run=run))
+        print(f"appended entry (fingerprint {fp}) to {args.history}")
+
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -50,6 +50,20 @@ requant counters, and the report schema is diffed against the golden
 contract.  The enabled run's trace JSON and prometheus exposition are
 written next to the results as CI artifacts.
 
+Part 6 is the WORKLOAD FLIGHT RECORDER + SLO monitor (DESIGN §15): a
+mixed greedy + speculative + shared-prefix Poisson workload is captured
+on the deterministic virtual clock, JSON round-tripped, and replayed on
+a fresh identically-configured engine (gates: token-identical outputs,
+ZERO-line scheduler-decision diff, matching config fingerprint) plus
+cross-config on the legacy per-shape engine (gates: non-empty decision
+diff, fingerprint mismatch, greedy tokens still identical).  Two SLO
+runs on record-mode engines check burn-rate alerting: impossibly tight
+objectives must fire ``slo.alert`` into the tracer, generous ones must
+stay silent.  ``check_history`` self-checks the bench-history
+regression detector (run-vs-itself passes, a synthetically degraded
+copy fails); the committed-ledger comparison runs in CI via
+``python -m benchmarks.bench_history --regress``.
+
 All runners execute the workload once UNTIMED first (jit warm-up: CPU
 smoke compilation dwarfs compute and its jitter would swamp the signal),
 then once timed — the reported tokens/s are steady-state wall-clock.
@@ -161,6 +175,17 @@ RAGGED_DC = ((5, 9), (32, 48))         # decode-heavy  (prompts, gens)
 # capacity, drops are counted) is exercised, not just asserted.
 OBS_SPEC_K = 2
 OBS_TRACE_CAP = 128
+
+# -- flight recorder + SLO workloads (DESIGN §15) ---------------------------
+# the capture workload deliberately mixes all three decision-heavy
+# features (shared-prefix CoW, n-gram speculation, plain greedy) so the
+# recorded scheduler-decision stream covers admits, chunk boundaries,
+# cache hits, CoW copies, spec verify and retract; the SLO runs reuse
+# the headline Poisson workload on record-mode (virtual-clock) engines
+# so TTFT — and therefore the alert verdicts — are deterministic.
+FR_REQUESTS = 12
+FR_SHARED_PREFIX = 12
+SLO_WINDOW_S = 1.0
 
 # -- true-W8A8 workload (DESIGN §13) ----------------------------------------
 # same mixed-length Poisson trace as the headline section, three engines:
@@ -791,6 +816,242 @@ def bench_obs(*, seed: int = 0, artifacts: str | None = None) -> dict:
     }
 
 
+def bench_flight_recorder(*, seed: int = 0,
+                          artifacts: str | None = None) -> dict:
+    """Workload flight recorder (DESIGN §15): capture a mixed
+    greedy + speculative + shared-prefix Poisson workload on the
+    deterministic virtual clock, round-trip the record through JSON,
+    replay it on a FRESH identically-configured engine (gate:
+    token-identical outputs AND a zero-line scheduler-decision diff),
+    then replay it cross-config on the legacy per-shape engine (gate:
+    the decision diff is NON-empty — the A/B instrument actually
+    resolves structural scheduling differences)."""
+    from repro.obs.replay import WorkloadRecord, replay_workload
+    from repro.serving import Request
+
+    vocab = get_smoke_config(ARCH).vocab_size
+
+    def workload():
+        rng = np.random.default_rng(seed + 7)
+        prefix = rng.integers(0, vocab, size=FR_SHARED_PREFIX
+                              ).astype(np.int32)
+        t, reqs = 0.0, []
+        for i in range(FR_REQUESTS):
+            t += float(rng.exponential(1.0 / RATE))
+            if i % 3 == 0:     # shared-prefix (prefix-cache + CoW traffic)
+                tail = rng.integers(0, vocab, size=int(rng.choice((4, 8)))
+                                    ).astype(np.int32)
+                prompt = np.concatenate([prefix, tail])
+            elif i % 3 == 1:   # repetitive prompt the n-gram drafter wins on
+                prompt = np.tile(rng.integers(0, vocab, size=3),
+                                 6).astype(np.int32)
+            else:              # plain greedy
+                prompt = rng.integers(0, vocab,
+                                      size=int(rng.choice((5, 9)))
+                                      ).astype(np.int32)
+            reqs.append(Request(rid=i, prompt=prompt,
+                                max_new_tokens=int(rng.choice((4, 8, 12))),
+                                arrival=t))
+        return reqs
+
+    need = max(len(r.prompt) + r.max_new_tokens for r in workload())
+    max_model_len = -(-need // BLOCK_SIZE) * BLOCK_SIZE
+
+    def build(**kw):
+        return serve_engine(
+            ARCH, requests=workload(), n_slots=N_SLOTS,
+            block_size=BLOCK_SIZE, chunk=CHUNK,
+            max_model_len=max_model_len, mode="fp", calibrate=False,
+            seed=seed, spec_k=OBS_SPEC_K, prefix_cache=True,
+            cfg_overrides=dict(BENCH_SCALE, kv_cache_bits=8), **kw)
+
+    paths = {}
+    record_to: str | bool = True
+    if artifacts:
+        paths["record"] = f"{artifacts}_record.json"
+        record_to = paths["record"]
+    cap = build(record=record_to)
+    rec = cap["record"]
+
+    # round-trip through the on-disk format before replaying: the
+    # replayed record is the PORTABLE one, not the in-memory object
+    rec2 = (WorkloadRecord.load(paths["record"]) if artifacts
+            else WorkloadRecord.from_json(rec.to_json()))
+
+    same = replay_workload(rec2, build(record=True)["engine"])
+    legacy = replay_workload(rec2, build(record=True,
+                                         ragged=False)["engine"])
+
+    return {
+        "workload": {"n_requests": FR_REQUESTS,
+                     "shared_prefix": FR_SHARED_PREFIX,
+                     "spec_k": OBS_SPEC_K, "rate_req_s": RATE,
+                     "n_slots": N_SLOTS, "block_size": BLOCK_SIZE,
+                     "chunk": CHUNK, "seed": seed},
+        "note": "capture and replay both run the virtual clock, so the "
+                "decision streams are bit-comparable; the legacy replay "
+                "is the cross-config A/B (same tokens expected under "
+                "greedy decode, different scheduler decisions)",
+        "fingerprint": rec.fingerprint,
+        "decisions": rec.meta["n_decisions"],
+        "requests": rec.meta["n_requests"],
+        "wall_s_virtual": rec.meta["wall_s_virtual"],
+        "replay": {
+            "token_identical": same.token_identical,
+            "diff_lines": len(same.decision_diff),
+            "fingerprint_match": same.fingerprint_match,
+            "mismatched_rids": same.mismatched_rids},
+        "replay_diff_lines": len(same.decision_diff),
+        "cross_config": {
+            "engine": "legacy per-shape trio (ragged=False)",
+            "token_identical": legacy.token_identical,
+            "diff_lines": len(legacy.decision_diff),
+            "fingerprint_match": legacy.fingerprint_match,
+            "diff_head": legacy.decision_diff[:8]},
+        "artifacts": paths,
+    }
+
+
+def check_flight_recorder(fr: dict) -> None:
+    """Acceptance gates for the flight recorder (ISSUE 9)."""
+    rp = fr["replay"]
+    if not rp["token_identical"]:
+        raise SystemExit(
+            f"replay is NOT token-identical to the capture: rids "
+            f"{rp['mismatched_rids']} diverged")
+    if rp["diff_lines"] != 0:
+        raise SystemExit(
+            f"replay produced a {rp['diff_lines']}-line scheduler-"
+            f"decision diff on an identically-configured engine — "
+            f"capture/replay is not deterministic")
+    if not rp["fingerprint_match"]:
+        raise SystemExit(
+            "replay engine fingerprint differs from the record's on an "
+            "identically-configured engine")
+    if fr["decisions"] <= 0:
+        raise SystemExit("capture recorded no scheduler decisions")
+    cc = fr["cross_config"]
+    if cc["fingerprint_match"]:
+        raise SystemExit(
+            "legacy engine matched the ragged record's fingerprint — "
+            "the config fingerprint is not discriminating")
+    if cc["diff_lines"] == 0:
+        raise SystemExit(
+            "legacy-engine replay produced an EMPTY decision diff vs "
+            "the ragged capture — the A/B instrument resolves nothing")
+    if not cc["token_identical"]:
+        raise SystemExit(
+            "legacy-engine replay broke greedy token parity — replay "
+            "re-injection is perturbing the sampled tokens")
+
+
+def bench_slo(*, seed: int = 0) -> dict:
+    """SLO burn-rate monitoring (DESIGN §15) on record-mode engines
+    (virtual clock => deterministic TTFT/latency, so the alert verdicts
+    are reproducible): one OVERLOAD run whose objectives are set
+    impossibly tight (every request violates, the burn rate crosses the
+    threshold, ``slo.alert`` fires into the tracer) and one HEALTHY run
+    with generous objectives (no alert)."""
+    from repro.obs.slo import SLObjective
+
+    def run(objectives):
+        out = serve_engine(
+            ARCH, n_requests=N_REQUESTS, rate=RATE, n_slots=N_SLOTS,
+            block_size=BLOCK_SIZE, chunk=CHUNK, mode="fp",
+            calibrate=False, seed=seed,
+            cfg_overrides=dict(BENCH_SCALE, kv_cache_bits=8),
+            record=True, slo=objectives)
+        eng = out["engine"]
+        rep = out["report"]
+        names = [name for (_ph, name, *_rest) in eng.tracer.events]
+        return {
+            "objectives": [o.name for o in objectives],
+            "alerts_fired": rep["slo"]["alerts_fired"],
+            "alerts_active": rep["slo"]["alerts_active"],
+            "evaluations": rep["slo"]["evaluations"],
+            "worst_burn_rate": rep["slo"]["worst_burn_rate"],
+            "alert_events": names.count("slo.alert"),
+            "recover_events": names.count("slo.recover"),
+            "status": rep["slo"]["status"],
+        }
+
+    def objectives(ttft_s, energy_uj):
+        return [
+            SLObjective(name="ttft_p_ok", metric="ttft", target=ttft_s,
+                        budget_frac=0.05, window_s=SLO_WINDOW_S,
+                        burn_threshold=1.0, min_samples=1),
+            SLObjective(name="energy_per_token",
+                        metric="energy.proxy_uj_per_token",
+                        target=energy_uj, budget_frac=0.05,
+                        window_s=SLO_WINDOW_S, burn_threshold=1.0,
+                        min_samples=1),
+        ]
+
+    overload = run(objectives(ttft_s=1e-6, energy_uj=1e-9))
+    healthy = run(objectives(ttft_s=1e6, energy_uj=1e12))
+    return {
+        "workload": {"n_requests": N_REQUESTS, "rate_req_s": RATE,
+                     "n_slots": N_SLOTS, "window_s": SLO_WINDOW_S,
+                     "seed": seed},
+        "note": "overload = impossibly tight targets (TTFT 1us, energy "
+                "1e-9 uJ/token) so every sample violates; healthy = "
+                "generous targets; both on the virtual clock",
+        "overload": overload,
+        "healthy": healthy,
+    }
+
+
+def check_slo(sl: dict) -> None:
+    """Acceptance gates for SLO burn-rate monitoring (ISSUE 9)."""
+    ov, ok = sl["overload"], sl["healthy"]
+    if ov["alerts_fired"] < 1:
+        raise SystemExit(
+            f"overload run fired {ov['alerts_fired']} alerts despite "
+            f"impossibly tight objectives — the burn-rate monitor is "
+            f"not evaluating")
+    if ov["alert_events"] < 1:
+        raise SystemExit(
+            "overload alert never reached the tracer — slo.alert "
+            "events are not being emitted")
+    if not ov["worst_burn_rate"] or ov["worst_burn_rate"] <= 1.0:
+        raise SystemExit(
+            f"overload worst burn rate {ov['worst_burn_rate']} never "
+            f"crossed the threshold 1.0")
+    if ok["alerts_fired"] != 0 or ok["alerts_active"] != 0:
+        raise SystemExit(
+            f"healthy run fired {ok['alerts_fired']} alerts "
+            f"({ok['alerts_active']} active) under generous objectives "
+            f"— false positives")
+    if ov["evaluations"] <= 0 or ok["evaluations"] <= 0:
+        raise SystemExit("SLO monitor reported zero evaluations")
+
+
+def check_history(bench: dict) -> None:
+    """Self-contained gate for bench-history regression detection
+    (ISSUE 9): the fresh run must PASS against itself as baseline, and
+    a synthetically degraded copy (throughput x0.3, parity broken) must
+    FAIL.  The committed-ledger comparison runs separately in CI via
+    ``python -m benchmarks.bench_history --regress``."""
+    from benchmarks.bench_history import entry_of, regress
+    baseline = [entry_of(bench)]
+    fails = regress(bench, baseline)
+    if fails:
+        raise SystemExit(
+            f"bench-history claims the run regressed vs ITSELF: {fails}")
+    degraded = json.loads(json.dumps(bench))
+    degraded["continuous"]["tokens_per_s"] *= 0.3
+    degraded["w8a8"]["agreement_int_ref"] *= 0.5
+    fails = regress(degraded, baseline)
+    if not any(f.startswith("continuous.tokens_per_s") for f in fails):
+        raise SystemExit(
+            "bench-history passed a run with tokens/s degraded to 30% "
+            "— the throughput tolerance is not detecting regressions")
+    if not any(f.startswith("w8a8.agreement_int_ref") for f in fails):
+        raise SystemExit(
+            "bench-history passed a run with broken W8A8 parity — the "
+            "zero-tolerance class is not enforced")
+
+
 def check_obs(ob: dict) -> None:
     """Acceptance gates for the observability layer (ISSUE 8)."""
     if ob["overhead_frac_disabled"] >= 0.01:
@@ -975,6 +1236,9 @@ def main() -> None:
     out["w8a8"] = bench_w8a8(seed=args.seed)
     stem = args.json[:-5] if args.json.endswith(".json") else args.json
     out["obs"] = bench_obs(seed=args.seed, artifacts=stem)
+    out["flight_recorder"] = bench_flight_recorder(seed=args.seed,
+                                                   artifacts=stem)
+    out["slo"] = bench_slo(seed=args.seed)
     with open(args.json, "w") as f:
         json.dump(out, f, indent=2)
     c, s = out["continuous"], out["static"]
@@ -1044,12 +1308,32 @@ def main() -> None:
           f"{ob['energy']['proxy_uj_per_token']} uJ/token, "
           f"{len(ob['schema_errors'])} schema errors"
           + (f" -> {ob['artifacts']}" if ob["artifacts"] else ""))
+    fr = out["flight_recorder"]
+    print(f"flight recorder: {fr['requests']} requests, "
+          f"{fr['decisions']} decisions captured "
+          f"(fingerprint {fr['fingerprint']}, virtual "
+          f"{fr['wall_s_virtual']:.3f}s), replay "
+          f"token_identical={fr['replay']['token_identical']} "
+          f"diff={fr['replay']['diff_lines']} lines, legacy A/B diff "
+          f"{fr['cross_config']['diff_lines']} lines "
+          f"(tokens "
+          f"{'match' if fr['cross_config']['token_identical'] else 'DIVERGE'})"
+          + (f" -> {fr['artifacts']}" if fr["artifacts"] else ""))
+    sl = out["slo"]
+    print(f"slo: overload fired {sl['overload']['alerts_fired']} alerts "
+          f"({sl['overload']['alert_events']} traced, worst burn "
+          f"{sl['overload']['worst_burn_rate']}), healthy fired "
+          f"{sl['healthy']['alerts_fired']} over "
+          f"{sl['healthy']['evaluations']} evaluations")
     if args.check:
         check_shared_prefix(sp)
         check_spec_decode(sd)
         check_ragged_mixed(rm)
         check_w8a8(w8)
         check_obs(ob)
+        check_flight_recorder(fr)
+        check_slo(sl)
+        check_history(out)
         # the deterministic gate is the structural one — continuous must
         # need strictly fewer decode steps for the same useful tokens;
         # wall clock only fails on a GROSS regression, because shared CI

@@ -179,7 +179,9 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                  trace: str | bool = False, trace_capacity: int = 65536,
                  metrics_path: str | None = None,
                  profile_dir: str | None = None,
-                 profile_cost: bool = False) -> dict:
+                 profile_cost: bool = False,
+                 record: str | bool = False, virtual_dt: float = 1e-3,
+                 slo=None) -> dict:
     """Continuous-batching serving on the paged int8-KV block pool
     (DESIGN §9/§10).  Returns {"report", "outputs", "requests", "engine"}.
 
@@ -207,7 +209,16 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
     metrics registry after the run.  ``profile_dir`` wraps each jitted
     dispatch in a ``jax.profiler`` step annotation and captures the run
     into that directory; ``profile_cost`` additionally records XLA
-    FLOPs/bytes per compiled shape via AOT ``cost_analysis()``."""
+    FLOPs/bytes per compiled shape via AOT ``cost_analysis()``.
+
+    Flight recorder (DESIGN §15): ``record`` runs the engine on the
+    deterministic virtual clock and freezes the run into a portable
+    :class:`repro.obs.replay.WorkloadRecord` (returned under
+    ``"record"``; pass a path string to also save it as JSON) — replay
+    it with ``repro.obs.replay.replay_workload`` or ``--replay``.
+    ``slo`` attaches an SLO burn-rate monitor (``True`` for the stock
+    objectives or a list of ``SLObjective``); alerts land in the
+    tracer and the report's ``slo`` section."""
     from repro.serving import ServingEngine
     overrides = dict(cfg_overrides or {})
     if kv_bits is not None:
@@ -260,7 +271,9 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                            spec_k=spec_k, drafter=drafter, ragged=ragged,
                            trace=bool(trace), trace_capacity=trace_capacity,
                            profile_dir=profile_dir,
-                           profile_cost=profile_cost)
+                           profile_cost=profile_cost,
+                           record=bool(record), virtual_dt=virtual_dt,
+                           slo=slo)
     if profile_dir is not None:
         with engine.profiler.capture():
             report = engine.run(requests)
@@ -271,9 +284,14 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
     if metrics_path is not None:
         with open(metrics_path, "w") as fh:
             fh.write(engine.metrics.to_prometheus())
+    rec = None
+    if record:
+        rec = engine.workload_record(requests)
+        if isinstance(record, str):
+            rec.save(record)
     return {"report": report, "outputs": engine.outputs(),
             "requests": requests, "engine": engine,
-            "quantized": quantized, "ctx": ctx}
+            "quantized": quantized, "ctx": ctx, "record": rec}
 
 
 def main(argv=None):
@@ -357,6 +375,25 @@ def main(argv=None):
                     help="[--engine] record XLA FLOPs/bytes per compiled "
                          "shape via AOT cost_analysis() in the report's "
                          "profile section")
+    ap.add_argument("--record", default=None, metavar="OUT.json",
+                    help="[--engine] flight recorder (DESIGN §15): run "
+                         "on the deterministic virtual clock and save a "
+                         "portable workload record (arrivals, prompts, "
+                         "sampling params, seeds, config fingerprint, "
+                         "emitted tokens, scheduler-decision stream) "
+                         "for later --replay")
+    ap.add_argument("--replay", default=None, metavar="IN.json",
+                    help="(implies --engine) replay a recorded workload: "
+                         "re-inject the captured arrival process on the "
+                         "virtual clock (engine knobs from the record) "
+                         "and report token parity + the scheduler-"
+                         "decision diff; exits nonzero on divergence")
+    ap.add_argument("--slo", action="store_true",
+                    help="[--engine] attach the stock SLO objectives "
+                         "(TTFT/e2e percentile targets, pool-pressure "
+                         "ceiling) with rolling-window burn-rate "
+                         "alerting; alerts print after the run and land "
+                         "in the trace on the 'slo' lane")
     ap.add_argument("--no-ragged", action="store_true",
                     help="[--engine] use the legacy per-shape step trio "
                          "(bucketed prefill / decode / spec-verify) "
@@ -368,6 +405,38 @@ def main(argv=None):
     if args.mesh is not None:
         d, m = (int(x) for x in args.mesh.lower().split("x"))
         mesh_shape = (d, m)
+
+    if args.replay:                   # implies --engine
+        from repro.obs.replay import (WorkloadRecord, build_requests,
+                                      replay_workload)
+        rec = WorkloadRecord.load(args.replay)
+        es = rec.engine
+        out = serve_engine(args.arch, requests=build_requests(rec),
+                           n_slots=es["n_slots"],
+                           block_size=es["block_size"], chunk=es["chunk"],
+                           max_model_len=es["max_model_len"],
+                           num_blocks=es["num_blocks"], mode=args.mode,
+                           calibrate=not args.no_calibrate,
+                           smoke=not args.full,
+                           attn_kernel=args.attn_kernel,
+                           top_k=es["default_top_k"], seed=es["seed"],
+                           mesh_shape=mesh_shape,
+                           prefix_cache=es["prefix_cache"],
+                           spec_k=es["spec_k"], drafter=args.drafter,
+                           ragged=es["ragged"], w8a8=args.w8a8,
+                           record=True, virtual_dt=es["virtual_dt"])
+        res = replay_workload(rec, out["engine"])
+        print(f"replay {args.replay}: fingerprint "
+              f"{'match' if res.fingerprint_match else 'MISMATCH'} "
+              f"(record {res.record_fingerprint}, engine "
+              f"{res.engine_fingerprint})")
+        print("tokens: " + ("identical" if res.token_identical else
+                            f"MISMATCH rids={res.mismatched_rids}"))
+        print(f"scheduler-decision diff: {len(res.decision_diff)} lines"
+              + ("" if res.decision_diff else " (empty — identical)"))
+        for line in res.decision_diff[:40]:
+            print("  " + line)
+        raise SystemExit(0 if res.ok else 1)
 
     if args.engine:
         import json
@@ -387,8 +456,26 @@ def main(argv=None):
                            trace_capacity=args.trace_capacity,
                            metrics_path=args.metrics,
                            profile_dir=args.profile_dir,
-                           profile_cost=args.profile_cost)
+                           profile_cost=args.profile_cost,
+                           record=args.record if args.record else False,
+                           slo=True if args.slo else None)
         print(json.dumps(out["report"], indent=2))
+        if args.record:
+            rec = out["record"]
+            print(f"record: {len(rec.requests)} requests, "
+                  f"{len(rec.decisions)} scheduler decisions, "
+                  f"fingerprint {rec.fingerprint} -> {args.record} "
+                  f"(replay with --replay {args.record})")
+        if args.slo:
+            mon = out["engine"].slo
+            state = "ALERT" if mon.alerts_active else "ok"
+            print(f"slo: {state} — {mon.alerts_fired} alert(s) fired "
+                  f"over {mon.evaluations} evaluations; worst burn "
+                  f"rate {mon.worst_burn_rate()}")
+            for a in mon.alerts:
+                print(f"  alert {a['objective']}: burn {a['burn_rate']} "
+                      f"({a['window_bad']}/{a['window_total']} over "
+                      f"window) at t={a['t']:.3f}s")
         if args.trace:
             obs = out["report"]["obs"]
             print(f"trace: {obs['trace_events']} events "

@@ -1,13 +1,19 @@
-"""Serving observability layer (DESIGN §14): metrics registry,
-structured event tracing, profiling + energy hooks.
+"""Serving observability layer (DESIGN §14/§15): metrics registry,
+structured event tracing, profiling + energy hooks, workload flight
+recorder (capture/replay) and SLO burn-rate monitoring.
 
-``metrics``/``trace``/``schema`` are stdlib-only (importable from the
-jax-free host modules); ``profile`` imports jax lazily inside methods.
+``metrics``/``trace``/``schema``/``slo``/``replay`` are stdlib-only
+(importable from the jax-free host modules); ``profile`` imports jax
+lazily inside methods.
 """
 from repro.obs.metrics import (Counter, FuncMetric, Gauge, Histogram,
                                MetricsRegistry, prom_name)
 from repro.obs.profile import ENERGY_PHASES, EnergyAccount, Profiler
+from repro.obs.replay import (ReplayResult, WorkloadRecord,
+                              capture_workload, diff_decisions,
+                              engine_fingerprint, replay_workload)
 from repro.obs.schema import GOLDEN_SCHEMA, diff_schema, schema_of
+from repro.obs.slo import SLObjective, SLOMonitor, default_slos
 from repro.obs.trace import Timeline, Tracer, validate_chrome_trace
 
 __all__ = [
@@ -16,4 +22,7 @@ __all__ = [
     "Tracer", "Timeline", "validate_chrome_trace",
     "Profiler", "EnergyAccount", "ENERGY_PHASES",
     "GOLDEN_SCHEMA", "schema_of", "diff_schema",
+    "WorkloadRecord", "ReplayResult", "capture_workload",
+    "replay_workload", "diff_decisions", "engine_fingerprint",
+    "SLObjective", "SLOMonitor", "default_slos",
 ]

@@ -50,6 +50,19 @@ def prom_name(name: str) -> str:
     return "".join(c if c.isalnum() or c == "_" else "_" for c in name)
 
 
+def _escape_help(s: str) -> str:
+    """HELP-line escaping per exposition format 0.0.4: backslash and
+    newline only (double quotes are legal in help text)."""
+    return s.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _escape_label_value(s: str) -> str:
+    """Label-value escaping per exposition format 0.0.4: backslash,
+    double quote and newline."""
+    return (s.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 class _Metric:
     """Common shape: identity + documentation.  ``typ`` is the python
     type of the snapshot value (int/float/bool/str); ``optional`` marks
@@ -186,7 +199,16 @@ class Histogram(_Metric):
     def percentile(self, q: float):
         """Upper bound of the bucket holding the q-th percentile sample
         (None when empty).  An UPPER bound, never an interpolation —
-        monitoring must not under-report tails."""
+        monitoring must not under-report tails.
+
+        Contract (vs ``obs.trace.Tracer.derive_latencies``): a
+        histogram forgets the samples, so this is bucket-bound — the
+        error vs the exact rank statistic is non-negative and at most
+        the width of the bucket the sample landed in.  The trace
+        timelines keep exact samples and the report's ``timeline``
+        percentiles use THOSE; the two must not be conflated (pinned by
+        ``tests/test_obs.py::
+        test_histogram_percentile_vs_exact_error_bound``)."""
         if self.n == 0:
             return None
         rank = max(1, math.ceil(q / 100.0 * self.n))
@@ -292,6 +314,11 @@ class MetricsRegistry:
         the golden test and the CI schema diff consume."""
         return {name: m.describe() for name, m in self._metrics.items()}
 
+    def get_value(self, name: str) -> Any:
+        """Current value of one metric by dotted name (KeyError when
+        not registered) — the SLO monitor's gauge-objective read."""
+        return self._metrics[name].value()
+
     def snapshot(self) -> dict[str, Any]:
         """Flat {dotted-name: value} snapshot, JSON-serializable."""
         return {name: m.value() for name, m in self._metrics.items()}
@@ -311,11 +338,14 @@ class MetricsRegistry:
     def to_prometheus(self) -> str:
         """Text exposition (format 0.0.4).  Non-numeric metrics (strings,
         booleans-as-config) surface as ``name_info{value="..."} 1`` so
-        the scrape keeps the full schema without type abuse."""
+        the scrape keeps the full schema without type abuse.  HELP text
+        and label values are escaped per the format spec (``\\`` and
+        newline in help; ``\\``, ``"`` and newline in label values) —
+        round-trip pinned by ``tests/test_obs.py``."""
         lines: list[str] = []
         for name, m in self._metrics.items():
             pn = prom_name(name)
-            help_ = m.help.replace("\\", "\\\\").replace("\n", " ")
+            help_ = _escape_help(m.help)
             if isinstance(m, Histogram):
                 lines.append(f"# HELP {pn} {help_}")
                 lines.append(f"# TYPE {pn} histogram")
@@ -333,8 +363,8 @@ class MetricsRegistry:
                 lines.append(f"# TYPE {pn} {m.kind}")
                 for key, n in sorted(m._series.items()):
                     lbl = ",".join(
-                        f'{k}="{val}"' for k, val in zip(m.label_names,
-                                                         key))
+                        f'{k}="{_escape_label_value(str(val))}"'
+                        for k, val in zip(m.label_names, key))
                     lines.append(f"{pn}{{{lbl}}} {n}")
                 lines.append(f"{pn}_total {m._total}")
                 continue
@@ -344,8 +374,8 @@ class MetricsRegistry:
                 lines.append(f"# HELP {pn} {help_}")
                 lines.append(f"# TYPE {pn} gauge")
                 sval = "none" if v is None else str(v)
-                sval = sval.replace("\\", "\\\\").replace('"', '\\"')
-                lines.append(f'{pn}_info{{value="{sval}"}} 1')
+                lines.append(f'{pn}_info{{value='
+                             f'"{_escape_label_value(sval)}"}} 1')
                 continue
             lines.append(f"# HELP {pn} {help_}")
             lines.append(f"# TYPE {pn} {m.kind}")

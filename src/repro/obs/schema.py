@@ -14,8 +14,9 @@ field must be a reviewed schema change, not a silent bench breakage.
 Conditional sections: ``speculative.*`` metrics exist only when
 ``spec_k > 0``, ``prefix_cache.*`` only when the cache is on (the report
 surfaces the disabled sections as literal ``None``); ``profile`` exists
-only when profiling is enabled and is dynamic.  ``diff_schema`` takes
-the engine's feature flags into account so a cache-off engine isn't
+only when profiling is enabled and is dynamic; ``slo.*`` only when an
+SLO monitor is configured (DESIGN §15).  ``diff_schema`` takes the
+engine's feature flags into account so a cache-off engine isn't
 reported as "missing" the cache section.
 """
 from __future__ import annotations
@@ -24,12 +25,13 @@ __all__ = ["GOLDEN_SCHEMA", "DYNAMIC_KEYS", "SECTION_FLAGS",
            "schema_of", "diff_schema"]
 
 # report keys whose VALUE shape is dynamic (per-jitted-shape /
-# per-profiled-shape subdicts) — typed as dict, contents not golden
-DYNAMIC_KEYS = ("step_shapes", "profile")
+# per-profiled-shape / per-objective subdicts) — typed as dict,
+# contents not golden
+DYNAMIC_KEYS = ("step_shapes", "profile", "slo.status")
 
 # prefix -> engine feature that must be on for the section to register
 SECTION_FLAGS = {"speculative.": "spec", "prefix_cache.": "cache",
-                 "profile": "profile"}
+                 "profile": "profile", "slo.": "slo"}
 
 GOLDEN_SCHEMA = {
     "n_requests": {"kind": "counter", "type": "int"},
@@ -175,6 +177,17 @@ GOLDEN_SCHEMA = {
     "obs.trace_emitted": {"kind": "counter", "type": "int"},
     "obs.trace_dropped": {"kind": "counter", "type": "int"},
     "obs.trace_capacity": {"kind": "gauge", "type": "int"},
+    "obs.trace_dropped_total":
+        {"kind": "counter", "type": "int",
+         "alias_of": "obs.trace_dropped"},
+    "obs.trace_ring_used": {"kind": "gauge", "type": "float"},
+    "slo.objectives": {"kind": "gauge", "type": "int"},
+    "slo.evaluations": {"kind": "counter", "type": "int"},
+    "slo.alerts_fired": {"kind": "counter", "type": "int"},
+    "slo.alerts_active": {"kind": "gauge", "type": "int"},
+    "slo.worst_burn_rate":
+        {"kind": "gauge", "type": "float", "optional": True},
+    "slo.status": {"kind": "gauge", "type": "dict"},
     "profile":
         {"kind": "gauge", "type": "dict", "optional": True},
 }
@@ -206,12 +219,13 @@ def _section_on(name: str, features: dict) -> bool:
 
 def diff_schema(got: dict, golden: dict = None, *,
                 spec: bool = True, cache: bool = True,
-                profile: bool = False) -> list[str]:
+                profile: bool = False, slo: bool = False) -> list[str]:
     """Human-readable differences between an engine's projected schema
     and the golden one, respecting which conditional sections the
     engine's feature flags enable.  Empty list == schema-clean."""
     golden = GOLDEN_SCHEMA if golden is None else golden
-    feats = {"spec": spec, "cache": cache, "profile": profile}
+    feats = {"spec": spec, "cache": cache, "profile": profile,
+             "slo": slo}
     errs = []
     for name, want in golden.items():
         if not _section_on(name, feats):

@@ -37,12 +37,19 @@ from collections import deque
 from typing import Any, Callable, Optional
 
 __all__ = ["Tracer", "Timeline", "validate_chrome_trace",
-           "CHROME_REQUIRED_KEYS"]
+           "CHROME_REQUIRED_KEYS", "DECISION_CATS"]
 
 # Perfetto lanes (tids) per subsystem: stable small ints so a trace of
 # one engine renders as a fixed set of named tracks.
 LANES = {"engine": 0, "dispatch": 1, "sched": 2, "pool": 3, "cache": 4,
-         "requests": 5, "profile": 6}
+         "requests": 5, "profile": 6, "slo": 7}
+
+# Event categories that constitute the scheduler-decision stream: what
+# the flight recorder (obs/replay.py) captures losslessly and diffs
+# between a recorded run and its replay.  Admission order, chunk
+# boundaries, preemptions, spec degradation, pool alloc/CoW/retract and
+# prefix-cache hit/publish all live here.
+DECISION_CATS = ("sched", "pool", "cache")
 
 CHROME_REQUIRED_KEYS = ("name", "ph", "ts", "pid", "tid")
 
@@ -95,6 +102,14 @@ class Tracer:
         self.events: deque = deque(maxlen=capacity)
         self.n_emitted = 0
         self.timelines: dict[int, Timeline] = {}
+        # Optional UNBOUNDED side-channel for the flight recorder: when
+        # set (a list), every event whose category is in DECISION_CATS
+        # is also appended as (name, args) — no timestamp, so two runs
+        # of the same workload compare by decision order and content,
+        # not wall clock.  The ring may drop events under load; the
+        # decision sink never does (record mode only, bounded by the
+        # workload's own decision count).
+        self.decision_sink: Optional[list] = None
 
     # -- ring events ------------------------------------------------------
 
@@ -109,6 +124,8 @@ class Tracer:
         seconds; defaults to now."""
         if not self.enabled:
             return
+        if self.decision_sink is not None and cat in DECISION_CATS:
+            self.decision_sink.append((name, args))
         self.n_emitted += 1
         self.events.append(
             ("i", name, cat, self.clock() if ts is None else ts, 0.0,
@@ -163,7 +180,17 @@ class Tracer:
     def derive_latencies(self) -> dict[str, list]:
         """TTFT / TPOT / e2e sample lists derived from the COMPLETED
         request timelines — the trace-derived counterpart of the legacy
-        ``report()`` percentile inputs."""
+        ``report()`` percentile inputs.
+
+        Contract (vs ``obs.metrics.Histogram.percentile``): these are
+        EXACT raw samples — percentiles computed from them (the
+        engine's ``timeline`` report section) interpolate between true
+        observations.  A ``Histogram`` only retains bucket counts, so
+        its ``percentile`` returns the UPPER BOUND of the bucket
+        holding the rank — biased high by at most one bucket width.
+        Reports must never swap one for the other silently; the
+        pinning test is ``tests/test_obs.py::
+        test_histogram_percentile_vs_exact_error_bound``."""
         ttft = [tl.ttft for tl in self.timelines.values()
                 if tl.ttft is not None]
         tpot = [tl.tpot for tl in self.timelines.values()
@@ -176,6 +203,8 @@ class Tracer:
         self.events.clear()
         self.n_emitted = 0
         self.timelines.clear()
+        if self.decision_sink is not None:
+            self.decision_sink.clear()
 
     # -- chrome trace export ----------------------------------------------
 
@@ -241,7 +270,12 @@ def validate_chrome_trace(obj: Any) -> list[str]:
     """Schema check against the Chrome trace-event format (the subset
     Perfetto's JSON importer requires).  Returns a list of problems —
     empty means loadable.  Used by ``tests/test_obs.py`` and the bench
-    gate, so a malformed exporter fails CI instead of Perfetto."""
+    gate, so a malformed exporter fails CI instead of Perfetto.
+
+    Deliberately order-agnostic: the format does not require sorted
+    timestamps (Perfetto sorts on import), so out-of-order ``ts`` is
+    valid.  An empty ``traceEvents`` list and an events-only trace
+    (instants, no ``X`` spans) are both valid too."""
     problems: list[str] = []
     if not isinstance(obj, dict) or "traceEvents" not in obj:
         return ["top level must be an object with a 'traceEvents' list"]

@@ -51,6 +51,7 @@ from repro.models import model as M
 from repro.models.attention import RaggedBatch
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.profile import EnergyAccount, Profiler
+from repro.obs.slo import SLOMonitor, default_slos
 from repro.obs.trace import Tracer
 from repro.serving.kv_pool import TRASH_BLOCK, BlockPool
 from repro.serving.scheduler import (Request, RequestState, Scheduler,
@@ -143,7 +144,9 @@ class ServingEngine:
                  drafter="ngram", ragged: bool = True,
                  trace: bool = False, trace_capacity: int = 65536,
                  profile_dir: Optional[str] = None,
-                 profile_cost: bool = False):
+                 profile_cost: bool = False,
+                 record: bool = False, virtual_dt: float = 1e-3,
+                 slo=None):
         self.cfg = cfg
         from repro.core.qmodel import QuantizedParams
         if isinstance(params, QuantizedParams):
@@ -175,6 +178,30 @@ class ServingEngine:
         self.sched.tracer = self.tracer
         if self.pool.cache is not None:
             self.pool.cache.tracer = self.tracer
+        # flight recorder (DESIGN §15): record mode switches run() onto a
+        # deterministic VIRTUAL clock (virtual_dt seconds per step, idle
+        # gaps jump to the next arrival) and tees the scheduler-decision
+        # events into an unbounded sink — the capture run is then exactly
+        # reproducible, which is the whole replay contract.  Tracing is
+        # forced on (the decision event call sites are ring-gated).
+        if virtual_dt <= 0.0:
+            raise ValueError(f"virtual_dt must be > 0, got {virtual_dt}")
+        self.record = record
+        self.virtual_dt = virtual_dt
+        self._virtual_time: Optional[float] = 0.0 if record else None
+        if record:
+            self.tracer.enabled = True
+            self.tracer.decision_sink = []
+        # SLO burn-rate monitor (DESIGN §15): evaluated once per step on
+        # the engine clock (virtual under record mode, so SLO evaluation
+        # replays deterministically too).  ``slo=True`` takes the stock
+        # objective set; a list of SLObjective customizes it.
+        if slo is None:
+            self.slo: Optional[SLOMonitor] = None
+        else:
+            objectives = default_slos() if slo is True else slo
+            self.slo = SLOMonitor(objectives, tracer=self.tracer,
+                                  value_fn=self._metric_value)
         self.profiler = Profiler(profile_dir=profile_dir, cost=profile_cost)
         # live Table-5 energy proxy, split prefill / decode / spec_wasted;
         # reconciles exactly with the requant counters below (tested)
@@ -191,6 +218,7 @@ class ServingEngine:
         self.drafter = resolve_drafter(drafter)
         self.ragged = ragged
         base_step = S.build_paged_step(cfg, ctx, mesh=mesh)
+        self.seed = seed
         base_key = jax.random.PRNGKey(seed)
 
         def sampled_step(params, tokens, cache, positions, bt, temps, topks,
@@ -323,13 +351,29 @@ class ServingEngine:
     # -- clock ------------------------------------------------------------
 
     def _now(self) -> float:
+        """Engine clock, seconds.  Real (monotonic minus fast-forwarded
+        idle gaps) normally; the deterministic VIRTUAL clock under
+        ``record=True`` — every timeline mark, trace timestamp and SLO
+        window then replays bit-identically (DESIGN §15)."""
+        if self._virtual_time is not None:
+            return self._virtual_time
         return time.perf_counter() - self._t0 + self._skip
+
+    def _metric_value(self, name: str):
+        """Registry read for the SLO monitor's gauge objectives."""
+        return self.metrics.get_value(name)
 
     # -- public API -------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         self.tracer.req_submit(req.rid, req.arrival)
         self.sched.submit(req)
+
+    def workload_record(self, requests: list[Request]):
+        """Freeze the last ``record=True`` run into a portable
+        :class:`repro.obs.replay.WorkloadRecord` (DESIGN §15)."""
+        from repro.obs.replay import capture_workload
+        return capture_workload(self, requests)
 
     def reset_metrics(self, *, flush_cache: bool = True) -> None:
         """Clear accounting between runs (e.g. after a warm-up workload
@@ -350,6 +394,7 @@ class ServingEngine:
         self.sched.admission_log.clear()
         if flush_cache:
             self.pool.flush_cache()
+        self.pool.reset_free_order()
         self.pool.stats = PoolStats()
         if self.pool.cache is not None:
             self.pool.cache.stats = CacheStats()
@@ -373,8 +418,12 @@ class ServingEngine:
         self.padded_tokens = 0
         self._step_times.clear()
         self._wall_s = 0.0
+        if self.record:
+            self._virtual_time = 0.0
         self.energy.reset()
-        self.tracer.reset()
+        self.tracer.reset()          # clears the decision sink too
+        if self.slo is not None:
+            self.slo.reset()
         self.profiler.reset()
         self.metrics.reset()        # owned metrics only; bound ones follow
         stats = getattr(self.drafter, "stats", None)
@@ -384,8 +433,14 @@ class ServingEngine:
     def run(self, requests: list[Request]) -> dict:
         """Serve ``requests`` (arrival-stamped) to completion; idle gaps
         between arrivals are fast-forwarded on the engine clock, so the
-        report's latencies are arrival-relative without real sleeps."""
+        report's latencies are arrival-relative without real sleeps.
+        Under ``record=True`` the loop runs on the virtual clock instead
+        (``virtual_dt`` per step): arrival→admission composition then
+        depends only on the workload, never the host, so the run is
+        exactly replayable (obs/replay.py)."""
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        if self.record:
+            return self._run_virtual(pending)
         self._t0, self._skip = time.perf_counter(), 0.0
         while pending or not self.sched.idle:
             now = self._now()
@@ -396,6 +451,22 @@ class ServingEngine:
                 self.submit(pending.pop(0))
             self.step()
         self._wall_s = self._now()
+        return self.report()
+
+    def _run_virtual(self, pending: list[Request]) -> dict:
+        """The record-mode run loop: same structure as ``run`` but the
+        clock advances ``virtual_dt`` per step and jumps straight to the
+        next arrival when idle."""
+        self._virtual_time = 0.0
+        while pending or not self.sched.idle:
+            now = self._virtual_time
+            if self.sched.idle and pending and pending[0].arrival > now:
+                self._virtual_time = now = pending[0].arrival
+            while pending and pending[0].arrival <= now:
+                self.submit(pending.pop(0))
+            self.step()
+            self._virtual_time += self.virtual_dt
+        self._wall_s = self._virtual_time
         return self.report()
 
     def step(self) -> None:
@@ -416,10 +487,12 @@ class ServingEngine:
                 req.n_prefilled * self._fwd_elems_per_token
         if self.ragged:
             self._run_ragged_step()
-            return
-        self._run_prefills()
-        if not (self.spec_k and self._run_spec_decode()):
-            self._run_decode()
+        else:
+            self._run_prefills()
+            if not (self.spec_k and self._run_spec_decode()):
+                self._run_decode()
+        if self.slo is not None:
+            self.slo.evaluate(self._now())
 
     # -- unified ragged step (DESIGN §12) ---------------------------------
 
@@ -568,6 +641,11 @@ class ServingEngine:
             self.requant_ops_performed += c_real * self._elems_per_token
             self.requant_ops_forward += c_real * self._fwd_elems_per_token
             self.energy.charge("prefill", c_real * ept, c_real)
+            if tr.enabled:
+                # chunk boundary: part of the scheduler-decision stream
+                # the flight recorder diffs between runs (DESIGN §15)
+                tr.event("sched.prefill_chunk", "sched", ts=now, args={
+                    "rid": req.rid, "start": start, "tokens": c_real})
             tr.req_mark(req.rid, "first_chunk", now)
             if req.n_prefilled == len(req.feed):
                 tok = int(out[i, 0])
@@ -765,6 +843,12 @@ class ServingEngine:
             c_real * (self._elems_per_token + self._fwd_elems_per_token),
             c_real)
         tr = self.tracer
+        if tr.enabled:
+            # chunk boundary: part of the scheduler-decision stream the
+            # flight recorder diffs between runs (DESIGN §15)
+            tr.event("sched.prefill_chunk", "sched", ts=self._now(),
+                     args={"rid": req.rid, "start": start,
+                           "tokens": c_real})
         tr.req_mark(req.rid, "first_chunk", self._now())
         if req.n_prefilled == len(req.feed):
             # prompt fully resident: the token sampled from the last real
@@ -1173,11 +1257,47 @@ class ServingEngine:
           lambda: self.tracer.dropped, kind="counter", typ=int)
         f("obs.trace_capacity", "trace ring capacity (hard bound)",
           lambda: self.tracer.capacity, typ=int)
+        # silent-span-loss visibility (DESIGN §15): the prometheus-
+        # conventional _total alias of the drop counter plus the ring
+        # occupancy fraction — a scrape can alert on drops BEFORE a
+        # truncated trace surprises someone in Perfetto
+        f("obs.trace_dropped_total",
+          "events evicted from the bounded ring (prometheus-"
+          "conventional view of obs.trace_dropped)",
+          lambda: self.tracer.dropped, kind="counter", typ=int,
+          alias_of="obs.trace_dropped")
+        f("obs.trace_ring_used",
+          "trace ring occupancy fraction (held / capacity); 1.0 means "
+          "the next event evicts the oldest",
+          lambda: round(len(self.tracer.events) / self.tracer.capacity,
+                        6), typ=float)
+        if self.slo is not None:
+            self._register_slo_metrics()
         if self.profiler.enabled:
             f("profile", "jax-profiler/cost-analysis attribution "
               "(dynamic keys; present only when profiling is on)",
               lambda: self.profiler.report(), typ=dict, optional=True)
         m.check_aliases()
+
+    def _register_slo_metrics(self) -> None:
+        f = self.metrics.func
+        f("slo.objectives", "number of configured SLO objectives",
+          lambda: len(self.slo.objectives), typ=int)
+        f("slo.evaluations", "monitoring ticks since start/reset "
+          "(one per engine step)",
+          lambda: self.slo.evaluations, kind="counter", typ=int)
+        f("slo.alerts_fired", "burn-rate alert firings since "
+          "start/reset",
+          lambda: self.slo.alerts_fired, kind="counter", typ=int)
+        f("slo.alerts_active", "objectives currently in alert",
+          lambda: self.slo.alerts_active, typ=int)
+        f("slo.worst_burn_rate", "max burn rate across objectives at "
+          "the last evaluation (1.0 = violations exactly exhaust the "
+          "error budget)",
+          lambda: self.slo.worst_burn_rate(), typ=float, optional=True)
+        f("slo.status", "per-objective window/burn/firing state "
+          "(dynamic keys: one per objective)",
+          lambda: self.slo.status(), typ=dict)
 
     def _register_spec_metrics(self) -> None:
         f = self.metrics.func

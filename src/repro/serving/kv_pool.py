@@ -441,6 +441,16 @@ class BlockPool:
             self._free.append(blk)
         return n
 
+    def reset_free_order(self) -> None:
+        """Restore the free stack to its pristine allocation order
+        (lowest block id pops first).  Free-list order is run history —
+        an identical logical workload replayed after a reset would
+        otherwise land on different PHYSICAL blocks, which the flight
+        recorder's decision stream (``cache.publish`` block ids) would
+        flag as a spurious divergence.  Requires no live sequences."""
+        assert not self._seqs, "reset_free_order with live sequences"
+        self._free.sort(reverse=True)
+
     # -- views ------------------------------------------------------------
 
     def table_row(self, seq_id: int, width: int) -> np.ndarray:

@@ -202,8 +202,13 @@ class Scheduler:
             if tr is not None:
                 tr.req_mark(req.rid, "admit", now)
                 if tr.enabled:
+                    # "order" pins the global admission index into the
+                    # flight recorder's decision stream: a replay that
+                    # admits the same rids in a different order diffs
+                    # even if the ring dropped earlier events
                     tr.event("sched.admit", "sched", ts=now, args={
                         "rid": req.rid, "slot": slot,
+                        "order": len(self.admission_log) - 1,
                         "feed_tokens": len(req.feed),
                         "cached_tokens": hit,
                         "resume": req.preemptions > 0})

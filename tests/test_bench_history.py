@@ -1,0 +1,134 @@
+"""Bench-history ledger + noise-aware regression detection (ISSUE 9).
+
+Pure python (no jax): fingerprint stability over workload-defining
+fields only, dotted-path extraction that tolerates pre-obs snapshots,
+JSONL append/load round-trips, and the regression verdicts — best-of-N
+baselines, per-metric direction + relative tolerance, zero-tolerance
+parity metrics, and the trivially-passing no-matching-baseline case.
+"""
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.bench_history import (HISTORY_SCHEMA, TRACKED,  # noqa: E402
+                                      append_entry, entry_of, extract,
+                                      fingerprint_of, load_history,
+                                      regress)
+
+
+def bench(**over):
+    b = {
+        "backend": "cpu",
+        "workload": {"n_requests": 16, "rate_req_s": 1000.0, "seed": 0},
+        "continuous": {"tokens_per_s": 800.0},
+        "speedup_tokens_per_s": 1.2,
+        "decode_steps": {"continuous": 57, "static": 120},
+        "w8a8": {"agreement_int_ref": 1.0,
+                 "workload": {"n_requests": 16, "seed": 0},
+                 "tokens_per_s_best": {"w8a8": 500.0}},
+        "flight_recorder": {"decisions": 88, "replay_diff_lines": 0,
+                            "workload": {"n_requests": 12, "seed": 0}},
+        "slo": {"overload": {"alerts_fired": 2},
+                "healthy": {"alerts_fired": 0},
+                "workload": {"n_requests": 16, "seed": 0}},
+    }
+    b.update(over)
+    return b
+
+
+def test_fingerprint_hashes_workloads_not_measurements():
+    a = bench()
+    assert fingerprint_of(a) == fingerprint_of(bench())
+    # measurements don't move it
+    faster = bench(continuous={"tokens_per_s": 9999.0},
+                   speedup_tokens_per_s=9.0)
+    assert fingerprint_of(faster) == fingerprint_of(a)
+    # workload-defining fields do
+    assert fingerprint_of(bench(backend="gpu")) != fingerprint_of(a)
+    moved = bench(workload={"n_requests": 32, "rate_req_s": 1000.0,
+                            "seed": 0})
+    assert fingerprint_of(moved) != fingerprint_of(a)
+    w8 = bench()
+    w8["w8a8"] = dict(w8["w8a8"], workload={"n_requests": 8, "seed": 0})
+    assert fingerprint_of(w8) != fingerprint_of(a)
+
+
+def test_extract_tolerates_missing_sections():
+    m = extract(bench())
+    assert m["continuous.tokens_per_s"] == 800.0
+    assert m["flight_recorder.replay_diff_lines"] == 0.0
+    assert m["slo.overload.alerts_fired"] == 2.0
+    # a pre-obs snapshot still extracts its common subset
+    old = {"backend": "cpu", "continuous": {"tokens_per_s": 700.0},
+           "speedup_tokens_per_s": 1.1}
+    m_old = extract(old)
+    assert set(m_old) == {"continuous.tokens_per_s",
+                          "speedup_tokens_per_s"}
+    # non-numeric / non-finite values are skipped, not crashed on
+    weird = bench(continuous={"tokens_per_s": float("nan")},
+                  speedup_tokens_per_s="fast")
+    bad = extract(weird)
+    assert "continuous.tokens_per_s" not in bad
+    assert "speedup_tokens_per_s" not in bad
+    # every tracked path is unique
+    paths = [t.path for t in TRACKED]
+    assert len(paths) == len(set(paths))
+
+
+def test_ledger_round_trip(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    assert load_history(path) == []            # missing file is empty
+    e1 = entry_of(bench(), run={"seed": 0})
+    append_entry(path, e1)
+    append_entry(path, entry_of(bench(continuous={"tokens_per_s":
+                                                  850.0})))
+    hist = load_history(path)
+    assert len(hist) == 2
+    assert hist[0] == e1
+    assert hist[0]["schema"] == HISTORY_SCHEMA
+    assert hist[1]["metrics"]["continuous.tokens_per_s"] == 850.0
+    # schema gate: a future-format line fails loudly, not silently
+    with open(path, "a") as f:
+        f.write('{"schema": 99}\n')
+    with pytest.raises(ValueError, match="schema"):
+        load_history(path)
+
+
+def test_regress_verdicts(tmp_path):
+    history = [entry_of(bench()),
+               entry_of(bench(continuous={"tokens_per_s": 850.0}))]
+    # identical run passes against itself (best-of-N baseline = 850)
+    assert regress(bench(), history) == []
+    # within tolerance: tokens/s has rel_tol 0.60 -> floor 340
+    assert regress(bench(continuous={"tokens_per_s": 400.0}),
+                   history) == []
+    # beyond tolerance fails, and the message names the metric
+    fails = regress(bench(continuous={"tokens_per_s": 200.0}), history)
+    assert len(fails) == 1
+    assert fails[0].startswith("continuous.tokens_per_s")
+    # zero-tolerance parity metric: ANY drop fails
+    fails = regress(bench(w8a8={"agreement_int_ref": 0.999,
+                                "workload": {"n_requests": 16,
+                                             "seed": 0},
+                                "tokens_per_s_best": {"w8a8": 500.0}}),
+                    history)
+    assert any(f.startswith("w8a8.agreement_int_ref") for f in fails)
+    # lower-is-better direction: replay diff lines appearing is a fail
+    degraded = bench()
+    degraded["flight_recorder"] = dict(degraded["flight_recorder"],
+                                       replay_diff_lines=4)
+    fails = regress(degraded, history)
+    assert any(f.startswith("flight_recorder.replay_diff_lines")
+               for f in fails)
+    # IMPROVEMENTS never fail
+    assert regress(bench(continuous={"tokens_per_s": 2000.0}),
+                   history) == []
+
+
+def test_regress_without_matching_baseline_passes_with_warning(capsys):
+    history = [entry_of(bench(backend="gpu"))]
+    assert regress(bench(), history) == []
+    assert "no history entry matches" in capsys.readouterr().out
+    assert regress(bench(), []) == []

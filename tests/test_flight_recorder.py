@@ -1,0 +1,230 @@
+"""Workload flight recorder (DESIGN §15): capture / replay.
+
+Pure-python half: decision-line canonicalization, the unified decision
+diff, record JSON round-tripping and version gating.  Engine half: one
+module-scoped capture on a virtual-clock engine (speculation + prefix
+cache on, so the decision stream covers admits, chunk boundaries,
+cache publishes and spec verify), then the replay contract — token-
+identical outputs, a ZERO-line scheduler-decision diff on an
+identically-configured fresh engine, a NON-empty diff cross-config,
+and a replayed trace that validates exactly like its source capture.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs.replay import (RECORD_VERSION, ReplayResult,
+                              WorkloadRecord, build_requests,
+                              capture_workload, decision_lines,
+                              diff_decisions, engine_fingerprint,
+                              engine_settings, replay_workload)
+from repro.obs.trace import DECISION_CATS, Tracer, validate_chrome_trace
+
+
+# ---------------------------------------------------------------------------
+# pure python
+# ---------------------------------------------------------------------------
+
+def test_decision_lines_canonicalization():
+    lines = decision_lines([
+        ("sched.admit", {"rid": np.int64(3), "slot": 0,
+                         "resume": False}),
+        ("pool.free", {}),
+        ("cache.publish", {"block": np.int32(7), "frac": 0.25}),
+    ])
+    # sorted keys, python scalars, no timestamps
+    assert lines == ["sched.admit resume=false rid=3 slot=0",
+                     "pool.free",
+                     "cache.publish block=7 frac=0.25"]
+    # numpy and python spellings of the same decision are EQUAL lines
+    assert decision_lines([("e", {"x": np.float64(0.5)})]) == \
+        decision_lines([("e", {"x": 0.5})])
+
+
+def test_diff_decisions_empty_and_localized():
+    a = [("sched.admit", {"rid": 0}), ("pool.alloc", {"seq": 0})]
+    assert diff_decisions(a, list(a)) == []
+    b = [("sched.admit", {"rid": 0}), ("pool.alloc", {"seq": 1})]
+    diff = diff_decisions(a, b, label_a="run1", label_b="run2")
+    assert diff[0].startswith("--- run1")
+    assert diff[1].startswith("+++ run2")
+    assert "-pool.alloc seq=0" in diff and "+pool.alloc seq=1" in diff
+    assert not any(ln.startswith("-sched.admit") for ln in diff)
+
+
+def test_decision_sink_tees_only_decision_cats():
+    tr = Tracer(capacity=4, clock=lambda: 0.0, enabled=True)
+    tr.decision_sink = []
+    for cat in DECISION_CATS:
+        tr.event(f"{cat}.x", cat, args={"i": 1})
+    tr.event("ragged_step", "dispatch")        # not a decision
+    tr.event("slo.alert", "slo")               # not a decision
+    assert [n for n, _ in tr.decision_sink] == \
+        [f"{c}.x" for c in DECISION_CATS]
+    # the sink is UNBOUNDED — ring overflow must not eat decisions
+    for i in range(50):
+        tr.event("sched.admit", "sched", args={"order": i})
+    assert len(tr.events) == 4                 # ring stayed bounded
+    assert len(tr.decision_sink) == len(DECISION_CATS) + 50
+    tr.reset()
+    assert tr.decision_sink == []
+
+
+def test_record_json_round_trip(tmp_path):
+    rec = WorkloadRecord(
+        version=RECORD_VERSION, fingerprint="ab" * 8,
+        engine={"n_slots": 2}, requests=[
+            {"rid": 0, "prompt": [1, 2, 3], "max_new_tokens": 4,
+             "temperature": 0.0, "top_k": 0, "stop_token": None,
+             "arrival": 0.001}],
+        outputs={0: [5, 6]}, decisions=[["sched.admit", {"rid": 0}]],
+        timelines={0: {"arrival": 0.001, "done": 0.01}},
+        meta={"n_requests": 1})
+    path = tmp_path / "rec.json"
+    rec.save(str(path))
+    back = WorkloadRecord.load(str(path))
+    assert back == rec                         # int keys restored
+    assert json.load(open(path))["outputs"] == {"0": [5, 6]}
+    reqs = build_requests(back)
+    assert reqs[0].rid == 0 and list(reqs[0].prompt) == [1, 2, 3]
+    assert reqs[0].arrival == 0.001
+    bad = rec.to_json() | {"version": RECORD_VERSION + 1}
+    with pytest.raises(ValueError):
+        WorkloadRecord.from_json(bad)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def _engine(**kw):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.core.qmodel import QuantContext, QuantMode
+    from repro.models import model as M
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3_1_7b").scaled(dtype="float32"),
+        kv_cache_bits=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    base = dict(n_slots=2, block_size=8, max_model_len=64, spec_k=3,
+                prefix_cache=True, record=True)
+    base.update(kw)
+    return ServingEngine(cfg, params, QuantContext(mode=QuantMode.FP),
+                         **base)
+
+
+def _workload(vocab):
+    rng = np.random.default_rng(0)
+    reqs, t = [], 0.0
+    from repro.serving import Request
+    for i in range(4):
+        t += float(rng.exponential(0.02))
+        prompt = (np.tile(rng.integers(0, vocab, size=3), 5)
+                  if i == 1 else
+                  rng.integers(0, vocab, size=int(rng.integers(5, 20))))
+        reqs.append(Request(rid=i, prompt=prompt.astype(np.int32),
+                            max_new_tokens=int(rng.integers(3, 9)),
+                            arrival=t))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def captured():
+    eng = _engine()
+    reqs = _workload(eng.cfg.vocab_size)
+    eng.run(reqs)
+    rec = capture_workload(eng, reqs)
+    chrome = eng.tracer.to_chrome()
+    return eng, rec, chrome
+
+
+def test_capture_contents(captured):
+    eng, rec, _ = captured
+    assert rec.version == RECORD_VERSION
+    assert rec.fingerprint == engine_fingerprint(eng)
+    assert rec.meta["n_requests"] == 4
+    assert rec.meta["n_decisions"] == len(rec.decisions) > 0
+    assert rec.meta["wall_s_virtual"] > 0
+    assert set(rec.outputs) == {0, 1, 2, 3}
+    assert all(len(v) > 0 for v in rec.outputs.values())
+    names = {n for n, _ in rec.decisions}
+    assert "sched.admit" in names and "sched.prefill_chunk" in names
+    assert "pool.alloc" in names
+    # admission order is pinned explicitly in the stream
+    orders = [a["order"] for n, a in rec.decisions if n == "sched.admit"]
+    assert orders == sorted(orders) == list(range(len(orders)))
+    # requests serialize sorted by arrival with plain-int prompts
+    arrivals = [r["arrival"] for r in rec.requests]
+    assert arrivals == sorted(arrivals)
+    assert all(isinstance(t, int) for r in rec.requests
+               for t in r["prompt"])
+    # the record is genuinely portable
+    json.dumps(rec.to_json())
+    st = engine_settings(eng)
+    assert st["spec_k"] == 3 and st["ragged"] is True
+
+
+def test_capture_requires_record_mode():
+    eng = _engine(record=False, spec_k=0, max_model_len=32)
+    with pytest.raises(ValueError, match="record=True"):
+        capture_workload(eng, [])
+    with pytest.raises(ValueError, match="record=True"):
+        replay_workload(
+            WorkloadRecord(RECORD_VERSION, "x", {}, [], {}, [], {}, {}),
+            eng)
+
+
+def test_replay_same_engine_is_exact(captured):
+    eng, rec, _ = captured
+    res = replay_workload(rec, eng)            # reset + rerun in place
+    assert isinstance(res, ReplayResult)
+    assert res.token_identical and res.mismatched_rids == []
+    assert res.decision_diff == []
+    assert res.fingerprint_match
+    assert res.ok
+
+
+def test_replay_fresh_engine_after_json_round_trip(captured):
+    _, rec, src_chrome = captured
+    rec2 = WorkloadRecord.from_json(
+        json.loads(json.dumps(rec.to_json())))
+    fresh = _engine()
+    res = replay_workload(rec2, fresh)
+    assert res.ok and res.fingerprint_match
+    assert res.outputs == rec.outputs
+    # satellite: the REPLAYED run's trace validates identically to its
+    # source capture — same verdict (clean) and same span population
+    replayed_chrome = fresh.tracer.to_chrome()
+    assert validate_chrome_trace(src_chrome) == []
+    assert validate_chrome_trace(replayed_chrome) == []
+    assert {e["name"] for e in src_chrome["traceEvents"]} == \
+        {e["name"] for e in replayed_chrome["traceEvents"]}
+    # virtual clock: replayed request timelines land on the SAME times
+    # (the record rounds to 9 places in _canon)
+    assert fresh.tracer.timelines[0].done == \
+        pytest.approx(rec.timelines[0]["done"], abs=1e-9)
+
+
+def test_replay_cross_config_diffs_but_keeps_greedy_tokens(captured):
+    _, rec, _ = captured
+    legacy = _engine(ragged=False)
+    res = replay_workload(rec, legacy)
+    assert not res.fingerprint_match           # config divergence seen
+    assert res.token_identical                 # greedy fp32 parity
+    assert res.decision_diff != []             # scheduling diverged
+    assert not res.ok
+    with pytest.raises(ValueError, match="fingerprint"):
+        replay_workload(rec, legacy, strict_fingerprint=True)
+
+
+def test_fingerprint_tracks_every_engine_knob(captured):
+    eng, rec, _ = captured
+    assert engine_fingerprint(eng) == rec.fingerprint
+    for kw in (dict(spec_k=0), dict(n_slots=4), dict(block_size=16),
+               dict(prefix_cache=False), dict(virtual_dt=2e-3)):
+        other = _engine(**kw)
+        assert engine_fingerprint(other) != rec.fingerprint, kw

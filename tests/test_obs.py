@@ -499,3 +499,127 @@ def test_disabled_sections_surface_as_none():
     assert errs == [], "\n".join(errs)
     assert rep["obs"]["trace_enabled"] is False
     assert rep["energy"]["total_quant_ops"] == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite coverage (ISSUE 9): ring metrics, escaping, percentile
+# contract, chrome-validator edge cases
+# ---------------------------------------------------------------------------
+
+def test_ring_overflow_moves_dropped_counter_metrics():
+    # a DELIBERATELY tiny ring: the registry-facing counter and the
+    # occupancy gauge must track the overflow, not just tracer attrs
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.core.qmodel import QuantContext, QuantMode
+    from repro.models import model as M
+    from repro.serving import Request, ServingEngine
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3_1_7b").scaled(dtype="float32"),
+        kv_cache_bits=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, QuantContext(mode=QuantMode.FP),
+                        n_slots=2, block_size=8, max_model_len=32,
+                        trace=True, trace_capacity=8)
+    assert eng.metrics.get_value("obs.trace_dropped_total") == 0
+    assert eng.metrics.get_value("obs.trace_ring_used") == 0.0
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=6).astype(np.int32),
+                    max_new_tokens=4, arrival=0.0) for i in range(3)]
+    eng.run(reqs)
+    dropped = eng.metrics.get_value("obs.trace_dropped_total")
+    assert dropped == eng.tracer.dropped > 0
+    assert eng.metrics.get_value("obs.trace_ring_used") == 1.0
+    rep = eng.report()
+    assert rep["obs"]["trace_dropped_total"] == dropped
+    assert rep["obs"]["trace_ring_used"] == 1.0
+    eng.reset_metrics()
+    assert eng.metrics.get_value("obs.trace_dropped_total") == 0
+    assert eng.metrics.get_value("obs.trace_ring_used") == 0.0
+
+
+def test_prometheus_escaping_round_trips_pathological_strings():
+    # prometheus 0.0.4 text format: HELP escapes backslash + newline,
+    # label values escape backslash + double-quote + newline.  A parser
+    # applying the spec's unescaping must recover the originals.
+    nasty_help = 'multi\nline "quoted" back\\slash help'
+    nasty_value = 'path\\to\n"thing"'
+    m = MetricsRegistry()
+    m.counter("nasty.ops", nasty_help, label_names=("k",)).inc(2, k="a\nb")
+    m.func("nasty.mode", "mode str", lambda: nasty_value)
+    text = m.to_prometheus()
+    for line in text.splitlines():
+        assert "\r" not in line
+    help_line = next(l for l in text.splitlines()
+                     if l.startswith("# HELP nasty_ops "))
+    escaped = help_line[len("# HELP nasty_ops "):]
+    assert "\n" not in escaped
+    # spec unescape for HELP: \\ -> \, \n -> newline
+    out, i = [], 0
+    while i < len(escaped):
+        if escaped[i] == "\\" and i + 1 < len(escaped):
+            out.append({"n": "\n", "\\": "\\"}[escaped[i + 1]])
+            i += 2
+        else:
+            out.append(escaped[i])
+            i += 1
+    assert "".join(out) == nasty_help
+    series = next(l for l in text.splitlines()
+                  if l.startswith("nasty_ops{"))
+    assert 'k="a\\nb"' in series and series.endswith(" 2")
+    info = next(l for l in text.splitlines()
+                if l.startswith("nasty_mode_info{"))
+    val = info[info.index('value="') + len('value="'):info.rindex('"')]
+    assert (val.replace("\\\\", "\x00").replace('\\"', '"')
+            .replace("\\n", "\n").replace("\x00", "\\") == nasty_value)
+
+
+def test_histogram_percentile_vs_exact_error_bound():
+    # the documented contract (Histogram.percentile docstring and
+    # Tracer.derive_latencies docstring both cite this test): the
+    # bucket-bound percentile is >= the exact rank statistic and
+    # overshoots by AT MOST one bucket width; derive_latencies keeps
+    # the exact raw samples.
+    rng = np.random.default_rng(3)
+    samples = rng.uniform(0.0, 0.1, size=97)
+    width = 0.01
+    edges = [width * k for k in range(1, 11)]      # covers [0, 0.1]
+    h = Histogram("h", "lat", buckets=edges)
+    for v in samples:
+        h.observe(float(v))
+    srt = np.sort(samples)
+    for q in (1, 10, 25, 50, 75, 90, 99):
+        rank = max(1, math.ceil(q / 100.0 * len(srt)))
+        exact = float(srt[rank - 1])
+        bb = h.percentile(q)
+        assert bb >= exact, f"p{q} under-reported: {bb} < {exact}"
+        assert bb - exact <= width + 1e-12, \
+            f"p{q} error {bb - exact} exceeds one bucket width"
+    # exact side of the contract: timelines hand back raw samples
+    tr = Tracer(capacity=4, enabled=False)
+    tr.req_submit(0, arrival=0.0)
+    tr.req_mark(0, "first_token", 0.012)
+    tr.req_done(0, 0.05, n_generated=3)
+    lat = tr.derive_latencies()
+    assert lat["ttft"] == [0.012] and lat["e2e"] == [0.05]
+
+
+def test_validate_chrome_trace_accepts_edge_cases():
+    # empty trace: a capture with zero events is still a valid trace
+    assert validate_chrome_trace({"traceEvents": []}) == []
+    # events-only object: otherData/displayTimeUnit are optional
+    events_only = {"traceEvents": [
+        {"name": "e", "ph": "i", "ts": 5.0, "pid": 0, "tid": 1, "s": "t"}]}
+    assert validate_chrome_trace(events_only) == []
+    # out-of-order timestamps are legal — the chrome loader sorts; the
+    # validator must be order-agnostic
+    shuffled = {"traceEvents": [
+        {"name": "b", "ph": "X", "ts": 900.0, "dur": 1.0,
+         "pid": 0, "tid": 0},
+        {"name": "a", "ph": "i", "ts": 1.0, "pid": 0, "tid": 0, "s": "t"},
+        {"name": "M", "ph": "M", "ts": 0, "pid": 0, "tid": 0,
+         "args": {"name": "proc"}}]}
+    assert validate_chrome_trace(shuffled) == []

@@ -1,0 +1,245 @@
+"""SLO objectives + burn-rate monitoring (DESIGN §15).
+
+Pure-python half: objective validation, the burn-rate arithmetic
+(``burn = (bad/total)/budget_frac``), rolling-window trimming,
+min-samples gating, fire/clear transitions and their tracer events,
+gauge objectives through a ``value_fn``.  Engine half: a record-mode
+(virtual clock) run with impossibly tight objectives must fire
+deterministically, surface in the report's ``slo`` section, match the
+golden schema with ``slo=True``, and reset cleanly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.obs.slo import (REQUEST_METRICS, SLObjective, SLOMonitor,
+                           default_slos)
+from repro.obs.trace import Tracer
+
+
+def obj(**kw):
+    base = dict(name="o", metric="ttft", target=1.0, budget_frac=0.25,
+                window_s=10.0, burn_threshold=1.0, min_samples=1)
+    base.update(kw)
+    return SLObjective(**base)
+
+
+# ---------------------------------------------------------------------------
+# objectives
+# ---------------------------------------------------------------------------
+
+def test_objective_validation():
+    with pytest.raises(ValueError):
+        obj(name="")
+    with pytest.raises(ValueError):
+        obj(budget_frac=0.0)
+    with pytest.raises(ValueError):
+        obj(budget_frac=1.5)
+    with pytest.raises(ValueError):
+        obj(window_s=0.0)
+    with pytest.raises(ValueError):
+        obj(min_samples=0)
+    assert obj(metric="ttft").kind == "request"
+    assert obj(metric="e2e").kind == "request"
+    assert obj(metric="pool.utilization").kind == "gauge"
+    assert set(REQUEST_METRICS) == {"ttft", "tpot", "e2e"}
+
+
+def test_default_slos_composition():
+    objs = {o.name: o for o in default_slos()}
+    assert set(objs) == {"ttft", "e2e", "pool_pressure"}
+    assert objs["pool_pressure"].metric == "pool.utilization"
+    objs = {o.name: o for o in default_slos(
+        ttft_s=None, e2e_s=None, pool_utilization=None,
+        tpot_s=0.01, energy_uj_per_token=200.0)}
+    assert set(objs) == {"tpot", "energy_per_token"}
+    assert objs["energy_per_token"].metric == "energy.proxy_uj_per_token"
+    with pytest.raises(ValueError):
+        SLOMonitor([obj(), obj()])             # duplicate names
+
+
+# ---------------------------------------------------------------------------
+# burn-rate arithmetic + windows
+# ---------------------------------------------------------------------------
+
+def test_burn_rate_math():
+    mon = SLOMonitor([obj(budget_frac=0.25)])
+    burn, total, bad = mon.burn_rate("o", 0.0)
+    assert (burn, total, bad) == (None, 0, 0)
+    for i in range(8):
+        mon.observe("o", float(i), 0.5 if i % 4 else 2.0)  # 2 of 8 bad
+    burn, total, bad = mon.burn_rate("o", 7.0)
+    assert (total, bad) == (8, 2)
+    assert burn == pytest.approx((2 / 8) / 0.25)           # == 1.0
+
+
+def test_window_trims_old_observations():
+    mon = SLOMonitor([obj(window_s=5.0)])
+    mon.observe("o", 0.0, 99.0)                # bad, will age out
+    for t in (4.0, 6.0, 8.0):
+        mon.observe("o", t, 0.1)
+    burn, total, bad = mon.burn_rate("o", 8.0)
+    assert total == 3 and bad == 0 and burn == 0.0
+    # advancing `now` alone trims too (burn_rate re-trims at read time)
+    burn, total, _ = mon.burn_rate("o", 11.0)   # cutoff 6.0 keeps 6,8
+    assert total == 2
+
+
+def test_min_samples_gates_firing():
+    mon = SLOMonitor([obj(min_samples=3)])
+    mon.observe("o", 0.0, 9.0)                 # 100% bad, burn 4.0
+    mon.evaluate(0.0)
+    assert mon.alerts_fired == 0               # only 1 sample
+    mon.observe("o", 0.1, 9.0)
+    mon.observe("o", 0.2, 9.0)
+    mon.evaluate(0.2)
+    assert mon.alerts_fired == 1 and mon.alerts_active == 1
+
+
+def test_fire_and_clear_emit_tracer_events():
+    tr = Tracer(capacity=64, clock=lambda: 0.0, enabled=True)
+    mon = SLOMonitor([obj(window_s=2.0)], tracer=tr)
+    mon.observe("o", 0.0, 9.0)                 # violation
+    mon.evaluate(0.0)
+    assert mon.alerts_fired == 1 and mon.alerts_active == 1
+    alert = mon.alerts[-1]
+    assert alert["objective"] == "o" and alert["burn_rate"] == 4.0
+    assert alert["window_total"] == 1 and alert["window_bad"] == 1
+    mon.evaluate(0.5)                          # still firing: no re-fire
+    assert mon.alerts_fired == 1
+    mon.evaluate(5.0)                          # window empties -> clears
+    assert mon.alerts_active == 0
+    names = [name for (_ph, name, *_r) in tr.events]
+    assert names.count("slo.alert") == 1
+    assert names.count("slo.recover") == 1
+    assert mon.worst_burn_rate() is None       # empty window: no burn
+    st = mon.status()["o"]
+    assert st["firing"] is False and st["window_total"] == 0
+
+
+def test_request_objectives_ingest_from_timelines_once():
+    tr = Tracer(capacity=8, enabled=False)     # timelines are always on
+    mon = SLOMonitor(
+        [obj(name="ttft", metric="ttft", target=0.05),
+         obj(name="e2e", metric="e2e", target=10.0)], tracer=tr)
+    tr.req_submit(0, arrival=0.0)
+    tr.req_mark(0, "first_token", 0.2)         # TTFT 0.2 > 0.05: bad
+    tr.req_done(0, 0.3, n_generated=2)
+    tr.req_submit(1, arrival=0.0)              # never completes
+    mon.evaluate(0.3)
+    assert mon.burn_rate("ttft", 0.3)[1:] == (1, 1)
+    assert mon.burn_rate("e2e", 0.3)[1:] == (1, 0)
+    mon.evaluate(0.4)                          # done rids ingest ONCE
+    assert mon.burn_rate("ttft", 0.4)[1] == 1
+    assert mon.alerts_active == 1              # ttft firing, e2e not
+    assert mon.status()["ttft"]["firing"] is True
+
+
+def test_gauge_objectives_read_value_fn():
+    vals = {"pool.utilization": 0.99}
+    mon = SLOMonitor(
+        [obj(name="pool", metric="pool.utilization", target=0.9),
+         obj(name="missing", metric="not.registered", target=1.0),
+         obj(name="undefined", metric="late.metric", target=1.0)],
+        value_fn=lambda n: ({"late.metric": None} | vals)[n])
+    mon.evaluate(1.0)
+    assert mon.burn_rate("pool", 1.0)[1:] == (1, 1)
+    # KeyError (unregistered) and None (not yet defined) both skip
+    assert mon.burn_rate("missing", 1.0)[1] == 0
+    assert mon.burn_rate("undefined", 1.0)[1] == 0
+    vals["pool.utilization"] = 0.5
+    mon.evaluate(2.0)
+    assert mon.burn_rate("pool", 2.0)[1:] == (2, 1)
+    mon.reset()
+    assert mon.evaluations == 0 and mon.alerts_fired == 0
+    assert mon.burn_rate("pool", 2.0)[1] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine integration (virtual clock => deterministic alerting)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def slo_run():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.core.qmodel import QuantContext, QuantMode
+    from repro.models import model as M
+    from repro.serving import Request, ServingEngine
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3_1_7b").scaled(dtype="float32"),
+        kv_cache_bits=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tight = [SLObjective(name="ttft", metric="ttft", target=1e-6,
+                         window_s=1.0),
+             SLObjective(name="pool", metric="pool.utilization",
+                         target=2.0, window_s=1.0)]   # never violated
+    eng = ServingEngine(cfg, params, QuantContext(mode=QuantMode.FP),
+                        n_slots=2, block_size=8, max_model_len=32,
+                        record=True, slo=tight)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=6).astype(np.int32),
+                    max_new_tokens=3, arrival=i * 0.001)
+            for i in range(3)]
+    rep = eng.run(reqs)
+    return eng, rep
+
+
+def test_engine_fires_deterministic_alert(slo_run):
+    eng, rep = slo_run
+    assert eng.slo is not None
+    assert rep["slo"]["alerts_fired"] == 1          # ttft only
+    assert rep["slo"]["alerts_active"] == 1
+    assert rep["slo"]["worst_burn_rate"] >= 1.0
+    assert rep["slo"]["evaluations"] == eng.slo.evaluations > 0
+    st = rep["slo"]["status"]
+    assert st["ttft"]["firing"] is True
+    assert st["pool"]["firing"] is False and st["pool"]["window_bad"] == 0
+    # the alert is traced on the slo lane with its structured payload
+    alerts = [(name, args) for (_ph, name, _cat, _ts, _dur, args)
+              in eng.tracer.events if name == "slo.alert"]
+    assert len(alerts) == 1
+    assert alerts[0][1]["objective"] == "ttft"
+
+
+def test_engine_slo_matches_golden_schema(slo_run):
+    from repro.obs.schema import diff_schema, schema_of
+    eng, _ = slo_run
+    errs = diff_schema(schema_of(eng.metrics), spec=False, slo=True)
+    assert errs == [], "\n".join(errs)
+    # and the default (slo=False) diff flags the extra section, so
+    # existing engines without a monitor stay contract-clean
+    assert any("slo." in e
+               for e in diff_schema(schema_of(eng.metrics), spec=False))
+
+
+def test_engine_slo_true_uses_default_objectives():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.core.qmodel import QuantContext, QuantMode
+    from repro.models import model as M
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3_1_7b").scaled(dtype="float32"),
+        kv_cache_bits=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, QuantContext(mode=QuantMode.FP),
+                        n_slots=2, block_size=8, max_model_len=32,
+                        slo=True)
+    assert set(eng.slo.objectives) == \
+        {o.name for o in default_slos()}
+    assert eng.report()["slo"]["alerts_fired"] == 0
+
+
+def test_reset_clears_slo_state(slo_run):
+    eng, _ = slo_run
+    assert eng.slo.alerts_fired > 0
+    eng.reset_metrics()
+    assert eng.slo.alerts_fired == 0 and eng.slo.alerts_active == 0
+    assert eng.slo.evaluations == 0
+    assert eng.report()["slo"]["worst_burn_rate"] is None
