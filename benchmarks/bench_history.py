@@ -92,6 +92,13 @@ TRACKED: tuple[Tracked, ...] = (
     Tracked("flight_recorder.replay_diff_lines", higher=False, rel_tol=0.0),
     Tracked("slo.overload.alerts_fired", higher=True, rel_tol=0.0),
     Tracked("slo.healthy.alerts_fired", higher=False, rel_tol=0.0),
+    # §16 fixed-slab substrate: all three are pure functions of the
+    # workload shape — zero tolerance
+    Tracked("recurrent_substrate.parity_all", higher=True, rel_tol=0.0),
+    Tracked("recurrent_substrate.long.rwkv6.requant_ops_per_token",
+            higher=False, rel_tol=0.0),
+    Tracked("recurrent_substrate.long.attention.requant_ops_per_token",
+            higher=True, rel_tol=0.0),
 )
 
 

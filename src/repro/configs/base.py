@@ -103,6 +103,13 @@ class ModelConfig:
     # rope/qk-norm K and V are O(1)-ranged, n=4 keeps |x|<8 representable.
     kv_cache_bits: Optional[int] = None
     kv_cache_frac_bits: int = 4
+    # int8 recurrent-state slabs (DESIGN §16): Eq. 1 applied to the O(1)
+    # RWKV/Mamba sequence state on the fixed-slab substrate — the whole
+    # slab requantizes ONCE per engine step on a per-slab po2 grid (the
+    # paper's fewer-quantization-ops thesis at its strongest; decay math
+    # stays fp32 per §4).  None keeps fp32 slabs (the parity oracle mode).
+    state_bits: Optional[int] = None
+    state_frac_bits: int = 4
     # attention implementation for the hot paths (DESIGN §2):
     #   'chunked' — pure-JAX online-softmax scan (reference, CPU-friendly)
     #   'flash'   — fused Pallas kernel; with an int8 KV cache the codes are

@@ -123,6 +123,40 @@ def forward_quant_ops_per_token(cfg) -> int:
     return cfg.n_layers * (act_in + requant_out) + head
 
 
+def state_quant_ops_per_step(cfg) -> int:
+    """Eq.-1 quantization ops to re-quantize ONE sequence's ENTIRE
+    recurrent state once, i.e. per engine step on the fixed-slab
+    substrate (DESIGN §16).
+
+    This is the recurrent counterpart of the per-token KV write: a
+    transformer quantizes ``n_layers * n_kv_heads * head_dim * 2`` new
+    elements per token and the cost of touching the cache grows with
+    context; a recurrent layer re-quantizes its fixed-size state slab
+    once per step, so the per-step cost is CONTEXT-FREE.  Counted
+    whether the slab is stored int8 (ops performed) or fp32 (the same
+    ops as the counterfactual ``avoided`` bucket), so
+    ``requant_ops_per_token`` compares across storage modes.
+
+    RWKV6 per layer: the (H, 64, 64) wkv matrix plus the two d_model
+    token-shift rows.  Mamba2 per layer: the (H, P, N) SSD state plus
+    the (d_conv-1, d_conv_in) rolling conv window.  Hybrid stacks count
+    the Mamba slab for every layer (the shared attention block's KV is
+    on the ordinary per-token accounting).  Zero on pure attention.
+    """
+    s = cfg.ssm
+    if s is None:
+        return 0
+    if s.kind == "rwkv6":
+        n_heads = cfg.d_model // 64            # HEAD_DIM = 64
+        return cfg.n_layers * (n_heads * 64 * 64 + 2 * cfg.d_model)
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    d_conv_in = d_inner + 2 * s.n_groups * s.d_state
+    per_layer = (n_heads * s.head_dim * s.d_state
+                 + (s.d_conv - 1) * d_conv_in)
+    return cfg.n_layers * per_layer
+
+
 def memory_access_bytes(n_elements: int, bits: int) -> int:
     """Storage/traffic for one tensor — the paper's ~4x memory-access claim
     (8-bit vs fp32) falls out of bits/32."""

@@ -173,7 +173,9 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
                  mesh_shape: tuple[int, int] | None = None,
                  prompt_lens=(8, 16, 24, 32), gen_lens=(4, 8, 16, 24),
                  requests=None, cfg_overrides: dict | None = None,
-                 shared_prefix: int = 0, prefix_cache: bool = True,
+                 shared_prefix: int = 0, prefix_cache: bool | None = None,
+                 num_slabs: int | None = None,
+                 state_bits: int | None = None,
                  spec_k: int = 0, drafter="ngram",
                  ragged: bool = True, w8a8: bool = False,
                  trace: str | bool = False, trace_capacity: int = 65536,
@@ -187,7 +189,16 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
 
     ``shared_prefix`` prepends an N-token system prompt to every request
     (see :func:`poisson_workload`); ``prefix_cache=False`` disables the
-    content-addressed cache for A/B comparison at equal pool size.
+    content-addressed cache for A/B comparison at equal pool size, and
+    the default ``None`` lets the substrate decide (on for attention,
+    off — and an error if forced on — for recurrent/hybrid models,
+    whose state is a running summary with no addressable prefix).
+
+    Recurrent / hybrid archs (``rwkv6_3b``, ``zamba2_2_7b``) serve from
+    the fixed-slab substrate (DESIGN §16): ``num_slabs`` sizes the state
+    pool (default 1 trash + one slab per slot) and ``state_bits=8``
+    stores slabs as int8 Eq.-1 codes requantized once per engine step
+    (``None`` = fp32 slabs, the parity-oracle mode).
     ``spec_k > 0`` turns on speculative decoding (DESIGN §11): up to K
     tokens per slot are drafted (``drafter``: 'ngram' prompt-lookup
     self-drafting, or any object with draft(history, k)) and verified in
@@ -223,6 +234,8 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
     overrides = dict(cfg_overrides or {})
     if kv_bits is not None:
         overrides.setdefault("kv_cache_bits", kv_bits)
+    if state_bits is not None:
+        overrides.setdefault("state_bits", state_bits)
     if w8a8:
         mode, calibrate = "int", True
         overrides["matmul_kernel"] = "int8"
@@ -266,7 +279,8 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
     engine = ServingEngine(cfg, params, ctx, n_slots=n_slots,
                            block_size=block_size, chunk=chunk,
                            max_model_len=max_model_len,
-                           num_blocks=num_blocks, top_k=top_k, mesh=mesh,
+                           num_blocks=num_blocks, num_slabs=num_slabs,
+                           top_k=top_k, mesh=mesh,
                            seed=seed, prefix_cache=prefix_cache,
                            spec_k=spec_k, drafter=drafter, ragged=ragged,
                            trace=bool(trace), trace_capacity=trace_capacity,
@@ -296,7 +310,11 @@ def serve_engine(arch: str, *, n_requests: int = 16, rate: float = 50.0,
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", "--model", dest="arch", required=True,
+                    help="architecture name (alias: --model) — includes "
+                         "the recurrent/hybrid archs rwkv6_3b and "
+                         "zamba2_2_7b, served from the fixed-slab "
+                         "substrate (DESIGN §16)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -334,9 +352,23 @@ def main(argv=None):
                          "prompt to every request — the workload the "
                          "content-addressed prefix cache serves with one "
                          "quantization pass (DESIGN §10)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="[--engine] force the content-addressed prefix "
+                         "cache ON (default: substrate decides — on for "
+                         "attention archs, unavailable on recurrent/"
+                         "hybrid ones)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="[--engine] disable the prefix cache (baseline "
                          "for A/B at equal pool size)")
+    ap.add_argument("--slabs", type=int, default=None, metavar="N",
+                    help="[--engine] recurrent-state pool size in slabs "
+                         "(DESIGN §16; default 1 trash + one per slot); "
+                         "ignored on pure-attention archs")
+    ap.add_argument("--state-bits", type=int, default=None, choices=[8],
+                    help="[--engine] store recurrent state slabs as int8 "
+                         "Eq.-1 codes, requantized once per engine step "
+                         "(default: fp32 slabs, the parity-oracle mode); "
+                         "ignored on pure-attention archs")
     ap.add_argument("--spec-k", type=int, default=0, metavar="K",
                     help="[--engine] speculative decoding (DESIGN §11): "
                          "draft up to K tokens per slot and verify them "
@@ -405,15 +437,26 @@ def main(argv=None):
     if args.mesh is not None:
         d, m = (int(x) for x in args.mesh.lower().split("x"))
         mesh_shape = (d, m)
+    if args.prefix_cache and args.no_prefix_cache:
+        ap.error("--prefix-cache and --no-prefix-cache are mutually "
+                 "exclusive")
+    # tri-state: None lets the substrate decide (engine errors with a
+    # clear message if --prefix-cache is forced on a recurrent arch)
+    prefix_cache = (True if args.prefix_cache
+                    else False if args.no_prefix_cache else None)
 
     if args.replay:                   # implies --engine
         from repro.obs.replay import (WorkloadRecord, build_requests,
                                       replay_workload)
         rec = WorkloadRecord.load(args.replay)
         es = rec.engine
+        # block_size/num_blocks are None in recurrent-substrate records
+        # (no KV pool existed); serve_engine's defaults only matter for
+        # archs that grow, where the record always carries real values.
         out = serve_engine(args.arch, requests=build_requests(rec),
                            n_slots=es["n_slots"],
-                           block_size=es["block_size"], chunk=es["chunk"],
+                           block_size=es["block_size"] or 16,
+                           chunk=es["chunk"],
                            max_model_len=es["max_model_len"],
                            num_blocks=es["num_blocks"], mode=args.mode,
                            calibrate=not args.no_calibrate,
@@ -422,6 +465,7 @@ def main(argv=None):
                            top_k=es["default_top_k"], seed=es["seed"],
                            mesh_shape=mesh_shape,
                            prefix_cache=es["prefix_cache"],
+                           num_slabs=es.get("num_slabs"),
                            spec_k=es["spec_k"], drafter=args.drafter,
                            ragged=es["ragged"], w8a8=args.w8a8,
                            record=True, virtual_dt=es["virtual_dt"])
@@ -440,25 +484,33 @@ def main(argv=None):
 
     if args.engine:
         import json
-        out = serve_engine(args.arch, n_requests=args.requests,
-                           rate=args.rate, n_slots=args.slots,
-                           block_size=args.block_size, chunk=args.chunk,
-                           mode=args.mode, calibrate=not args.no_calibrate,
-                           smoke=not args.full,
-                           attn_kernel=args.attn_kernel,
-                           temperature=args.temperature, top_k=args.top_k,
-                           mesh_shape=mesh_shape,
-                           shared_prefix=args.shared_prefix,
-                           prefix_cache=not args.no_prefix_cache,
-                           spec_k=args.spec_k, drafter=args.drafter,
-                           ragged=not args.no_ragged, w8a8=args.w8a8,
-                           trace=args.trace if args.trace else False,
-                           trace_capacity=args.trace_capacity,
-                           metrics_path=args.metrics,
-                           profile_dir=args.profile_dir,
-                           profile_cost=args.profile_cost,
-                           record=args.record if args.record else False,
-                           slo=True if args.slo else None)
+        try:
+            out = serve_engine(
+                args.arch, n_requests=args.requests,
+                rate=args.rate, n_slots=args.slots,
+                block_size=args.block_size, chunk=args.chunk,
+                mode=args.mode, calibrate=not args.no_calibrate,
+                smoke=not args.full,
+                attn_kernel=args.attn_kernel,
+                temperature=args.temperature, top_k=args.top_k,
+                mesh_shape=mesh_shape,
+                shared_prefix=args.shared_prefix,
+                prefix_cache=prefix_cache,
+                num_slabs=args.slabs, state_bits=args.state_bits,
+                spec_k=args.spec_k, drafter=args.drafter,
+                ragged=not args.no_ragged, w8a8=args.w8a8,
+                trace=args.trace if args.trace else False,
+                trace_capacity=args.trace_capacity,
+                metrics_path=args.metrics,
+                profile_dir=args.profile_dir,
+                profile_cost=args.profile_cost,
+                record=args.record if args.record else False,
+                slo=True if args.slo else None)
+        except ValueError as e:
+            # substrate incompatibilities (e.g. --spec-k / --prefix-cache
+            # on a recurrent arch) surface as one actionable line, not a
+            # traceback
+            ap.exit(2, f"error: {e}\n")
         print(json.dumps(out["report"], indent=2))
         if args.record:
             rec = out["record"]
@@ -490,6 +542,15 @@ def main(argv=None):
               f"[prefill {en['prefill']['uj_per_token']}, "
               f"decode {en['decode']['uj_per_token']}, "
               f"spec-wasted {en['spec_wasted']['uj_per_token']}]")
+        sl = out["report"].get("state_pool")
+        if sl is not None:
+            hw = out["report"].get("hwcost", {})
+            print(f"state slabs ({out['report']['substrate']}): "
+                  f"{sl['peak_live_slabs']}/{sl['num_slabs']} peak live "
+                  f"({sl['allocs']} allocs, {sl['seq_evictions']} "
+                  f"evictions), {sl['state_quant_ops_per_step']} state "
+                  f"requant ops/step/seq (scale exp {sl['scale_exp']}); "
+                  f"requant ops/token {hw.get('requant_ops_per_token')}")
         hw = out["report"].get("hwcost", {})
         if hw.get("w8a8"):
             print(f"w8a8 forward: {hw['requant_ops_forward']} requant ops "

@@ -275,6 +275,30 @@ def build_paged_step(cfg: ModelConfig, ctx: QuantContext,
     return paged_step
 
 
+def build_recurrent_step(cfg: ModelConfig, ctx: QuantContext,
+                         attn_kernel: Optional[str] = None,
+                         mesh: Optional[Mesh] = None):
+    """One serving step on the fixed-slab recurrent substrate (DESIGN §16):
+    (params, tokens (B,C), cache, slab_ids (B,), q_len (B,), positions,
+    block_tables) -> (logits (B,V), cache).  ONE fixed shape
+    (B = n_slots, C = chunk) covers prefill chunks, decode rows, and idle
+    lanes at once — per-row ``q_len`` does the bucketing work, so jit
+    specializes exactly once.  ``positions``/``block_tables`` are None for
+    pure recurrent families; the hybrid family threads them into the
+    shared attention block's KV pool."""
+    cfg = _resolve_attn_kernel(cfg, attn_kernel, mesh)
+    _check_matmul_kernel(cfg, ctx)
+
+    def recurrent_step(params, tokens, cache, slab_ids, q_len,
+                       positions=None, block_tables=None):
+        with _mesh_scope(mesh):
+            return M.paged_recurrent_step(params, tokens, cache, slab_ids,
+                                          q_len, positions, block_tables,
+                                          cfg, ctx)
+
+    return recurrent_step
+
+
 def build_ragged_step(cfg: ModelConfig, ctx: QuantContext,
                       attn_kernel: Optional[str] = None,
                       mesh: Optional[Mesh] = None):

@@ -24,8 +24,9 @@ from repro.models import ssm as ssm_lib
 from repro.models import transformer as tfm
 from repro.models.common import Initializer, embed, rmsnorm, unembed
 
-__all__ = ["init_params", "init_cache", "init_paged_cache", "forward",
-           "prefill", "decode_step", "paged_step", "ragged_step", "loss_fn"]
+__all__ = ["init_params", "init_cache", "init_paged_cache",
+           "init_paged_state", "forward", "prefill", "decode_step",
+           "paged_step", "paged_recurrent_step", "ragged_step", "loss_fn"]
 
 
 def _dtype(cfg: ModelConfig):
@@ -168,6 +169,64 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
              cfg.resolved_head_dim)
     return {"paged_kv": att.PagedKVCache(k=jnp.zeros(shape, kv_dt),
                                          v=jnp.zeros(shape, kv_dt))}
+
+
+def init_paged_state(cfg: ModelConfig, num_slabs: int, *,
+                     num_blocks: Optional[int] = None,
+                     block_size: Optional[int] = None) -> Any:
+    """STATE SLAB arenas for the fixed-slab recurrent substrate (DESIGN §16).
+
+    One (L, S, ...) device arena per state component, S = ``num_slabs``;
+    the host-side :class:`repro.serving.state_pool.StateSlabPool` hands out
+    one slab per live sequence.  Slab 0 is the trash slab idle batch lanes
+    read and write harmlessly (their q_len is 0, so the masked forward
+    passes the slab state through bit-exactly), so ``num_slabs`` >= 2.
+
+    With ``cfg.state_bits == 8`` the slabs hold Eq.-1 int8 codes on a
+    per-slab power-of-two grid (``exp``, fixed at admission); ``None``
+    keeps fp32 slabs — the parity-oracle mode.  The hybrid family also
+    carries the shared attention block's KV pool (L = n_groups), sized by
+    ``num_blocks`` / ``block_size`` exactly like :func:`init_paged_cache`.
+    """
+    if cfg.family not in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"the fixed-slab substrate covers recurrent families "
+            f"(ssm/hybrid); got family={cfg.family!r}")
+    if num_slabs < 2:
+        raise ValueError("state pool needs >= 2 slabs (slab 0 is the trash "
+                         "slab idle lanes read and write)")
+    dt = _dtype(cfg)
+    st_dt = jnp.int8 if cfg.state_bits == 8 else jnp.float32
+    exp = jnp.full((num_slabs,),
+                   cfg.state_frac_bits if cfg.state_bits == 8 else 0,
+                   jnp.int32)
+    if cfg.family == "ssm":
+        h = cfg.d_model // rwkv_lib.HEAD_DIM
+        hd = rwkv_lib.HEAD_DIM
+        ls = (cfg.n_layers, num_slabs)
+        return {"state": {
+            "x_att": jnp.zeros(ls + (cfg.d_model,), st_dt),
+            "x_ffn": jnp.zeros(ls + (cfg.d_model,), st_dt),
+            "wkv": jnp.zeros(ls + (h, hd, hd), st_dt)},
+            "exp": exp}
+    if num_blocks is None or block_size is None:
+        raise ValueError("hybrid slabs need num_blocks/block_size for the "
+                         "shared attention block's KV pool")
+    if num_blocks < 2:
+        raise ValueError("pool needs >= 2 blocks (block 0 is the trash "
+                         "block inactive slots write to)")
+    g = cfg.hybrid.attn_every
+    n_groups = cfg.n_layers // g
+    st = ssm_lib.zero_state(cfg, num_slabs)
+    ssm_states = jax.tree.map(
+        lambda z: jnp.broadcast_to(
+            z.astype(st_dt), (n_groups, g) + z.shape).copy(), st)
+    kv_dt = jnp.int8 if cfg.kv_cache_bits == 8 else dt
+    kv_shape = (n_groups, num_blocks, block_size, cfg.n_kv_heads,
+                cfg.resolved_head_dim)
+    return {"ssm": ssm_states, "exp": exp,
+            "paged_kv": att.PagedKVCache(k=jnp.zeros(kv_shape, kv_dt),
+                                         v=jnp.zeros(kv_shape, kv_dt))}
 
 
 # ---------------------------------------------------------------------------
@@ -452,6 +511,126 @@ def paged_step(params: dict, tokens: jax.Array, cache: Any,
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = unembed(ctx, x, head)
     return logits, {"paged_kv": kv}
+
+
+def paged_recurrent_step(params: dict, tokens: jax.Array, cache: Any,
+                         slab_ids: jax.Array, q_len: jax.Array,
+                         positions: Optional[jax.Array],
+                         block_tables: Optional[jax.Array],
+                         cfg: ModelConfig, ctx: QuantContext
+                         ) -> tuple[jax.Array, Any]:
+    """One serving step on the fixed-slab recurrent substrate (DESIGN §16).
+
+    ``tokens`` (B, C) right-padded; ``q_len`` (B,) real tokens per row
+    (prefill chunks use c_real <= C, decode rows 1, idle lanes 0 parked on
+    the trash slab); ``slab_ids`` (B,) each row's state slab.  The whole
+    gathered state is dequantized ONCE on its per-slab po2 grid
+    (``cache['exp']``), the masked forward advances every row by its own
+    q_len in one fixed shape, and the new state requantizes ONCE before
+    scattering back — so the requant count per token is independent of
+    context length (the paper's dataflow thesis on recurrent state).
+    Idle lanes pass their slab through bit-exactly (inert masking), which
+    keeps duplicate trash-slab scatters deterministic.
+
+    For the hybrid family, per-token ``positions`` (B, C) (invalid entries
+    pointed past the last real block) and ``block_tables``
+    (B, NBmax + 1, last column = trash block) drive the shared attention
+    block's KV pool exactly like :func:`paged_step`; pure recurrent
+    families ignore both.  Returns (logits fp32 (B, V) at each row's last
+    real token, new cache).
+    """
+    from repro.core.qscheme import dequant, quant
+    b, c = tokens.shape
+    if cfg.family not in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"paged_recurrent_step covers ssm/hybrid families; "
+            f"got {cfg.family!r}")
+    dt = _dtype(cfg)
+    x = constrain(embed(params["embed"], tokens, dt), ("batch", None, None))
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < q_len[:, None]
+    int8 = cfg.state_bits == 8
+    exps = cache["exp"][slab_ids]                            # (B,) int32
+
+    if cfg.family == "ssm":
+        st = cache["state"]
+
+        def load(a, out_dt):
+            g = a[:, slab_ids]                               # (L, B, ...)
+            if int8:
+                n = exps.reshape((1, b) + (1,) * (g.ndim - 2))
+                return dequant(g, n, out_dtype=out_dt)
+            return g.astype(out_dt)
+
+        states = rwkv_lib.RWKVState(
+            x_prev_att=load(st["x_att"], dt)[:, :, None, :],
+            x_prev_ffn=load(st["x_ffn"], dt)[:, :, None, :],
+            wkv=load(st["wkv"], jnp.float32))
+
+        def body(x, inp):
+            p_l, st_l = inp
+            y, st2 = tfm.rwkv_block_paged(ctx, p_l, x, cfg, st_l, valid)
+            return y, st2
+
+        x, ns = _scan(body, x, (params["blocks"], states))
+
+        def store(old, new):
+            if int8:
+                n = exps.reshape((1, b) + (1,) * (new.ndim - 2))
+                codes = quant(new, n, 8)
+            else:
+                codes = new.astype(old.dtype)
+            return old.at[:, slab_ids].set(codes)
+
+        new_cache = {"state": {
+            "x_att": store(st["x_att"], ns.x_prev_att[:, :, 0]),
+            "x_ffn": store(st["x_ffn"], ns.x_prev_ffn[:, :, 0]),
+            "wkv": store(st["wkv"], ns.wkv)},
+            "exp": cache["exp"]}
+
+    else:
+        x_embed = x
+        st = cache["ssm"]
+
+        def load_h(a, out_dt):
+            g = a[:, :, slab_ids]                            # (G, g, B, ...)
+            if int8:
+                n = exps.reshape((1, 1, b) + (1,) * (g.ndim - 3))
+                return dequant(g, n, out_dtype=out_dt)
+            return g.astype(out_dt)
+
+        states = ssm_lib.SSMState(conv=load_h(st.conv, dt),
+                                  ssm=load_h(st.ssm, jnp.float32))
+
+        def body(x_c, inp):
+            p_g, ssm_g, kv_g = inp
+            y, st2, kv2 = tfm.hybrid_group_fwd(
+                ctx, p_g, params["shared"], x_c, x_embed, cfg,
+                positions=positions, ssm_states=ssm_g, attn_cache=kv_g,
+                cache_pos=positions, block_tables=block_tables, valid=valid)
+            return y, (st2, kv2)
+
+        x, (ns, nkv) = _scan(
+            body, x, (params["blocks"]["mamba"], states, cache["paged_kv"]))
+
+        def store_h(old, new):
+            if int8:
+                n = exps.reshape((1, 1, b) + (1,) * (new.ndim - 3))
+                codes = quant(new, n, 8)
+            else:
+                codes = new.astype(old.dtype)
+            return old.at[:, :, slab_ids].set(codes)
+
+        new_cache = {"ssm": ssm_lib.SSMState(conv=store_h(st.conv, ns.conv),
+                                             ssm=store_h(st.ssm, ns.ssm)),
+                     "exp": cache["exp"], "paged_kv": nkv}
+
+    rows = jnp.arange(b)
+    last = jnp.maximum(q_len - 1, 0)
+    xe = x[rows, last][:, None, :]                           # (B, 1, d)
+    xe = rmsnorm(xe, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(ctx, xe, head)
+    return logits[:, 0], new_cache
 
 
 def ragged_step(params: dict, tokens: jax.Array, cache: Any,

@@ -160,10 +160,17 @@ def _wkv_chunked(r, k, v, w_log, u, chunk: int,
 
 
 def rwkv6_block(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
-                state: Optional[RWKVState] = None, name: str = "rwkv"
+                state: Optional[RWKVState] = None, name: str = "rwkv",
+                valid: Optional[jax.Array] = None
                 ) -> tuple[jax.Array, jax.Array, RWKVState]:
     """Returns (time_mix_out, channel_mix(fn), new_state).  The caller adds
-    residuals (pre-LN is applied by the caller, matching block assembly)."""
+    residuals (pre-LN is applied by the caller, matching block assembly).
+
+    ``valid`` (B, S) bool marks real tokens in a right-padded batch: invalid
+    positions are made inert exactly like the chunk padding inside
+    ``_wkv_chunked`` — r/k/v -> 0 (no contribution, no output) and
+    w_log -> 0 (decay 1, carried state untouched) — so a row with zero
+    valid tokens passes its wkv state through bit-exactly."""
     b, s, d = x.shape
     h = _heads(cfg)
     chunk = min(cfg.ssm.chunk if cfg.ssm else 32, s)
@@ -185,6 +192,13 @@ def rwkv6_block(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
     w_log = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) +
                               w_dd.astype(jnp.float32), -8.0, 0.5))
     w_log = w_log.reshape(b, s, h, HEAD_DIM)
+
+    if valid is not None:
+        m = valid[:, :, None, None]
+        r = jnp.where(m, r, 0)
+        k = jnp.where(m, k, 0)
+        v = jnp.where(m, v, 0)
+        w_log = jnp.where(m, w_log, 0.0)
 
     out, wkv = _wkv_chunked(
         r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),

@@ -73,10 +73,19 @@ def _split_in(cfg: ModelConfig, zxbcdt: jax.Array):
     return z, xbc, dt
 
 
-def _causal_conv_train(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
-    """Depthwise causal conv over seq: xbc (B,S,C), w (K,C)."""
+def _causal_conv_train(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                       prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over seq: xbc (B,S,C), w (K,C).
+
+    ``prev`` is the (B, K-1, C) pre-conv window carried from the previous
+    chunk (``SSMState.conv``); a zero window is exactly the classic
+    left-zero-padding, so fresh sequences are unchanged and chunked
+    prefill continues the conv stream without a boundary discontinuity."""
     k = w.shape[0]
-    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    if prev is None:
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([prev.astype(xbc.dtype), xbc], axis=1)
     out = jnp.zeros_like(xbc)
     for i in range(k):  # K=4: unrolled adds beat a conv call at this size
         out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
@@ -153,20 +162,33 @@ def _ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
 
 
 def mamba2(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
-           name: str = "ssm", init_state: Optional[SSMState] = None
+           name: str = "ssm", init_state: Optional[SSMState] = None,
+           valid: Optional[jax.Array] = None
            ) -> tuple[jax.Array, SSMState]:
-    """Full-sequence Mamba2 forward (train / prefill). Returns final state."""
+    """Full-sequence Mamba2 forward (train / prefill). Returns final state.
+
+    ``init_state`` continues a streamed sequence: its ``ssm`` seeds the
+    SSD scan and its ``conv`` window seeds the causal conv, so chunked
+    prefill matches the unchunked forward.  ``valid`` (B, S) bool masks
+    trailing padding rows for the batched paged step: a masked position's
+    dtp is zeroed, which makes it inert in the SSD recurrence (no decay:
+    exp(0)=1, and no contribution: the dt multiplier is 0), and the
+    returned conv window is gathered at each row's own valid length."""
     s, d_inner, n_heads, d_conv_in = _dims(cfg)
     b, seq, d = x.shape
     zxbcdt = linear(ctx, f"{name}/w_in", x, p["w_in"])
     z, xbc, dt = _split_in(cfg, zxbcdt)
-    xbc = jax.nn.silu(_causal_conv_train(xbc, p["conv_w"], p["conv_b"]))
+    prev = init_state.conv if init_state is not None else None
+    xbc = jax.nn.silu(
+        _causal_conv_train(xbc, p["conv_w"], p["conv_b"], prev=prev))
     xs = xbc[..., :d_inner]
     bmat = xbc[..., d_inner:d_inner + s.n_groups * s.d_state]
     cmat = xbc[..., d_inner + s.n_groups * s.d_state:]
     bmat = bmat.reshape(b, seq, s.n_groups, s.d_state).astype(jnp.float32)
     cmat = cmat.reshape(b, seq, s.n_groups, s.d_state).astype(jnp.float32)
     dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if valid is not None:
+        dtp = jnp.where(valid[..., None], dtp, 0.0)
     a = -jnp.exp(p["a_log"])
     xh = xs.reshape(b, seq, n_heads, s.head_dim).astype(jnp.float32)
 
@@ -184,7 +206,19 @@ def mamba2(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
     out = linear(ctx, f"{name}/w_out", y, p["w_out"])
     # conv state = last d_conv-1 PRE-conv inputs (for streaming continuation)
     _, xbc_raw, _ = _split_in(cfg, zxbcdt)
-    conv_tail = xbc_raw[:, -(s.d_conv - 1):, :]
+    if valid is None:
+        conv_tail = xbc_raw[:, -(s.d_conv - 1):, :]
+    else:
+        # per-row valid length: slide the window over [prev | xbc_raw] so a
+        # row that fed q real tokens ends with the window covering its last
+        # d_conv-1 REAL pre-conv rows (q=0 returns prev unchanged)
+        win = (jnp.concatenate([prev.astype(xbc_raw.dtype), xbc_raw], axis=1)
+               if prev is not None
+               else jnp.pad(xbc_raw, ((0, 0), (s.d_conv - 1, 0), (0, 0))))
+        q_len = jnp.sum(valid.astype(jnp.int32), axis=1)     # (B,)
+        idx = q_len[:, None] + jnp.arange(s.d_conv - 1,
+                                          dtype=jnp.int32)[None, :]
+        conv_tail = jnp.take_along_axis(win, idx[..., None], axis=1)
     return out, SSMState(conv=conv_tail, ssm=final)
 
 

@@ -189,6 +189,38 @@ def rwkv_block_fwd(ctx: QuantContext, p: dict, x: jax.Array, cfg: ModelConfig,
     return x, new_state
 
 
+def rwkv_block_paged(ctx: QuantContext, p: dict, x: jax.Array,
+                     cfg: ModelConfig, state: rwkv_lib.RWKVState,
+                     valid: jax.Array):
+    """Right-padded batched RWKV block for the serving engine (§16).
+
+    Every row advances by its own ``q_len = sum(valid)`` tokens in one
+    fixed-shape call: invalid positions are inert inside the chunked WKV
+    (r/k/v -> 0, log-decay -> 0), and the token-shift streams are gathered
+    per-row at the last VALID position instead of ``[:, -1:]``.  Rows with
+    ``q_len == 0`` (empty slots / trash-slab lanes) carry their state
+    through bit-exactly."""
+    b = x.shape[0]
+    att_in = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    att_out, _, st = rwkv_lib.rwkv6_block(ctx, p["rwkv"], att_in, cfg,
+                                          state=state, valid=valid)
+    x = x + att_out
+    ffn_in = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + rwkv_lib.rwkv6_channel_mix(ctx, p["rwkv"], ffn_in, cfg,
+                                       x_prev=state.x_prev_ffn)
+    q_len = jnp.sum(valid.astype(jnp.int32), axis=1)
+    last = jnp.maximum(q_len - 1, 0)
+    rows = jnp.arange(b)
+    keep = (q_len > 0)[:, None, None]
+    new_state = rwkv_lib.RWKVState(
+        x_prev_att=jnp.where(keep, att_in[rows, last][:, None],
+                             state.x_prev_att),
+        x_prev_ffn=jnp.where(keep, ffn_in[rows, last][:, None],
+                             state.x_prev_ffn),
+        wkv=st.wkv)
+    return x, new_state
+
+
 def rwkv_block_decode(ctx: QuantContext, p: dict, x: jax.Array,
                       cfg: ModelConfig, state: rwkv_lib.RWKVState):
     att_in = rmsnorm(x, p["ln1"], cfg.norm_eps)
@@ -226,10 +258,16 @@ def init_shared_attn(init: Initializer, cfg: ModelConfig) -> dict:
 def hybrid_group_fwd(ctx: QuantContext, group_p: dict, shared_p: dict,
                      x: jax.Array, x_embed: jax.Array, cfg: ModelConfig,
                      *, positions, ssm_states=None, attn_cache=None,
-                     cache_pos=None, decode: bool = False):
+                     cache_pos=None, decode: bool = False,
+                     block_tables=None, valid=None):
     """One group = ``attn_every`` stacked mamba blocks (inner scan) then the
     shared attention block.  ``group_p`` holds the stacked mamba block
-    params (leading axis = attn_every); ssm_states likewise."""
+    params (leading axis = attn_every); ssm_states likewise.
+
+    Paged serving (§16) threads ``valid`` (B, S) into the Mamba blocks
+    (invalid positions contribute nothing and do not decay the slab state)
+    and ``block_tables`` into the shared attention block, whose cache then
+    scatters through the block pool at per-token ``cache_pos``."""
 
     def inner(x_carry, inp):
         p_l, st_l = inp
@@ -238,7 +276,7 @@ def hybrid_group_fwd(ctx: QuantContext, group_p: dict, shared_p: dict,
             h, new_st = ssm_lib.mamba2_decode(ctx, p_l["ssm"], h_in, cfg, st_l)
         else:
             h, new_st = ssm_lib.mamba2(ctx, p_l["ssm"], h_in, cfg,
-                                       init_state=st_l)
+                                       init_state=st_l, valid=valid)
         return x_carry + h, new_st
 
     x, new_states = _scan(inner, x, (group_p, ssm_states))
@@ -249,7 +287,7 @@ def hybrid_group_fwd(ctx: QuantContext, group_p: dict, shared_p: dict,
     h, new_cache = att.gqa_attention(
         ctx, shared_p["attn"], rmsnorm(z, shared_p["ln1"], cfg.norm_eps),
         cfg, positions=positions, cache=attn_cache, cache_pos=cache_pos,
-        name="shared/attn")
+        block_tables=block_tables, name="shared/attn")
     z = z + h
     z = z + mlp_lib.mlp(ctx, shared_p["mlp"],
                         rmsnorm(z, shared_p["ln2"], cfg.norm_eps), cfg.act,

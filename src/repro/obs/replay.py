@@ -77,22 +77,31 @@ def _canon(v: Any) -> Any:
 def engine_settings(engine) -> dict:
     """The portable engine/scheduler configuration a replay needs to
     reconstruct an equivalent engine (and the fingerprint input)."""
-    return _canon({
+    pool = engine.pool
+    s = {
         "model": dataclasses.asdict(engine.cfg),
         "n_slots": engine.n_slots,
-        "block_size": engine.pool.block_size,
-        "num_blocks": engine.pool.num_blocks,
+        "block_size": pool.block_size if pool is not None else None,
+        "num_blocks": pool.num_blocks if pool is not None else None,
         "max_model_len": engine.max_model_len,
         "chunk": engine.sched.chunk,
         "prefill_token_budget": engine.sched.prefill_token_budget,
         "default_top_k": engine.default_top_k,
         "seed": engine.seed,
-        "prefix_cache": engine.pool.cache is not None,
+        "prefix_cache": pool is not None and pool.cache is not None,
         "spec_k": engine.spec_k,
         "drafter": type(engine.drafter).__name__,
         "ragged": engine.ragged,
         "virtual_dt": engine.virtual_dt,
-    })
+    }
+    # substrate keys ride along ONLY off the attention substrate, so
+    # every pre-§16 transformer fingerprint stays byte-identical
+    sub = getattr(engine, "substrate", None)
+    if sub is not None and sub.kind != "attention":
+        s["substrate"] = sub.kind
+        s["num_slabs"] = engine.state_pool.num_slabs
+        s["state_scale_exp"] = engine.state_pool.default_scale_exp
+    return _canon(s)
 
 
 def engine_fingerprint(engine) -> str:
@@ -191,6 +200,7 @@ def capture_workload(engine, requests) -> WorkloadRecord:
             "n_decisions": len(sink),
             "decode_steps": engine.decode_steps,
             "ragged_steps": engine.ragged_steps,
+            "recurrent_steps": engine.recurrent_steps,
             "prefill_chunks": engine.prefill_chunks,
             "wall_s_virtual": engine._wall_s,
         }))

@@ -31,7 +31,8 @@ DYNAMIC_KEYS = ("step_shapes", "profile", "slo.status")
 
 # prefix -> engine feature that must be on for the section to register
 SECTION_FLAGS = {"speculative.": "spec", "prefix_cache.": "cache",
-                 "profile": "profile", "slo.": "slo"}
+                 "profile": "profile", "slo.": "slo",
+                 "pool.": "kv", "state_pool.": "slab"}
 
 GOLDEN_SCHEMA = {
     "n_requests": {"kind": "counter", "type": "int"},
@@ -46,6 +47,8 @@ GOLDEN_SCHEMA = {
     "prefill_chunks": {"kind": "counter", "type": "int"},
     "ragged": {"kind": "gauge", "type": "bool"},
     "ragged_steps": {"kind": "counter", "type": "int"},
+    "substrate": {"kind": "gauge", "type": "str"},
+    "recurrent_steps": {"kind": "counter", "type": "int"},
     "dispatched_tokens": {"kind": "counter", "type": "int"},
     "padded_tokens": {"kind": "counter", "type": "int"},
     "padding_frac": {"kind": "gauge", "type": "float", "optional": True},
@@ -96,6 +99,18 @@ GOLDEN_SCHEMA = {
     "pool.retracts": {"kind": "counter", "type": "int"},
     "pool.retracted_blocks": {"kind": "counter", "type": "int"},
     "pool.alloc_failures": {"kind": "counter", "type": "int"},
+    "state_pool.num_slabs": {"kind": "gauge", "type": "int"},
+    "state_pool.scale_exp": {"kind": "gauge", "type": "int"},
+    "state_pool.state_quant_ops_per_step": {"kind": "gauge", "type": "int"},
+    "state_pool.requant_ops_state": {"kind": "counter", "type": "int"},
+    "state_pool.state_ops_per_token":
+        {"kind": "gauge", "type": "float", "optional": True},
+    "state_pool.peak_live_slabs": {"kind": "gauge", "type": "int"},
+    "state_pool.utilization": {"kind": "gauge", "type": "float"},
+    "state_pool.allocs": {"kind": "counter", "type": "int"},
+    "state_pool.frees": {"kind": "counter", "type": "int"},
+    "state_pool.seq_evictions": {"kind": "counter", "type": "int"},
+    "state_pool.alloc_failures": {"kind": "counter", "type": "int"},
     "prefix_cache.hits": {"kind": "counter", "type": "int"},
     "prefix_cache.misses": {"kind": "counter", "type": "int"},
     "prefix_cache.hit_rate": {"kind": "gauge", "type": "float"},
@@ -114,6 +129,8 @@ GOLDEN_SCHEMA = {
         {"kind": "counter", "type": "int"},
     "hwcost.requant_ops_wasted_speculation":
         {"kind": "counter", "type": "int"},
+    "hwcost.requant_ops_per_token":
+        {"kind": "gauge", "type": "float", "optional": True},
     "hwcost.energy_uj_bit_shift":
         {"kind": "gauge", "type": "float", "unit": "uJ"},
     "hwcost.energy_uj_if_requant_per_step":
@@ -219,13 +236,17 @@ def _section_on(name: str, features: dict) -> bool:
 
 def diff_schema(got: dict, golden: dict = None, *,
                 spec: bool = True, cache: bool = True,
-                profile: bool = False, slo: bool = False) -> list[str]:
+                profile: bool = False, slo: bool = False,
+                kv: bool = True, slab: bool = False) -> list[str]:
     """Human-readable differences between an engine's projected schema
     and the golden one, respecting which conditional sections the
-    engine's feature flags enable.  Empty list == schema-clean."""
+    engine's feature flags enable.  Empty list == schema-clean.
+    ``kv``/``slab`` mirror the substrate (DESIGN §16): ``pool.*`` exists
+    on the growing substrates (attention/hybrid), ``state_pool.*`` on the
+    fixed-state ones (recurrent/hybrid)."""
     golden = GOLDEN_SCHEMA if golden is None else golden
     feats = {"spec": spec, "cache": cache, "profile": profile,
-             "slo": slo}
+             "slo": slo, "kv": kv, "slab": slab}
     errs = []
     for name, want in golden.items():
         if not _section_on(name, feats):

@@ -25,13 +25,28 @@ Three layers (DESIGN §9):
   engine verifies K drafts in one (n_slots, K+1) paged step, commits
   only accepted tokens and retracts the rejected tail's blocks, so a
   rejected speculative row can never publish to the prefix cache.
+* :mod:`repro.serving.arena` / :mod:`repro.serving.state_pool` /
+  :mod:`repro.serving.substrate` — the substrate split (DESIGN §16):
+  a shared fixed-capacity :class:`Arena` core underneath BOTH sequence
+  substrates — the growing attention block tables above, and the
+  fixed-size recurrent state slabs (:class:`StateSlabPool`) that serve
+  RWKV6 / Mamba2 state, one quantized whole-state slab per sequence,
+  re-quantized once per engine step.  ``substrate_for(cfg)`` is the
+  single routing decision the pool, scheduler, and engine all consult.
 """
+from repro.serving.arena import Arena, PoolStats
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_pool import BlockPool, BlockPoolError
+from repro.serving.kv_pool import TRASH_BLOCK, BlockPool, BlockPoolError
 from repro.serving.prefix_cache import CacheStats, PrefixCache
 from repro.serving.scheduler import Request, RequestState, Scheduler
 from repro.serving.spec import CallableDrafter, NgramDrafter
+from repro.serving.state_pool import TRASH_SLAB, StateSlabPool
+from repro.serving.substrate import (ATTENTION, HYBRID, RECURRENT,
+                                     SubstrateSpec, substrate_for)
 
 __all__ = ["ServingEngine", "BlockPool", "BlockPoolError", "CacheStats",
            "PrefixCache", "Request", "RequestState", "Scheduler",
-           "CallableDrafter", "NgramDrafter"]
+           "CallableDrafter", "NgramDrafter", "Arena", "PoolStats",
+           "StateSlabPool", "SubstrateSpec", "substrate_for",
+           "ATTENTION", "RECURRENT", "HYBRID", "TRASH_BLOCK",
+           "TRASH_SLAB"]

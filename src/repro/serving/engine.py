@@ -53,10 +53,12 @@ from repro.obs.metrics import MetricsRegistry
 from repro.obs.profile import EnergyAccount, Profiler
 from repro.obs.slo import SLOMonitor, default_slos
 from repro.obs.trace import Tracer
-from repro.serving.kv_pool import TRASH_BLOCK, BlockPool
+from repro.serving.kv_pool import TRASH_BLOCK, BlockPool, BlockPoolError
 from repro.serving.scheduler import (Request, RequestState, Scheduler,
                                      chunk_bucket)
 from repro.serving.spec import apply_top_k, resolve_drafter, verify_tokens
+from repro.serving.state_pool import TRASH_SLAB, StateSlabPool
+from repro.serving.substrate import substrate_for
 
 __all__ = ["ServingEngine", "sample_tokens", "summarize_step_times"]
 
@@ -122,6 +124,10 @@ def summarize_step_times(step_times: dict) -> dict:
                  "p99_s": round(p99, 4) if p99 is not None else None}
         if isinstance(shape, tuple) and shape and shape[0] == "ragged":
             shapes[f"ragged_{shape[1]}xS{shape[2]}"] = entry
+        elif isinstance(shape, tuple) and shape and shape[0] == "recurrent":
+            # fixed-shape recurrent dispatch (DESIGN §16): one executable
+            # per (n_slots, chunk), named at the top level like ragged
+            shapes[f"recurrent_{shape[1]}xC{shape[2]}"] = entry
         elif isinstance(shape, tuple):
             legacy["x".join(map(str, shape))] = entry
         else:
@@ -139,8 +145,9 @@ class ServingEngine:
                  max_model_len: int = 128,
                  num_blocks: Optional[int] = None, chunk: int = 16,
                  prefill_token_budget: Optional[int] = None,
+                 num_slabs: Optional[int] = None,
                  top_k: int = 0, mesh=None, seed: int = 0,
-                 prefix_cache: bool = True, spec_k: int = 0,
+                 prefix_cache: Optional[bool] = None, spec_k: int = 0,
                  drafter="ngram", ragged: bool = True,
                  trace: bool = False, trace_capacity: int = 65536,
                  profile_dir: Optional[str] = None,
@@ -157,27 +164,71 @@ class ServingEngine:
         self.ctx = ctx
         self.n_slots = n_slots
         self.max_model_len = max_model_len
+        # substrate routing (DESIGN §16): the config's layer mix decides
+        # which pools back this engine's sequences.  Attention sequences
+        # grow block tables from the BlockPool; recurrent (RWKV6 / Mamba2)
+        # sequences keep ONE fixed-size quantized state slab from the
+        # StateSlabPool; a hybrid (zamba2) holds both at once.
+        self.substrate = sub = substrate_for(cfg)
+        if spec_k > 0 and not sub.supports_spec:
+            raise ValueError(
+                f"spec_k={spec_k} is unsupported on the {sub.kind} "
+                "substrate: speculative decoding must retract rejected "
+                "draft tokens, but fixed-size recurrent state cannot be "
+                "rolled back (use spec_k=0 for recurrent/hybrid models)")
+        if prefix_cache and not sub.supports_prefix_cache:
+            raise ValueError(
+                f"prefix_cache=True is unsupported on the {sub.kind} "
+                "substrate: recurrent state is a running summary, not an "
+                "addressable token range, so there is no prefix to share "
+                "(leave prefix_cache unset for auto, or pass False)")
+        if prefix_cache is None:
+            prefix_cache = sub.supports_prefix_cache
+        ragged = ragged and sub.supports_ragged
         nbmax = -(-max_model_len // block_size)
-        if num_blocks is None:
-            # full residency: every slot can reach max_model_len (+ trash).
-            # Callers undersize this deliberately to exercise preemption.
-            num_blocks = 1 + n_slots * nbmax
-        scale_exp = cfg.kv_cache_frac_bits if cfg.kv_cache_bits == 8 else 0
-        self.pool = BlockPool(num_blocks, block_size, scale_exp=scale_exp,
-                              prefix_cache=prefix_cache)
+        if sub.grows:
+            if num_blocks is None:
+                # full residency: every slot can reach max_model_len
+                # (+ trash).  Callers undersize this deliberately to
+                # exercise preemption.
+                num_blocks = 1 + n_slots * nbmax
+            scale_exp = cfg.kv_cache_frac_bits if cfg.kv_cache_bits == 8 \
+                else 0
+            self.pool: Optional[BlockPool] = BlockPool(
+                num_blocks, block_size, scale_exp=scale_exp,
+                prefix_cache=prefix_cache)
+        else:
+            self.pool = None
+        if sub.fixed_state:
+            if num_slabs is None:
+                num_slabs = 1 + n_slots      # one per slot + trash
+            st_exp = cfg.state_frac_bits if cfg.state_bits == 8 else 0
+            self.state_pool: Optional[StateSlabPool] = StateSlabPool(
+                num_slabs, scale_exp=st_exp)
+        else:
+            self.state_pool = None
         self.sched = Scheduler(self.pool, n_slots=n_slots, chunk=chunk,
                                max_model_len=max_model_len,
-                               prefill_token_budget=prefill_token_budget)
+                               prefill_token_budget=prefill_token_budget,
+                               state_pool=self.state_pool, substrate=sub)
         # observability (DESIGN §14): one tracer threaded through every
         # serving-path module.  Ring events are off unless ``trace=True``;
         # per-request timelines (a few floats each) are always on — they
         # are the source of the report's trace-derived latency section.
         self.tracer = Tracer(capacity=trace_capacity, clock=self._now,
                              enabled=trace)
-        self.pool.tracer = self.tracer
+        if self.pool is not None:
+            self.pool.tracer = self.tracer
+            if self.pool.cache is not None:
+                self.pool.cache.tracer = self.tracer
+        if self.state_pool is not None:
+            self.state_pool.tracer = self.tracer
         self.sched.tracer = self.tracer
-        if self.pool.cache is not None:
-            self.pool.cache.tracer = self.tracer
+        if sub.snapshot_preempt:
+            # pure-recurrent preemption snapshots the sequence's whole
+            # state slab to the host (no token range to recompute from the
+            # pool) — the scheduler calls this hook, admit restores it
+            self.sched.snapshot_fn = self._snapshot_slab
         # flight recorder (DESIGN §15): record mode switches run() onto a
         # deterministic VIRTUAL clock (virtual_dt seconds per step, idle
         # gaps jump to the next arrival) and tees the scheduler-decision
@@ -206,7 +257,14 @@ class ServingEngine:
         # live Table-5 energy proxy, split prefill / decode / spec_wasted;
         # reconciles exactly with the requant counters below (tested)
         self.energy = EnergyAccount("bit_shifting")
-        self.cache = M.init_paged_cache(cfg, num_blocks, block_size)
+        if sub.kind == "attention":
+            self.cache = M.init_paged_cache(cfg, num_blocks, block_size)
+        elif sub.kind == "recurrent":
+            self.cache = M.init_paged_state(cfg, self.state_pool.num_slabs)
+        else:                                # hybrid: slabs + block tables
+            self.cache = M.init_paged_state(cfg, self.state_pool.num_slabs,
+                                            num_blocks=num_blocks,
+                                            block_size=block_size)
         # sampling is FUSED into the jitted step: one dispatch + one host
         # sync per engine step, and only the (B,) sampled tokens ever leave
         # the device — logits never cross to the host.  The rng key derives
@@ -217,71 +275,106 @@ class ServingEngine:
         self.spec_k = spec_k
         self.drafter = resolve_drafter(drafter)
         self.ragged = ragged
-        base_step = S.build_paged_step(cfg, ctx, mesh=mesh)
         self.seed = seed
         base_key = jax.random.PRNGKey(seed)
-
-        def sampled_step(params, tokens, cache, positions, bt, temps, topks,
-                         last_idx, step_idx, k_cap):
-            logits, cache = base_step(params, tokens, cache, positions, bt)
-            row = jax.lax.dynamic_index_in_dim(logits, last_idx, axis=1,
-                                               keepdims=False)     # (B, V)
-            key = jax.random.fold_in(base_key, step_idx)
-            return sample_tokens(row, key, temps, topks, k_cap=k_cap), cache
-
-        # donate the pool: the per-token scatter then updates the arena in
-        # place — without donation XLA copies the whole multi-MB pool
-        # every step, which is exactly the write-amplification the paged
-        # design exists to avoid.  k_cap is static (the host-known max
-        # top-k of the batch): one extra executable per distinct cap, and
-        # the sampler's cutoff stays an O(V log k) partial sort.
-        self._step_fn = jax.jit(sampled_step, donate_argnums=(2,),
-                                static_argnums=(9,))
-
-        # speculative verify step (DESIGN §11): score the (B, K+1) chunk
-        # and resolve draft acceptance in ONE dispatch — rejection
-        # sampling is fused into the jit, and only (out tokens, accepted
-        # counts) ever cross to the host
-        def spec_verify_step(params, tokens, cache, positions, bt, temps,
-                             topks, n_drafts, step_idx, k_cap):
-            logits, cache = base_step(params, tokens, cache, positions, bt)
-            key = jax.random.fold_in(base_key, step_idx)
-            out, n_acc = verify_tokens(logits, tokens, n_drafts, key,
-                                       temps, topks, k_cap=k_cap)
-            return out, n_acc, cache
-
-        self._spec_fn = jax.jit(spec_verify_step, donate_argnums=(2,),
-                                static_argnums=(9,))
-
-        # UNIFIED ragged step (DESIGN §12): the whole mixed work-list —
-        # prefill chunks, decode rows, speculative tails — flattened to
-        # one (T,) stream with per-sequence descriptors, served by ONE
-        # dispatch.  Sampling and draft verification share one fused
-        # sampler: every sequence gathers K+1 logit rows starting at its
-        # ``sample_start`` and runs Leviathan/Chen verification — a
-        # prefill/decode row rides with n_drafts=0, which reduces
-        # verify_tokens to plain sampling of row 0, so one executable
-        # covers every traffic class.
-        base_ragged = S.build_ragged_step(cfg, ctx, mesh=mesh)
         kp1 = spec_k + 1
+        self._step_fn = self._spec_fn = self._ragged_fn = None
+        self._rec_fn = None
+        if sub.kind == "attention":
+            base_step = S.build_paged_step(cfg, ctx, mesh=mesh)
 
-        def ragged_sampled_step(params, tokens, cache, positions, rb, temps,
-                                topks, sample_start, n_drafts, step_idx,
-                                k_cap):
-            logits, cache = base_ragged(params, tokens, cache, positions, rb)
-            t = logits.shape[0]
-            idx = jnp.clip(sample_start[:, None]
-                           + jnp.arange(kp1, dtype=jnp.int32)[None, :],
-                           0, t - 1)
-            rows = jnp.take(logits, idx, axis=0)        # (S, K+1, V)
-            toks = jnp.take(tokens, idx, axis=0)        # (S, K+1)
-            key = jax.random.fold_in(base_key, step_idx)
-            out, n_acc = verify_tokens(rows, toks, n_drafts, key, temps,
-                                       topks, k_cap=k_cap)
-            return out, n_acc, cache
+            def sampled_step(params, tokens, cache, positions, bt, temps,
+                             topks, last_idx, step_idx, k_cap):
+                logits, cache = base_step(params, tokens, cache, positions,
+                                          bt)
+                row = jax.lax.dynamic_index_in_dim(logits, last_idx, axis=1,
+                                                   keepdims=False)  # (B, V)
+                key = jax.random.fold_in(base_key, step_idx)
+                return sample_tokens(row, key, temps, topks,
+                                     k_cap=k_cap), cache
 
-        self._ragged_fn = jax.jit(ragged_sampled_step, donate_argnums=(2,),
-                                  static_argnums=(10,))
+            # donate the pool: the per-token scatter then updates the
+            # arena in place — without donation XLA copies the whole
+            # multi-MB pool every step, which is exactly the
+            # write-amplification the paged design exists to avoid.
+            # k_cap is static (the host-known max top-k of the batch):
+            # one extra executable per distinct cap, and the sampler's
+            # cutoff stays an O(V log k) partial sort.
+            self._step_fn = jax.jit(sampled_step, donate_argnums=(2,),
+                                    static_argnums=(9,))
+
+            # speculative verify step (DESIGN §11): score the (B, K+1)
+            # chunk and resolve draft acceptance in ONE dispatch —
+            # rejection sampling is fused into the jit, and only
+            # (out tokens, accepted counts) ever cross to the host
+            def spec_verify_step(params, tokens, cache, positions, bt,
+                                 temps, topks, n_drafts, step_idx, k_cap):
+                logits, cache = base_step(params, tokens, cache, positions,
+                                          bt)
+                key = jax.random.fold_in(base_key, step_idx)
+                out, n_acc = verify_tokens(logits, tokens, n_drafts, key,
+                                           temps, topks, k_cap=k_cap)
+                return out, n_acc, cache
+
+            self._spec_fn = jax.jit(spec_verify_step, donate_argnums=(2,),
+                                    static_argnums=(9,))
+
+            # UNIFIED ragged step (DESIGN §12): the whole mixed work-list
+            # — prefill chunks, decode rows, speculative tails —
+            # flattened to one (T,) stream with per-sequence descriptors,
+            # served by ONE dispatch.  Sampling and draft verification
+            # share one fused sampler: every sequence gathers K+1 logit
+            # rows starting at its ``sample_start`` and runs
+            # Leviathan/Chen verification — a prefill/decode row rides
+            # with n_drafts=0, which reduces verify_tokens to plain
+            # sampling of row 0, so one executable covers every traffic
+            # class.
+            base_ragged = S.build_ragged_step(cfg, ctx, mesh=mesh)
+
+            def ragged_sampled_step(params, tokens, cache, positions, rb,
+                                    temps, topks, sample_start, n_drafts,
+                                    step_idx, k_cap):
+                logits, cache = base_ragged(params, tokens, cache,
+                                            positions, rb)
+                t = logits.shape[0]
+                idx = jnp.clip(sample_start[:, None]
+                               + jnp.arange(kp1, dtype=jnp.int32)[None, :],
+                               0, t - 1)
+                rows = jnp.take(logits, idx, axis=0)    # (S, K+1, V)
+                toks = jnp.take(tokens, idx, axis=0)    # (S, K+1)
+                key = jax.random.fold_in(base_key, step_idx)
+                out, n_acc = verify_tokens(rows, toks, n_drafts, key,
+                                           temps, topks, k_cap=k_cap)
+                return out, n_acc, cache
+
+            self._ragged_fn = jax.jit(ragged_sampled_step,
+                                      donate_argnums=(2,),
+                                      static_argnums=(10,))
+        else:
+            # batched recurrent step (DESIGN §16): ONE fixed-shape
+            # executable per (n_slots, chunk) serves the whole mixed
+            # work-list — prefill chunks feed q_len=c tokens, decode rows
+            # q_len=1, idle lanes q_len=0 against the trash slab — so the
+            # recurrent substrate needs no ragged flattening at all.  The
+            # step gathers each row's slab, dequantizes to the compute
+            # dtype, runs every layer, and re-quantizes the WHOLE state
+            # back to its slab exactly once (the context-free requant the
+            # report's ops/token gauge quantifies).  Sampling is fused
+            # like the attention paths; logits are already (B, V).
+            base_rec = S.build_recurrent_step(cfg, ctx, mesh=mesh)
+
+            def recurrent_sampled_step(params, tokens, cache, slab_ids,
+                                       q_len, positions, bt, temps, topks,
+                                       step_idx, k_cap):
+                logits, cache = base_rec(params, tokens, cache, slab_ids,
+                                         q_len, positions, bt)
+                key = jax.random.fold_in(base_key, step_idx)
+                return sample_tokens(logits, key, temps, topks,
+                                     k_cap=k_cap), cache
+
+            self._rec_fn = jax.jit(recurrent_sampled_step,
+                                   donate_argnums=(2,),
+                                   static_argnums=(10,))
         # padded-stream buckets: pow2 from 8 up to the step's worst case
         # (full prefill budget + every slot verifying a K-token tail), so
         # jit sees O(log) distinct ragged executables
@@ -301,9 +394,28 @@ class ServingEngine:
         # engine-level default top-k, applied to requests that don't set
         # their own (Request.top_k > 0 wins per slot)
         self.default_top_k = top_k
-        # one requant op per KV element (paper's unit of Table 5)
-        self._elems_per_token = (cfg.n_layers * cfg.n_kv_heads
+        # one requant op per KV element (paper's unit of Table 5).  Only
+        # layers that WRITE per-token KV count: every layer on attention,
+        # the shared attention blocks (one per attn_every stride) on
+        # hybrid, none on pure recurrent.
+        if sub.kind == "hybrid":
+            n_kv_layers = cfg.n_layers // cfg.hybrid.attn_every
+        elif sub.kind == "recurrent":
+            n_kv_layers = 0
+        else:
+            n_kv_layers = cfg.n_layers
+        self._elems_per_token = (n_kv_layers * cfg.n_kv_heads
                                  * cfg.resolved_head_dim * 2)
+        # fixed-slab counterpart: ops to requantize one sequence's WHOLE
+        # recurrent state, paid once per step regardless of context
+        # (DESIGN §16) — 'performed' when slabs are int8, the
+        # counterfactual 'avoided' bucket when they stay fp32
+        self._state_elems_per_step = hwcost.state_quant_ops_per_step(cfg) \
+            if sub.fixed_state else 0
+        # running total of the state ops above — kept SEPARATE from the
+        # merged performed/avoided buckets so a hybrid run can report the
+        # recurrent substrate's share of the per-token gauge on its own
+        self.requant_ops_state = 0
         self.requant_ops_performed = 0
         self.requant_ops_avoided = 0
         # quant ops the PREFIX CACHE deleted outright: cached-prefix tokens
@@ -334,6 +446,7 @@ class ServingEngine:
         self.spec_accepted = 0
         self.spec_emitted = 0
         self.ragged_steps = 0
+        self.recurrent_steps = 0
         # padding honesty (satellite): every dispatched token that carried
         # no real work — pow2 bucket rounding, empty decode slots, unused
         # draft columns — counted at dispatch time on BOTH paths
@@ -385,19 +498,25 @@ class ServingEngine:
         pass starts cold — inter-pass hits would make pass N incomparable
         to pass 1; pass ``flush_cache=False`` to measure the warm-cache
         steady state (e.g. after priming a shared system prompt)."""
-        assert self.sched.idle and self.pool.n_live == 0, \
+        assert self.sched.idle \
+            and (self.pool is None or self.pool.n_live == 0) \
+            and (self.state_pool is None or self.state_pool.n_live == 0), \
             "reset_metrics on a non-drained engine"
         from repro.serving.kv_pool import PoolStats
         from repro.serving.prefix_cache import CacheStats
         self._step_counter = 0
         self.sched.done.clear()
         self.sched.admission_log.clear()
-        if flush_cache:
-            self.pool.flush_cache()
-        self.pool.reset_free_order()
-        self.pool.stats = PoolStats()
-        if self.pool.cache is not None:
-            self.pool.cache.stats = CacheStats()
+        if self.pool is not None:
+            if flush_cache:
+                self.pool.flush_cache()
+            self.pool.reset_free_order()
+            self.pool.stats = PoolStats()
+            if self.pool.cache is not None:
+                self.pool.cache.stats = CacheStats()
+        if self.state_pool is not None:
+            self.state_pool.reset_free_order()
+            self.state_pool.stats = PoolStats()
         self.requant_ops_performed = 0
         self.requant_ops_avoided = 0
         self.requant_ops_avoided_cache = 0
@@ -414,6 +533,7 @@ class ServingEngine:
         self.spec_accepted = 0
         self.spec_emitted = 0
         self.ragged_steps = 0
+        self.recurrent_steps = 0
         self.dispatched_tokens = 0
         self.padded_tokens = 0
         self._step_times.clear()
@@ -476,6 +596,17 @@ class ServingEngine:
         drafting is on and produced drafts, the plain (B, 1) decode
         otherwise)."""
         for req in self.sched.admit(self._now()):
+            if self.substrate.fixed_state:
+                if req.snapshot is not None:
+                    # preemption snapshot resume: the saved state codes
+                    # drop back into the fresh slab — these tokens were
+                    # PAID for before eviction, not prefix-cache hits
+                    self._restore_snapshot(req)
+                else:
+                    # slabs are recycled LIFO: a fresh sequence must not
+                    # inherit the previous owner's final state
+                    self._reset_slab(req)
+                continue
             # cached-prefix hit: those tokens' KV is already resident, so
             # their quantization ops simply never happen for this request
             self.cache_hit_prefill_tokens += req.n_prefilled
@@ -485,7 +616,9 @@ class ServingEngine:
             # tokens — none of their matmul-boundary quant ops ever run
             self.requant_ops_forward_avoided_cache += \
                 req.n_prefilled * self._fwd_elems_per_token
-        if self.ragged:
+        if self.substrate.fixed_state:
+            self._run_recurrent_step()
+        elif self.ragged:
             self._run_ragged_step()
         else:
             self._run_prefills()
@@ -1053,6 +1186,234 @@ class ServingEngine:
             self.requant_ops_avoided += req.n_ctx * self._elems_per_token
         return True
 
+    # -- fixed-slab recurrent step (DESIGN §16) ---------------------------
+
+    def _snapshot_slab(self, req: Request) -> dict:
+        """Scheduler preemption hook (pure-recurrent substrate): copy the
+        sequence's whole state slab to the host.  O(state) bytes instead
+        of the attention substrate's recompute-the-prefix, because the
+        slab IS the entire sequence state.  Codes are copied as codes
+        (int8 mode) or raw fp32, so the resume is bit-exact."""
+        slab = self.state_pool.slab_of(req.rid)
+        state = {k: np.asarray(v[:, slab])
+                 for k, v in self.cache["state"].items()}
+        return {"n_ctx": req.n_ctx, "state": state}
+
+    def _restore_snapshot(self, req: Request) -> None:
+        """Drop a preemption snapshot back into the freshly allocated
+        slab.  Admission already resumed the token bookkeeping from
+        ``snapshot['n_ctx']``; the slab's scale exponent is the engine's
+        fixed per-run grid, so the codes reinterpret identically."""
+        slab = self.state_pool.slab_of(req.rid)
+        st = self.cache["state"]
+        for k, v in req.snapshot["state"].items():
+            st[k] = st[k].at[:, slab].set(jnp.asarray(v))
+        req.snapshot = None
+
+    def _reset_slab(self, req: Request) -> None:
+        """Zero a freshly allocated slab.  Slabs recycle LIFO off the free
+        stack still holding their previous owner's FINAL state — a new
+        sequence must integrate from zero (the stale-state bug shows up
+        as token divergence only several tokens in, after the decay has
+        had time to amplify the inherited state's contribution)."""
+        slab = self.state_pool.slab_of(req.rid)
+        if "state" in self.cache:               # pure recurrent
+            st = self.cache["state"]
+            for k, v in st.items():
+                st[k] = v.at[:, slab].set(0)
+        else:                                   # hybrid Mamba slabs
+            self.cache["ssm"] = jax.tree.map(
+                lambda a: a.at[:, :, slab].set(0), self.cache["ssm"])
+
+    def _charge_recurrent(self, phase: str, n_tok: int,
+                          int8_state: bool) -> None:
+        """Table-5 accounting for one sequence's share of a recurrent
+        step: ``n_tok`` per-token KV appends (the hybrid's shared
+        attention blocks; zero on pure recurrent) plus ONE whole-slab
+        state requant — context-free, the §16 headline.  int8 slabs
+        PERFORM the state ops; fp32 slabs book the identical count as
+        the dequantize-per-step counterfactual ``avoided``, so the
+        ops/token gauge compares across storage modes."""
+        kv = n_tok * self._elems_per_token
+        st = self._state_elems_per_step
+        fwd = n_tok * self._fwd_elems_per_token
+        self.requant_ops_state += st
+        if int8_state:
+            self.requant_ops_performed += kv + st
+            self.energy.charge(phase, kv + st + fwd, n_tok)
+        else:
+            self.requant_ops_performed += kv
+            self.requant_ops_avoided += st
+            self.energy.charge(phase, kv + fwd, n_tok)
+        self.requant_ops_forward += fwd
+
+    def _run_recurrent_step(self) -> None:
+        """Serve the whole mixed work-list in ONE fixed-shape dispatch
+        (n_slots, chunk): prefill rows feed their next chunk (q_len = c),
+        decode rows feed their last sampled token (q_len = 1), idle lanes
+        ride along inert (q_len = 0 against the trash slab).  There is no
+        ragged flattening and no per-shape phase trio — the recurrent
+        batch is already shape-stable, so jit sees exactly one
+        executable.  On the hybrid substrate the same dispatch carries
+        per-row positions and block tables: Mamba layers consume the
+        slabs while the shared attention blocks scatter/gather the paged
+        KV pool, in the same jitted step."""
+        sub = self.substrate
+        now = self._now()
+        if sub.grows:
+            # hybrid KV half: decode rows append one KV row per step, so
+            # block tables may need to grow — growth can preempt a peer,
+            # exactly like the attention decode path
+            for req in list(self.sched.decode_reqs()):
+                if req.slot is not None \
+                        and req.state is RequestState.DECODE:
+                    self.sched.grow_for_decode(req, now)
+        prefills = []
+        for req in self.sched.prefill_jobs():
+            start = req.n_prefilled
+            c_real = min(self.sched.chunk, len(req.feed) - start)
+            prefills.append((req, start, c_real))
+        decodes = self.sched.decode_reqs()
+        if not prefills and not decodes:
+            return
+        b, c = self.n_slots, self.sched.chunk
+        tokens = np.zeros((b, c), np.int32)
+        q_len = np.zeros((b,), np.int32)
+        slab_ids = np.full((b,), TRASH_SLAB, np.int32)   # idle lanes
+        temps = np.zeros((b,), np.float32)
+        topks = np.zeros((b,), np.int32)
+        if sub.grows:
+            # one guaranteed-TRASH table column past nbmax: idle/padded
+            # positions point there, so their KV scatter lands in the
+            # trash block even for a full-length sequence
+            width = self.sched.nbmax + 1
+            pad_pos = self.sched.nbmax * self.pool.block_size
+            positions = np.full((b, c), pad_pos, np.int32)
+            bt = np.full((b, width), TRASH_BLOCK, np.int32)
+        else:
+            positions = bt = None
+        for req, start, c_real in prefills:
+            s = req.slot
+            tokens[s, :c_real] = req.feed[start:start + c_real]
+            q_len[s] = c_real
+            slab_ids[s] = self.state_pool.slab_of(req.rid)
+            temps[s] = req.temperature
+            topks[s] = self._req_top_k(req)
+            if sub.grows:
+                positions[s, :c_real] = start + np.arange(c_real,
+                                                          dtype=np.int32)
+                bt[s, :self.sched.nbmax] = self.pool.table_row(
+                    req.rid, self.sched.nbmax)
+        for req in decodes:
+            s = req.slot
+            tokens[s, 0] = req.generated[-1]
+            q_len[s] = 1
+            slab_ids[s] = self.state_pool.slab_of(req.rid)
+            temps[s] = req.temperature
+            topks[s] = self._req_top_k(req)
+            if sub.grows:
+                positions[s, 0] = req.n_ctx
+                bt[s, :self.sched.nbmax] = self.pool.table_row(
+                    req.rid, self.sched.nbmax)
+        n_real = int(q_len.sum())
+        toks = self._dispatch_recurrent(tokens, slab_ids, q_len,
+                                        positions, bt, temps, topks,
+                                        n_real)
+        self.recurrent_steps += 1
+        self.dispatched_tokens += b * c
+        self.padded_tokens += b * c - n_real
+        int8_state = self.cfg.state_bits == 8
+        now = self._now()
+        tr = self.tracer
+
+        # -- post-process: prefill rows (mirrors _prefill_chunk) ----------
+        for req, start, c_real in prefills:
+            req.n_prefilled += c_real
+            req.n_ctx = req.n_prefilled
+            if sub.grows:
+                self.pool.commit(req.rid, start,
+                                 req.feed[start:start + c_real])
+            self.prefill_chunks += 1
+            self._charge_recurrent("prefill", c_real, int8_state)
+            if tr.enabled:
+                # chunk boundary: part of the scheduler-decision stream
+                # the flight recorder diffs between runs (DESIGN §15)
+                tr.event("sched.prefill_chunk", "sched", ts=now, args={
+                    "rid": req.rid, "start": start, "tokens": c_real})
+            tr.req_mark(req.rid, "first_chunk", now)
+            if req.n_prefilled == len(req.feed):
+                tok = int(toks[req.slot])
+                if req.t_first is None:
+                    req.t_first = now
+                tr.req_mark(req.rid, "first_token", now)
+                tr.req_token(req.rid, now)
+                done = req.finished_by(tok, self.max_model_len)
+                req.generated.append(tok)
+                if done:
+                    self.sched.finish(req, now)
+                else:
+                    req.state = RequestState.DECODE
+
+        # -- post-process: decode rows (mirrors _run_decode) --------------
+        for req in decodes:
+            if sub.grows:
+                self.pool.commit(req.rid, req.n_ctx, [req.generated[-1]])
+            req.n_ctx += 1
+            if sub.grows:
+                # the hybrid's KV half still avoids the dequantize-the-
+                # whole-cache-per-step counterfactual, same as attention
+                self.requant_ops_avoided += \
+                    req.n_ctx * self._elems_per_token
+            self._charge_recurrent("decode", 1, int8_state)
+            tok = int(toks[req.slot])
+            done = req.finished_by(tok, self.max_model_len)
+            req.generated.append(tok)
+            tr.req_token(req.rid, now)
+            if done:
+                self.sched.finish(req, now)
+
+    def _dispatch_recurrent(self, tokens, slab_ids, q_len, positions, bt,
+                            temps, topks, n_real):
+        """Recurrent counterpart of ``_dispatch``: same step counter,
+        top-k fast path, timing and host sync, but the descriptor set is
+        (slab_ids, q_len) plus the hybrid's (positions, block tables) —
+        ``None`` on the pure-recurrent substrate, where jit simply sees
+        an empty pytree leaf."""
+        t_start = self._now()
+        t0 = time.perf_counter()
+        self._step_counter += 1
+        topks = np.asarray(topks)
+        cap = int(topks.max()) if topks.any() else None
+        topks_arg = jnp.asarray(topks) if topks.any() else None
+        shape_key = ("recurrent",) + tuple(tokens.shape)
+        first_call = shape_key not in self._step_times
+        args = (self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(slab_ids), jnp.asarray(q_len),
+                None if positions is None else jnp.asarray(positions),
+                None if bt is None else jnp.asarray(bt),
+                jnp.asarray(temps), topks_arg,
+                jnp.asarray(self._step_counter, jnp.uint32), cap)
+        if self.profiler.cost:
+            self.profiler.cost_for(shape_key, self._rec_fn, *args)
+        if self.profiler.profile_dir is not None:
+            with self.profiler.step_annotation("recurrent",
+                                               self._step_counter):
+                toks, self.cache = self._rec_fn(*args)
+        else:
+            toks, self.cache = self._rec_fn(*args)
+        toks = np.asarray(toks)                      # host sync
+        dt = time.perf_counter() - t0
+        self._step_times.setdefault(shape_key, []).append(dt)
+        tr = self.tracer
+        if tr.enabled:
+            n_disp = int(np.prod(tokens.shape))
+            tr.span("recurrent", "dispatch", t_start, dt, {
+                "shape": "x".join(map(str, tokens.shape)),
+                "real_tokens": n_real,
+                "padded_tokens": n_disp - n_real,
+                "compile": first_call})
+        return toks
+
     # -- shared step plumbing --------------------------------------------
 
     def _cow_for_range(self, req: Request, start: int, end: int) -> bool:
@@ -1062,6 +1423,11 @@ class ServingEngine:
         here (one jitted block copy, donated — block_size rows per layer,
         never the whole arena).  Returns False iff ``req`` itself was
         preempted while finding a block for the copy."""
+        if self.substrate.fixed_state:
+            raise BlockPoolError(
+                f"copy-on-write on the {self.substrate.kind} substrate: "
+                f"sequence {req.rid} keeps fixed-size recurrent state and "
+                f"never shares a block (no prefix cache to COW from)")
         bs = self.pool.block_size
         for idx in range(start // bs, -(-end // bs)):
             if idx >= self.pool.n_blocks_of(req.rid):
@@ -1216,6 +1582,13 @@ class ServingEngine:
           lambda: self.ragged, typ=bool)
         f("ragged_steps", "unified ragged dispatches",
           lambda: self.ragged_steps, kind="counter", typ=int)
+        f("substrate", "sequence-state substrate serving this model — "
+          "attention block tables, recurrent state slabs, or the hybrid "
+          "of both (DESIGN §16)",
+          lambda: self.substrate.kind, typ=str)
+        f("recurrent_steps", "fixed-shape recurrent dispatches "
+          "(DESIGN §16)",
+          lambda: self.recurrent_steps, kind="counter", typ=int)
         # padding honesty: tokens dispatched vs tokens that carried real
         # work — pow2 bucket rounding, empty decode slots, unused draft
         # columns — invisible in the Table-5 accounting before PR 6
@@ -1241,8 +1614,11 @@ class ServingEngine:
         f("step_shapes", "per-dispatched-shape compile-vs-steady step-time"
           " summary (dynamic keys: one per jitted shape)",
           lambda: summarize_step_times(self._step_times), typ=dict)
-        self._register_pool_metrics()
-        if pool.cache is not None:
+        if pool is not None:
+            self._register_pool_metrics()
+        if self.state_pool is not None:
+            self._register_state_pool_metrics()
+        if pool is not None and pool.cache is not None:
             self._register_cache_metrics()
         self._register_hwcost_metrics()
         self._register_energy_metrics()
@@ -1387,6 +1763,46 @@ class ServingEngine:
         f("pool.alloc_failures", "alloc/extend requests refused",
           lambda: pool.stats.alloc_failures, kind="counter", typ=int)
 
+    def _register_state_pool_metrics(self) -> None:
+        """Fixed-slab substrate accounting (DESIGN §16) — the recurrent
+        counterpart of the ``pool.*`` section."""
+        f, sp = self.metrics.func, self.state_pool
+        f("state_pool.num_slabs", "slab capacity (incl. trash slab 0)",
+          lambda: sp.num_slabs, typ=int)
+        f("state_pool.scale_exp", "fixed Eq.-1 scale exponent slabs are "
+          "allocated with (0 when slabs store fp32 state)",
+          lambda: sp.default_scale_exp, typ=int)
+        f("state_pool.state_quant_ops_per_step", "ops to requantize one "
+          "sequence's WHOLE state once — paid per step, context-free",
+          lambda: self._state_elems_per_step, typ=int)
+        f("state_pool.requant_ops_state", "whole-slab state requant ops "
+          "booked so far (performed when slabs are int8, counterfactual "
+          "otherwise) — the recurrent share of hwcost totals",
+          lambda: self.requant_ops_state, kind="counter", typ=int)
+
+        def state_ops_per_token():
+            tok = self.energy.tokens["prefill"] + self.energy.tokens[
+                "decode"]
+            return round(self.requant_ops_state / tok, 2) if tok else None
+
+        f("state_pool.state_ops_per_token", "recurrent-substrate share "
+          "of hwcost.requant_ops_per_token — context-free by "
+          "construction, the number the §16 bench gate compares against "
+          "the attention baseline",
+          state_ops_per_token, typ=float, optional=True)
+        f("state_pool.peak_live_slabs", "max simultaneously-live slabs",
+          lambda: sp.stats.peak_live, typ=int)
+        f("state_pool.utilization", "live slabs / allocatable slabs now",
+          lambda: round(sp.utilization, 3), typ=float)
+        f("state_pool.allocs", "slabs handed out",
+          lambda: sp.stats.allocs, kind="counter", typ=int)
+        f("state_pool.frees", "slab references released",
+          lambda: sp.stats.frees, kind="counter", typ=int)
+        f("state_pool.seq_evictions", "sequences preempted off slabs",
+          lambda: sp.stats.seq_evictions, kind="counter", typ=int)
+        f("state_pool.alloc_failures", "slab allocations refused",
+          lambda: sp.stats.alloc_failures, kind="counter", typ=int)
+
     def _register_cache_metrics(self) -> None:
         f, pool = self.metrics.func, self.pool
         f("prefix_cache.hits", "full-block lookups served from cache",
@@ -1440,6 +1856,26 @@ class ServingEngine:
         f("hwcost.requant_ops_wasted_speculation",
           "ops spent on rejected speculative rows",
           lambda: self.requant_ops_wasted_spec, kind="counter", typ=int)
+
+        # substrate-comparable headline gauge (DESIGN §16): what a
+        # requant-per-step dataflow pays per useful token — performed +
+        # the avoided counterfactual, over prefill + decode tokens.  On
+        # attention this GROWS with context (the avoided bucket is
+        # n_ctx * elems per step); on the fixed-slab substrate it is
+        # CONTEXT-FREE (one whole-slab requant per step), which is the
+        # paper's dataflow thesis at its strongest — the recurrent bench
+        # gate asserts this number sits strictly below the equal-length
+        # attention baseline.
+        def requant_ops_per_token():
+            tok = self.energy.tokens["prefill"] + self.energy.tokens[
+                "decode"]
+            ops = self.requant_ops_performed + self.requant_ops_avoided
+            return round(ops / tok, 2) if tok else None
+
+        f("hwcost.requant_ops_per_token",
+          "KV+state requant ops (performed + avoided counterfactual) "
+          "per useful token",
+          requant_ops_per_token, typ=float, optional=True)
         f("hwcost.energy_uj_bit_shift",
           "Table-5 bit-shift energy of the ops performed",
           lambda: hwcost.estimate(
@@ -1563,4 +1999,6 @@ class ServingEngine:
         rep = self.metrics.nested()
         rep.setdefault("speculative", None)
         rep.setdefault("prefix_cache", None)
+        rep.setdefault("pool", None)
+        rep.setdefault("state_pool", None)
         return rep

@@ -1,4 +1,4 @@
-"""Host-side allocator for the paged KV block pool (DESIGN §9, §10).
+"""Host-side allocator for the paged KV block pool (DESIGN §9, §10, §16).
 
 The device arrays live in ``models.model.init_paged_cache`` (one
 (L, NB, BS, KVH, D) arena per K and V); this module owns the *map*: which
@@ -7,6 +7,13 @@ power-of-two scale exponent, and — with the content-addressed prefix
 cache enabled — which blocks are SHARED between sequences.  Everything
 here is plain Python/numpy — no jax — so the scheduler property tests run
 without a model.
+
+Since PR 10 the allocator core (free stack, refcounts, per-unit scale
+exponents, stats, tracer hook) lives in :class:`repro.serving.arena.Arena`
+and is shared with the fixed-size state-slab substrate
+(:class:`repro.serving.state_pool.StateSlabPool`); ``BlockPool`` is the
+growing block-table substrate that layers the prefix cache, idle-LRU
+reclaim, copy-on-write, and speculative retract on top.
 
 Ownership model (DESIGN §10).  PR 3's one-owner rule is gone; every
 non-trash block is in exactly one of three states:
@@ -46,28 +53,14 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.serving.arena import (Arena, BlockPoolError, PoolStats,
+                                 TRASH_UNIT)
 from repro.serving.prefix_cache import PrefixCache
 
-__all__ = ["BlockPool", "BlockPoolError", "PoolStats", "AllocPlan"]
+__all__ = ["BlockPool", "BlockPoolError", "PoolStats", "AllocPlan",
+           "TRASH_BLOCK"]
 
-TRASH_BLOCK = 0
-
-
-class BlockPoolError(RuntimeError):
-    """Allocator misuse (double free, unknown sequence, exhausted pool)."""
-
-
-@dataclasses.dataclass
-class PoolStats:
-    allocs: int = 0            # blocks handed out fresh (not cache hits)
-    frees: int = 0             # block references released
-    evictions: int = 0         # BLOCKS released by preemption
-    seq_evictions: int = 0     # sequences preempted
-    cache_evictions: int = 0   # idle cached blocks reclaimed (LRU)
-    retracts: int = 0          # speculative rollbacks that freed blocks
-    retracted_blocks: int = 0  # blocks freed by rollback (rejected rows)
-    peak_live: int = 0         # max simultaneously-live blocks
-    alloc_failures: int = 0    # alloc/extend requests refused
+TRASH_BLOCK = TRASH_UNIT
 
 
 @dataclasses.dataclass
@@ -86,39 +79,22 @@ class AllocPlan:
     feasible: bool
 
 
-class BlockPool:
+class BlockPool(Arena):
     """Fixed-capacity pool of KV blocks with per-sequence block tables,
     per-block reference counts, and an optional content-addressed prefix
     cache (``prefix_cache=True``) for cross-sequence block sharing."""
 
     def __init__(self, num_blocks: int, block_size: int, *,
                  scale_exp: int = 0, prefix_cache: bool = False):
-        if num_blocks < 2:
-            raise ValueError("pool needs >= 2 blocks (block 0 is trash)")
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
+        super().__init__(num_blocks, scale_exp=scale_exp)
         self.num_blocks = num_blocks
         self.block_size = block_size
-        self.default_scale_exp = scale_exp
-        # LIFO free stack — recently freed blocks are re-used first (their
-        # pool rows are hot).  Block 0 (trash) is never on it.
-        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
-        self._seqs: dict[int, list[int]] = {}       # seq id -> blocks, order
-        # per-block owner count; sharing happens only via cache hits
-        self.refcount = np.zeros((num_blocks,), np.int32)
         # refcount-0 published blocks, insertion order == LRU order
         self._idle: "OrderedDict[int, None]" = OrderedDict()
         self.cache: PrefixCache | None = \
             PrefixCache(block_size) if prefix_cache else None
-        # per-block po2 scale exponent (Eq.-1 fractional bit) — written at
-        # alloc, immutable while resident.  One int per block of metadata.
-        self.scale_exp = np.full((num_blocks,), scale_exp, np.int32)
-        self.stats = PoolStats()
-        # optional obs hook (DESIGN §14): the engine attaches its Tracer
-        # here; every emission is guarded on ``tracer is not None and
-        # tracer.enabled`` so the standalone pool (property tests, no
-        # engine) pays one attribute read per lifecycle transition.
-        self.tracer = None
 
     # -- capacity ---------------------------------------------------------
 
@@ -126,47 +102,8 @@ class BlockPool:
         """Blocks needed to hold ``n_tokens`` KV rows."""
         return -(-max(n_tokens, 0) // self.block_size)
 
-    @property
-    def n_free(self) -> int:
-        """Allocatable blocks: truly free + idle cached (reclaimable)."""
-        return len(self._free) + len(self._idle)
-
-    @property
-    def n_cached(self) -> int:
-        """Idle cached blocks (resident, refcount 0, reclaimable LRU)."""
+    def _n_reclaimable(self) -> int:
         return len(self._idle)
-
-    @property
-    def n_live(self) -> int:
-        """Blocks referenced by at least one sequence."""
-        return (self.num_blocks - 1) - len(self._free) - len(self._idle)
-
-    @property
-    def utilization(self) -> float:
-        return self.n_live / max(self.num_blocks - 1, 1)
-
-    @property
-    def residency(self) -> float:
-        """Fraction of the pool holding useful codes (live + cached)."""
-        return (self.n_live + self.n_cached) / max(self.num_blocks - 1, 1)
-
-    def can_alloc(self, n_blocks: int) -> bool:
-        return n_blocks <= self.n_free
-
-    def live_seqs(self) -> list[int]:
-        return list(self._seqs)
-
-    def seq_ids(self):
-        return self._seqs.keys()
-
-    def seq_blocks(self, seq_id: int) -> list[int]:
-        """The sequence's blocks in logical order (read-only view)."""
-        if seq_id not in self._seqs:
-            raise BlockPoolError(f"unknown sequence {seq_id}")
-        return self._seqs[seq_id]
-
-    def n_blocks_of(self, seq_id: int) -> int:
-        return len(self._seqs.get(seq_id, ()))
 
     # -- planning ---------------------------------------------------------
 
@@ -236,11 +173,9 @@ class BlockPool:
         if self.cache is not None:
             self.cache.on_alloc(seq_id, plan.hit_keys, plan.n_full_lookups,
                                 plan.scale_exp)
-        tr = self.tracer
-        if tr is not None and tr.enabled:
-            tr.event("pool.alloc", "pool", args={
-                "seq": seq_id, "hit_blocks": len(plan.hit_blocks),
-                "new_blocks": len(new), "free": self.n_free})
+        self._emit("pool.alloc", {
+            "seq": seq_id, "hit_blocks": len(plan.hit_blocks),
+            "new_blocks": len(new), "free": self.n_free})
         return list(blocks)  # copy: callers must not mutate the pool's map
 
     def extend(self, seq_id: int, n_tokens_total: int) -> list[int]:
@@ -260,10 +195,8 @@ class BlockPool:
             else self.default_scale_exp
         new = [self._take(exp) for _ in range(need)]
         blocks.extend(new)
-        tr = self.tracer
-        if tr is not None and tr.enabled:
-            tr.event("pool.extend", "pool", args={
-                "seq": seq_id, "new_blocks": need, "free": self.n_free})
+        self._emit("pool.extend", {
+            "seq": seq_id, "new_blocks": need, "free": self.n_free})
         return new
 
     def retract(self, seq_id: int, n_tokens_keep: int) -> int:
@@ -306,60 +239,22 @@ class BlockPool:
         self.stats.frees += len(tail)
         self.stats.retracts += 1
         self.stats.retracted_blocks += len(tail)
-        tr = self.tracer
-        if tr is not None and tr.enabled:
-            tr.event("pool.retract", "pool", args={
-                "seq": seq_id, "freed_blocks": len(tail),
-                "keep_tokens": n_tokens_keep})
+        self._emit("pool.retract", {
+            "seq": seq_id, "freed_blocks": len(tail),
+            "keep_tokens": n_tokens_keep})
         return len(tail)
 
-    def free_seq(self, seq_id: int) -> int:
-        """Release all of ``seq_id``'s block references; raises on double
-        free.  Published blocks whose refcount drops to 0 stay CACHED
-        (idle-LRU) instead of returning to the free stack."""
-        if seq_id not in self._seqs:
-            raise BlockPoolError(f"double free: unknown sequence {seq_id}")
-        n = self._release_seq(seq_id)
-        tr = self.tracer
-        if tr is not None and tr.enabled:
-            tr.event("pool.free", "pool", args={
-                "seq": seq_id, "blocks": n, "free": self.n_free})
-        return n
-
-    def evict(self, seq_id: int) -> int:
-        """Preemption path: release references + count the eviction
-        (block-granular: ``stats.evictions`` counts blocks, the preempted
-        sequence itself counts once in ``stats.seq_evictions``).  The
-        sequence's published blocks survive in the cache, so a recompute
-        resume can re-attach instead of requantizing."""
-        if seq_id not in self._seqs:
-            raise BlockPoolError(f"double free: unknown sequence {seq_id}")
-        n = self._release_seq(seq_id)
-        self.stats.evictions += n
-        self.stats.seq_evictions += 1
-        tr = self.tracer
-        if tr is not None and tr.enabled:
-            tr.event("pool.evict", "pool", args={
-                "seq": seq_id, "blocks": n, "free": self.n_free})
-        return n
-
     def _release_seq(self, seq_id: int) -> int:
-        blocks = self._seqs.pop(seq_id)
-        for blk in blocks:
-            self._release(blk)
-        self.stats.frees += len(blocks)
+        n = super()._release_seq(seq_id)
         if self.cache is not None:
             self.cache.release(seq_id)
-        return len(blocks)
+        return n
 
-    def _release(self, blk: int) -> None:
-        self.refcount[blk] -= 1
-        assert self.refcount[blk] >= 0, f"refcount underflow on block {blk}"
-        if self.refcount[blk] == 0:
-            if self.cache is not None and self.cache.is_published(blk):
-                self._idle[blk] = None          # most-recently released
-            else:
-                self._free.append(blk)
+    def _on_release_zero(self, blk: int) -> None:
+        if self.cache is not None and self.cache.is_published(blk):
+            self._idle[blk] = None          # most-recently released
+        else:
+            self._free.append(blk)
 
     def _acquire(self, blk: int) -> None:
         """Attach to a published block (cache hit)."""
@@ -368,22 +263,15 @@ class BlockPool:
             del self._idle[blk]                 # was idle-cached
         self.stats.peak_live = max(self.stats.peak_live, self.n_live)
 
-    def _take(self, scale_exp: int) -> int:
-        """Hand out a fresh private block, reclaiming the LRU idle cached
-        block if the free stack is empty."""
-        if self._free:
-            blk = self._free.pop()
-        elif self._idle:
+    def _reclaim(self) -> int:
+        """Reclaim the LRU idle cached block when the free stack is
+        empty."""
+        if self._idle:
             blk, _ = self._idle.popitem(last=False)     # oldest first
             self.cache.forget(blk)
             self.stats.cache_evictions += 1
-        else:
-            raise BlockPoolError("pool exhausted: no free or cached blocks")
-        self.scale_exp[blk] = scale_exp
-        self.refcount[blk] = 1
-        self.stats.allocs += 1
-        self.stats.peak_live = max(self.stats.peak_live, self.n_live)
-        return blk
+            return blk
+        return super()._reclaim()
 
     # -- copy-on-write ----------------------------------------------------
 
@@ -414,10 +302,8 @@ class BlockPool:
         self._release(src)
         if self.cache is not None:
             self.cache.stats.cow_copies += 1
-        tr = self.tracer
-        if tr is not None and tr.enabled:
-            tr.event("pool.cow", "pool", args={
-                "seq": seq_id, "idx": logical_idx, "src": src, "dst": dst})
+        self._emit("pool.cow", {
+            "seq": seq_id, "idx": logical_idx, "src": src, "dst": dst})
         return src, dst
 
     # -- cache plumbing ---------------------------------------------------
@@ -441,19 +327,9 @@ class BlockPool:
             self._free.append(blk)
         return n
 
-    def reset_free_order(self) -> None:
-        """Restore the free stack to its pristine allocation order
-        (lowest block id pops first).  Free-list order is run history —
-        an identical logical workload replayed after a reset would
-        otherwise land on different PHYSICAL blocks, which the flight
-        recorder's decision stream (``cache.publish`` block ids) would
-        flag as a spurious divergence.  Requires no live sequences."""
-        assert not self._seqs, "reset_free_order with live sequences"
-        self._free.sort(reverse=True)
-
     # -- views ------------------------------------------------------------
 
-    def table_row(self, seq_id: int, width: int) -> np.ndarray:
+    def table_row(self, seq_id: int, width: int):
         """(width,) int32 block table for the engine: the sequence's blocks
         in logical order, tail-padded with the trash block (those entries
         are only ever touched by masked positions).  Unknown sequences

@@ -45,6 +45,8 @@ from typing import Optional
 import numpy as np
 
 from repro.serving.kv_pool import BlockPool, BlockPoolError
+from repro.serving.state_pool import StateSlabPool
+from repro.serving.substrate import ATTENTION, SubstrateSpec
 
 __all__ = ["Request", "RequestState", "Scheduler", "chunk_bucket"]
 
@@ -88,6 +90,9 @@ class Request:
     n_prefilled: int = 0                  # feed tokens whose KV is resident
     n_ctx: int = 0                        # KV rows live in the pool
     cached_tokens: int = 0                # prefill tokens skipped via cache
+    # fixed-slab substrate (§16): host copy of the slab state captured at
+    # preemption — resume restores it instead of recomputing the prefix
+    snapshot: Optional[dict] = None
     preemptions: int = 0
     t_admit: Optional[float] = None
     t_first: Optional[float] = None       # first token sampled (TTFT)
@@ -108,24 +113,48 @@ class Request:
 
 
 class Scheduler:
-    """Slot-based continuous batching over a :class:`BlockPool`."""
+    """Slot-based continuous batching over the sequence-state substrates.
 
-    def __init__(self, pool: BlockPool, *, n_slots: int, chunk: int,
-                 max_model_len: int,
-                 prefill_token_budget: Optional[int] = None):
+    ``substrate`` (DESIGN §16) selects which moves are legal: the growing
+    attention substrate schedules over ``pool`` (a :class:`BlockPool`);
+    fixed-state substrates additionally (hybrid) or exclusively
+    (recurrent, ``pool=None``) admit against ``state_pool`` — one slab
+    per live sequence, allocated at admission, never grown.  Preemption
+    on the pure-recurrent substrate snapshots the slab (via the engine's
+    ``snapshot_fn`` hook) so the resume restores O(1) state instead of
+    recomputing the whole prefix."""
+
+    def __init__(self, pool: Optional[BlockPool], *, n_slots: int,
+                 chunk: int, max_model_len: int,
+                 prefill_token_budget: Optional[int] = None,
+                 state_pool: Optional[StateSlabPool] = None,
+                 substrate: Optional[SubstrateSpec] = None):
         if n_slots < 1:
             raise ValueError("need at least one slot")
-        if max_model_len > (pool.num_blocks - 1) * pool.block_size:
+        substrate = ATTENTION if substrate is None else substrate
+        if pool is not None and \
+                max_model_len > (pool.num_blocks - 1) * pool.block_size:
             raise ValueError(
                 f"max_model_len {max_model_len} exceeds pool capacity "
                 f"{(pool.num_blocks - 1) * pool.block_size} tokens — a "
                 f"lone max-length request could deadlock")
+        if substrate.grows and pool is None:
+            raise ValueError(
+                f"{substrate.kind} substrate grows block tables — needs a "
+                f"BlockPool")
+        if substrate.fixed_state and state_pool is None:
+            raise ValueError(
+                f"{substrate.kind} substrate keeps fixed-size state — "
+                f"needs a StateSlabPool")
         self.pool = pool
+        self.state_pool = state_pool
+        self.substrate = substrate
         self.n_slots = n_slots
         self.chunk = chunk
         self.max_model_len = max_model_len
         self.prefill_token_budget = prefill_token_budget or chunk
-        self.nbmax = -(-max_model_len // pool.block_size)
+        self.nbmax = (-(-max_model_len // pool.block_size)
+                      if pool is not None else 0)
         self.waiting: list[Request] = []      # kept sorted by (arrival, rid)
         self.slots: list[Optional[Request]] = [None] * n_slots
         self.done: list[Request] = []
@@ -136,6 +165,9 @@ class Scheduler:
         # and the source of the report's trace-derived latency section;
         # ring events additionally check ``tracer.enabled``.
         self.tracer = None
+        # engine hook (§16): captures a host snapshot of a request's slab
+        # at preemption on snapshot-preempt substrates (pure recurrent)
+        self.snapshot_fn = None
 
     # -- queue ------------------------------------------------------------
 
@@ -178,22 +210,39 @@ class Scheduler:
             req.feed = np.concatenate(
                 [req.prompt, np.asarray(req.generated, np.int32)]) \
                 if req.generated else req.prompt
-            plan = self.pool.plan_seq(len(req.feed), token_ids=req.feed)
-            if not plan.feasible:
-                break                         # head blocks the line: FCFS
+            if self.state_pool is not None and self.state_pool.n_free < 1:
+                break                         # no slab: FCFS head blocks
+            plan = None
+            if self.pool is not None:
+                plan = self.pool.plan_seq(len(req.feed), token_ids=req.feed)
+                if not plan.feasible:
+                    break                     # head blocks the line: FCFS
             self.waiting.pop(0)
-            self.pool.alloc_seq(req.rid, len(req.feed), plan=plan)
+            if self.pool is not None:
+                self.pool.alloc_seq(req.rid, len(req.feed), plan=plan)
+            if self.state_pool is not None:
+                self.state_pool.alloc_slab(req.rid)
             req.state = RequestState.PREFILL
             req.slot = slot
-            # cached-prefix fast path (DESIGN §10): KV rows for the hit
-            # chain are already resident — chunked prefill starts at the
-            # first uncached token.  A fully-cached feed re-feeds its last
-            # token (the engine needs its logits row to sample), COWing
-            # the last shared block before the write.
-            hit = min(plan.hit_tokens, len(req.feed) - 1)
+            if req.snapshot is not None:
+                # fixed-slab resume (§16): the engine restores the host
+                # snapshot into the fresh slab; prefill resumes at the
+                # snapshot's absorbed-token count (always len(feed) - 1:
+                # the last token is re-fed so the engine gets a logits
+                # row to sample from, exactly like a fully-cached feed)
+                hit = min(int(req.snapshot["n_ctx"]), len(req.feed) - 1)
+            else:
+                # cached-prefix fast path (DESIGN §10): KV rows for the
+                # hit chain are already resident — chunked prefill starts
+                # at the first uncached token.  A fully-cached feed still
+                # re-feeds its last token (the engine needs its logits
+                # row to sample), COWing the last shared block before
+                # the write.
+                hit = min(plan.hit_tokens, len(req.feed) - 1) \
+                    if plan is not None else 0
+                req.cached_tokens += hit
             req.n_prefilled = hit
             req.n_ctx = hit
-            req.cached_tokens += hit
             req.t_admit = now if req.t_admit is None else req.t_admit
             self.slots[slot] = req
             self.admission_log.append(req.rid)
@@ -245,7 +294,10 @@ class Scheduler:
         speculative tail when ``n_tokens > 1``).  On pool pressure, evict
         the youngest-admitted running request and retry; returns False
         iff ``req`` itself was the youngest and got preempted (skip its
-        decode this step)."""
+        decode this step).  Non-growing substrates (§16) are a no-op:
+        the state slab already holds every future token."""
+        if not self.substrate.grows:
+            return True
         while True:
             try:
                 self.pool.extend(req.rid, req.n_ctx + n_tokens)
@@ -266,6 +318,12 @@ class Scheduler:
         only the mandatory single-token growth falls back to the §9
         youngest-first preemption retry.  Returns the granted draft
         count, or None iff ``req`` itself ended up preempted."""
+        if self.substrate.fixed_state:
+            raise BlockPoolError(
+                f"speculative growth on the {self.substrate.kind} "
+                f"substrate: sequence {req.rid} keeps fixed-size recurrent "
+                f"state, which cannot retract rejected draft tokens "
+                f"(spec decode needs the growing attention substrate)")
         bs = self.pool.block_size
         have = self.pool.n_blocks_of(req.rid) * bs
         spare = have + self.pool.n_free * bs - (req.n_ctx + 1)
@@ -287,6 +345,12 @@ class Scheduler:
         preemption retry as decode growth.  Returns the (src, dst) block
         pair — the ENGINE must copy the device rows — or None iff ``req``
         itself was preempted (skip its prefill this step)."""
+        if self.substrate.fixed_state:
+            raise BlockPoolError(
+                f"copy-on-write on the {self.substrate.kind} substrate: "
+                f"sequence {req.rid} owns a private state slab, never a "
+                f"shared block (fixed-state substrates have no prefix "
+                f"cache to COW from)")
         while True:
             try:
                 return self.pool.cow(req.rid, logical_idx)
@@ -306,16 +370,30 @@ class Scheduler:
         """Recompute preemption: release block references (the request's
         PUBLISHED blocks stay cached for the resume to re-attach), requeue
         (arrival order keeps its place near the front), keep generated
-        tokens for the resume feed."""
+        tokens for the resume feed.
+
+        Snapshot-preempt substrates (§16, pure recurrent) capture a host
+        copy of the slab through the engine's ``snapshot_fn`` first: the
+        O(1) state IS the whole prefix summary, so the resume restores it
+        instead of re-prefilling hundreds of tokens."""
+        snap = (self.substrate.snapshot_preempt
+                and self.snapshot_fn is not None)
+        if snap:
+            req.snapshot = self.snapshot_fn(req)
         tr = self.tracer
         if tr is not None:
             tr.req_preempt(req.rid)
             if tr.enabled:
-                tr.event("sched.preempt", "sched", ts=now, args={
-                    "rid": req.rid, "slot": req.slot,
-                    "n_ctx": req.n_ctx,
-                    "preemptions": req.preemptions + 1})
-        self.pool.evict(req.rid)
+                args = {"rid": req.rid, "slot": req.slot,
+                        "n_ctx": req.n_ctx,
+                        "preemptions": req.preemptions + 1}
+                if snap:
+                    args["snapshot"] = True
+                tr.event("sched.preempt", "sched", ts=now, args=args)
+        if self.pool is not None:
+            self.pool.evict(req.rid)
+        if self.state_pool is not None:
+            self.state_pool.evict(req.rid)
         self.slots[req.slot] = None
         req.slot = None
         req.state = RequestState.WAITING
@@ -325,7 +403,11 @@ class Scheduler:
         self._enqueue(req)
 
     def finish(self, req: Request, now: float) -> None:
-        self.pool.free_seq(req.rid)
+        if self.pool is not None:
+            self.pool.free_seq(req.rid)
+        if self.state_pool is not None:
+            self.state_pool.free_seq(req.rid)
+        req.snapshot = None
         self.slots[req.slot] = None
         req.slot = None
         req.state = RequestState.DONE

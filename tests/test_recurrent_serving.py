@@ -1,0 +1,257 @@
+"""Recurrent/hybrid serving on the fixed-slab substrate (DESIGN §16).
+
+CI `serving` gates:
+
+* ENGINE PARITY — RWKV6 and zamba2 (hybrid) continuous batching from the
+  slab substrate emits token-for-token the static-batch dense fp32
+  oracle's greedy output.  The workload queues a third request behind
+  two slots so a recycled slab is exercised: a slab handed back LIFO
+  still holds its previous owner's FINAL state, and a missed
+  zero-on-admission only diverges several decode tokens in (the decay
+  has to amplify the stale codes) — exactly the regression this test
+  pinned down.
+* PREEMPTION SNAPSHOT — on the pure-recurrent substrate preemption
+  snapshots the O(1) state instead of §9 recompute; a mid-decode
+  eviction + resume must still match the oracle exactly.
+* SCHEDULER GUARDS — ``grow_for_spec`` and engine COW raise
+  ``BlockPoolError`` with scheduling context on fixed-state sequences
+  (satellite: the §11/§10 verbs are structurally impossible here).
+* FRIENDLY ERRORS — ``spec_k``/``prefix_cache=True`` on a recurrent
+  arch fail at engine CONSTRUCTION with an actionable message.
+* FLIGHT RECORDER — slab alloc/free land in the §15 decision stream and
+  a zamba2 capture→replay reproduces tokens with a ZERO-line decision
+  diff.
+* SCHEMA — the report passes the golden schema with the slab section on
+  and the KV sections off.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.qmodel import QuantContext, QuantMode
+from repro.models import model as M
+from repro.obs.replay import capture_workload, replay_workload
+from repro.obs.schema import diff_schema, schema_of
+from repro.serving import (BlockPoolError, Request, RequestState,
+                           ServingEngine)
+
+CTX = QuantContext(mode=QuantMode.FP)
+ARCHS = ["rwkv6_3b", "zamba2_2_7b"]
+
+
+def _cfg(arch, **kw):
+    cfg = get_smoke_config(arch)
+    return dataclasses.replace(cfg, dtype="float32", **kw)
+
+
+def _dense_oracle(cfg, params, prompt: np.ndarray, gen: int) -> list:
+    p_len = len(prompt)
+    logits, cache = M.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                              cfg, CTX, max_seq=p_len + gen)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    for i in range(gen - 1):
+        l, cache = M.decode_step(params, tok, cache,
+                                 jnp.asarray(p_len + i, jnp.int32), cfg, CTX)
+        tok = jnp.argmax(l, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def _check_vs_oracle(cfg, params, reqs, outputs):
+    for r in reqs:
+        oracle = _dense_oracle(cfg, params, r.prompt, r.max_new_tokens)
+        got = outputs[r.rid].tolist()
+        assert got == oracle[:len(got)] and len(got) == r.max_new_tokens, \
+            f"req {r.rid}: engine {got} vs oracle {oracle}"
+
+
+def _workload(rng, n, vocab, *, arrivals=True):
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(0.02)) if arrivals else 0.0
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, size=int(
+                rng.integers(6, 20))).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 9)), arrival=t))
+    return reqs
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("chunk", 8)
+    kw.setdefault("max_model_len", 64)
+    kw.setdefault("block_size", 4)
+    return ServingEngine(cfg, params, CTX, **kw)
+
+
+# -- token parity -----------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_engine_matches_dense_oracle_with_slab_reuse(arch):
+    """3 requests through 2 slots: the queued request lands on a
+    recycled slab and must still match the oracle token-for-token."""
+    cfg = _cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _workload(np.random.default_rng(1), 3, cfg.vocab_size)
+    eng = _engine(cfg, params)
+    rep = eng.run(reqs)
+    assert rep["completed"] == len(reqs)
+    eng.state_pool.check_invariants()
+    assert eng.state_pool.n_live == 0
+    assert rep["substrate"] == ("hybrid" if arch.startswith("zamba")
+                                else "recurrent")
+    assert eng.state_pool.stats.allocs == len(reqs)    # one slab each
+    if eng.pool is not None:                           # hybrid KV half
+        eng.pool.check_invariants()
+        assert eng.pool.n_live == 0
+    _check_vs_oracle(cfg, params, reqs, eng.outputs())
+    # context-free state requant: the headline gauge is populated
+    assert rep["hwcost"]["requant_ops_per_token"] > 0
+    assert rep["state_pool"]["state_quant_ops_per_step"] > 0
+
+
+def test_int8_slabs_requantize_and_stay_close_to_oracle():
+    """state_bits=8 runs the whole int8 slab path (codes + per-slab po2
+    grid); greedy tokens track the fp32 oracle on the smoke model and
+    the requant energy accounting flips from 'avoided' to 'performed'."""
+    cfg = _cfg("rwkv6_3b", state_bits=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _workload(np.random.default_rng(2), 3, cfg.vocab_size)
+    eng = _engine(cfg, params)
+    rep = eng.run(reqs)
+    assert rep["completed"] == len(reqs)
+    assert rep["state_pool"]["scale_exp"] == cfg.state_frac_bits
+    # int8 slabs EXECUTE the per-step state requant ops
+    assert rep["hwcost"]["requant_ops_performed"] >= \
+        eng.recurrent_steps * rep["state_pool"]["state_quant_ops_per_step"]
+    # fp32 slabs would count the same ops as avoided; the per-token
+    # headline is storage-mode-independent by construction
+    cfg32 = _cfg("rwkv6_3b")
+    eng32 = _engine(cfg32, M.init_params(cfg32, jax.random.PRNGKey(0)))
+    rep32 = eng32.run(_workload(np.random.default_rng(2), 3,
+                                cfg32.vocab_size))
+    assert rep32["hwcost"]["requant_ops_per_token"] == \
+        rep["hwcost"]["requant_ops_per_token"]
+
+
+# -- preemption snapshot ----------------------------------------------------
+
+def test_preempt_snapshot_resume_matches_oracle():
+    """Mid-decode eviction on the pure-recurrent substrate snapshots the
+    slab (NOT §9 recompute) and the resumed request finishes exactly on
+    the oracle's tokens."""
+    cfg = _cfg("rwkv6_3b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=19).astype(np.int32), max_new_tokens=10)]
+    eng = _engine(cfg, params)
+    for r in reqs:
+        eng.submit(r)
+    preempted = False
+    for _ in range(200):
+        if eng.sched.idle:
+            break
+        req = reqs[0]
+        if (not preempted and req.state is RequestState.DECODE
+                and len(req.generated) >= 4):
+            eng.sched.preempt(req, eng._now())
+            assert req.snapshot is not None, "recurrent preemption " \
+                "must snapshot the slab, not schedule a recompute"
+            preempted = True
+        eng.step()
+    assert preempted and eng.sched.idle
+    assert eng.state_pool.stats.seq_evictions == 1
+    _check_vs_oracle(cfg, params, reqs, eng.outputs())
+
+
+# -- scheduler guards (satellite 1) -----------------------------------------
+
+def test_grow_for_spec_and_cow_raise_on_fixed_state():
+    cfg = _cfg("rwkv6_3b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = _engine(cfg, params)
+    req = Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                  max_new_tokens=4)
+    with pytest.raises(BlockPoolError, match="fixed-size recurrent"):
+        eng.sched.grow_for_spec(req, 0.0, 3)
+    with pytest.raises(BlockPoolError, match="never shares a block"):
+        eng._cow_for_range(req, 0, 8)
+    with pytest.raises(BlockPoolError, match="no prefix cache"):
+        eng.sched.cow_for_prefill(req, 0, 0.0)
+    with pytest.raises(BlockPoolError, match="cannot extend"):
+        eng.state_pool.extend(0, 32)
+
+
+# -- friendly construction errors (satellite 2) -----------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_and_prefix_cache_rejected_at_construction(arch):
+    cfg = _cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="speculative decoding"):
+        _engine(cfg, params, spec_k=2)
+    with pytest.raises(ValueError, match="not an addressable token"):
+        _engine(cfg, params, prefix_cache=True)
+
+
+# -- flight recorder (satellite 6) ------------------------------------------
+
+def test_zamba2_capture_replay_zero_decision_diff():
+    """Hybrid capture→replay: identical tokens, EMPTY decision diff, and
+    the slab lifecycle is part of the recorded decision stream."""
+    cfg = _cfg("zamba2_2_7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _workload(np.random.default_rng(4), 4, cfg.vocab_size)
+    eng = _engine(cfg, params, record=True)
+    eng.run(reqs)
+    rec = capture_workload(eng, reqs)
+    names = {n for n, _ in rec.decisions}
+    assert {"pool.slab_alloc", "pool.slab_free"} <= names
+    assert {"pool.alloc", "pool.free"} <= names        # hybrid KV half
+    assert rec.meta["recurrent_steps"] == eng.recurrent_steps > 0
+    # recurrent records carry the substrate in the fingerprint input
+    assert rec.engine["substrate"] == "hybrid"
+    assert rec.engine["num_slabs"] == eng.state_pool.num_slabs
+
+    fresh = _engine(cfg, M.init_params(cfg, jax.random.PRNGKey(0)),
+                    record=True)
+    res = replay_workload(rec, fresh, strict_fingerprint=True)
+    assert res.token_identical and res.decision_diff == []
+    assert res.ok and res.fingerprint_match
+
+
+def test_rwkv6_snapshot_preemption_is_replay_deterministic():
+    """An undersized slab pool forces snapshot preemption during the
+    run; the capture must still replay with a zero-line diff."""
+    cfg = _cfg("rwkv6_3b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _workload(np.random.default_rng(5), 4, cfg.vocab_size)
+    eng = _engine(cfg, params, record=True)
+    eng.run(reqs)
+    rec = capture_workload(eng, reqs)
+    fresh = _engine(cfg, M.init_params(cfg, jax.random.PRNGKey(0)),
+                    record=True)
+    res = replay_workload(rec, fresh, strict_fingerprint=True)
+    assert res.ok
+
+
+# -- schema (satellite 3/5) -------------------------------------------------
+
+def test_recurrent_report_passes_golden_schema():
+    cfg = _cfg("rwkv6_3b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = _engine(cfg, params, trace=True)
+    eng.run(_workload(np.random.default_rng(6), 2, cfg.vocab_size))
+    errs = diff_schema(schema_of(eng.metrics), spec=False, cache=False,
+                       kv=False, slab=True)
+    assert errs == [], "\n".join(errs)
+    eng.metrics.check_aliases()
+    rep = eng.report()
+    assert rep["pool"] is None and rep["prefix_cache"] is None
+    assert rep["state_pool"]["num_slabs"] == eng.state_pool.num_slabs
